@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSONL results (single source of truth; re-run after any change):
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        results_single.jsonl results_multi.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+ARCHS = ["jamba_1_5_large_398b", "granite_moe_3b_a800m", "xlstm_1_3b",
+         "deepseek_7b", "seamless_m4t_large_v2", "qwen3_32b", "minicpm_2b",
+         "deepseek_v3_671b", "phi_3_vision_4_2b", "stablelm_12b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def fmt_bytes(x):
+    return f"{x/2**30:.1f}"
+
+
+def roofline_table(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | HBM/dev GiB | compute s | memory s | "
+           "collective s | dominant | useful FLOPs ratio | coll bytes/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = rows.get((a, s))
+            if not r:
+                continue
+            out.append(
+                f"| {a} | {s} | {r['hbm_per_device_gb']:.1f} | "
+                f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | {r['dominant']} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{r['collective_bytes']/2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | chips | FLOPs/dev | bytes/dev | "
+           "all-gather | all-reduce | reduce-scatter | all-to-all | "
+           "compile s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = rows.get((a, s))
+            if not r:
+                continue
+            cc = r.get("collective_counts", {})
+            out.append(
+                f"| {a} | {s} | {r['chips']} | "
+                f"{r['flops_per_device']:.2e} | "
+                f"{r['bytes_per_device']:.2e} | "
+                f"{cc.get('all-gather', 0)/2**30:.2f}G | "
+                f"{cc.get('all-reduce', 0)/2**30:.2f}G | "
+                f"{cc.get('reduce-scatter', 0)/2**30:.2f}G | "
+                f"{cc.get('all-to-all', 0)/2**30:.2f}G | "
+                f"{r['compile_time_s']:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    single = load(sys.argv[1] if len(sys.argv) > 1
+                  else "results_single.jsonl")
+    print(roofline_table(single, "Roofline — single pod 16x16 (256 chips)"))
+    print()
+    print(dryrun_table(single, "Dry-run detail — single pod"))
+    if len(sys.argv) > 2:
+        multi = load(sys.argv[2])
+        print()
+        print(dryrun_table(multi,
+                           "Dry-run detail — multi-pod 2x16x16 (512 chips)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""The paper's Figure-1 pipeline: real-time object detection with a slow
+detection branch + fast tracking branch, merged deterministically.
+
+  frame ──┬─> FrameSelect ─> Detector ──┐
+          │                              v
+          ├─> Tracker ──────────> DetectionMerge ──> AnnotationOverlay ─> out
+          │        ^                     │
+          │        └──── RESET loopback ─┘
+          └──────────────────────────────────────────^ (frame)
+
+The detector runs on every 4th frame; the tracker advances boxes on every
+frame; the merge node's DEFAULT INPUT POLICY aligns detections with the
+exact frame they came from (paper §6.1 'effectively hiding model latency').
+
+    PYTHONPATH=src python examples/object_detection.py
+"""
+import time
+
+import numpy as np
+
+import repro.calculators  # noqa: F401
+from repro.core import ExecutorConfig, Graph, GraphConfig, visualizer
+
+cfg = GraphConfig(
+    input_streams=["frame"],
+    output_streams=["annotated", "merged"],
+    executors=[ExecutorConfig("detector_executor", 1)],
+    num_threads=4,
+    enable_tracer=True,
+)
+cfg.add_node("FrameSelectCalculator", name="select",
+             inputs={"IN": "frame"}, outputs={"OUT": "selected"},
+             options={"every": 4})
+cfg.add_node("ObjectDetectorCalculator", name="detect",
+             inputs={"FRAME": "selected"},
+             outputs={"DETECTIONS": "detections"},
+             options={"threshold": 0.55},
+             executor="detector_executor")   # paper §3.6 thread locality
+cfg.add_node("TrackerCalculator", name="track",
+             inputs={"FRAME": "frame", "RESET": "reset"},
+             outputs={"TRACKED": "tracked"},
+             back_edge_inputs=["RESET"])
+cfg.add_node("DetectionMergeCalculator", name="merge",
+             inputs={"DETECTIONS": "detections", "TRACKED": "tracked"},
+             outputs={"MERGED": "merged", "RESET": "reset"})
+cfg.add_node("AnnotationOverlayCalculator", name="annotate",
+             inputs={"FRAME": "frame", "DETECTIONS": "merged"},
+             outputs={"ANNOTATED_FRAME": "annotated"})
+
+print(visualizer.topology_ascii(cfg))
+
+g = Graph(cfg)
+annotated, merged = [], []
+g.observe_output_stream("annotated", lambda p: annotated.append(p))
+g.observe_output_stream("merged", lambda p: merged.append(
+    (p.timestamp.value, len(p.payload))))
+g.start_run()
+
+rng = np.random.RandomState(1)
+N = 24
+base = rng.rand(64, 64).astype(np.float32) * 120
+for t in range(N):
+    # a bright moving square = the "object"
+    frame = base.copy()
+    x = 8 + 2 * t
+    frame[20:36, x:x + 16] += 120
+    g.add_packet_to_input_stream("frame", frame, t)
+    time.sleep(0.002)
+g.close_all_input_streams()
+g.wait_until_done()
+
+# every frame got an annotated output, perfectly aligned
+stamps = [p.timestamp.value for p in annotated]
+assert stamps == list(range(N)), stamps
+det_counts = dict(merged)
+print(f"\n{N} frames annotated; detections per frame: "
+      f"{[det_counts.get(t, 0) for t in range(N)]}")
+assert any(c > 0 for c in det_counts.values()), "object never detected"
+
+print()
+print(visualizer.timeline_ascii(g.tracer, g.node_names(), width=64))
+print("\nobject_detection OK")

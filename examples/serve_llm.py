@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""End-to-end driver: serve a small LM with batched requests through the
+flow-limited MediaPipe serving graph (deliverable (b): 'serve a small model
+with batched requests, as the paper's kind dictates').
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+sys.exit(main(["--arch", "qwen3_32b", "--reduced",
+               "--requests", "24", "--batch-size", "4",
+               "--max-new-tokens", "8"]))

@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""End-to-end training driver: a reduced qwen3-family model on the
+synthetic pipeline for a few hundred steps; loss must decrease.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+args = ["--arch", "qwen3_32b", "--reduced", "--host-mesh",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--lr", "1e-3", "--log-every", "20",
+        "--checkpoint-dir", "/tmp/repro_ckpt"]
+args += sys.argv[1:]
+sys.exit(main(args))

@@ -1,0 +1,90 @@
+"""Checkpointing: per-leaf .npy blobs + a msgpack index with the treedef.
+
+Layout:  <dir>/step_<n>/index.msgpack + <dir>/step_<n>/<leaf_id>.npy
+Sharding-friendly: each leaf is written independently so a multi-host
+deployment writes only its addressable shards (here: single host writes
+everything).  Atomic via rename of a temp directory.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+try:
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover
+    _BF16 = None
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    leaves = _flatten_with_paths(tree)
+    index = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        if _BF16 is not None and arr.dtype == _BF16:
+            arr = arr.view(np.uint16)     # bit-preserving; numpy-savable
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index["leaves"].append({"key": key, "file": fname,
+                                "dtype": dtype_name,
+                                "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb(index))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(directory: str, step: Optional[int], like: Any) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    keys_like = [k for k, _ in _flatten_with_paths(like)]
+    by_key = {e["key"]: e for e in index["leaves"]}
+    leaves = []
+    for key, ref in zip(keys_like, flat_like):
+        e = by_key.get(key)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(path, e["file"]))
+        if e["dtype"] == "bfloat16" and _BF16 is not None:
+            arr = arr.view(_BF16)
+        if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
+            arr = arr.astype(ref.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

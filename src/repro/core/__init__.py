@@ -1,0 +1,44 @@
+"""repro.core — the MediaPipe dataflow framework, reimplemented for JAX/TPU.
+
+Public API surface:
+    Timestamp, Packet, make_packet
+    Calculator, SourceCalculator, CalculatorContract, contract
+    register_calculator, register_subgraph
+    GraphConfig, NodeConfig, ExecutorConfig
+    Graph, OutputStreamPoller
+    Tracer / visualizer helpers
+"""
+from .timestamp import Timestamp, ts
+from .packet import Packet, make_packet, empty_packet
+from .contract import AnyType, CalculatorContract, PortSpec, contract
+from .calculator import (Calculator, CalculatorContext, InputSet,
+                         SourceCalculator)
+from .registry import (register_calculator, get_calculator, is_registered,
+                       registered_calculators)
+from .graph_config import (ExecutorConfig, GraphConfig, NodeConfig,
+                           expand_subgraphs, register_subgraph)
+from .input_policy import (DefaultInputPolicy, ImmediateInputPolicy,
+                           SyncSetInputPolicy, make_input_policy)
+from .validation import GraphValidationError, validate
+from .graph import Graph, GraphError, OutputStreamPoller
+from .tracer import Tracer, NullTracer, TraceEvent
+from . import flow_control  # registers FlowLimiterCalculator
+from . import visualizer
+from .text_format import (load_graph_config, parse_graph_config,
+                          serialize_graph_config, TextFormatError)
+
+__all__ = [
+    "Timestamp", "ts", "Packet", "make_packet", "empty_packet",
+    "AnyType", "CalculatorContract", "PortSpec", "contract",
+    "Calculator", "CalculatorContext", "InputSet", "SourceCalculator",
+    "register_calculator", "get_calculator", "is_registered",
+    "registered_calculators",
+    "ExecutorConfig", "GraphConfig", "NodeConfig", "expand_subgraphs",
+    "register_subgraph",
+    "DefaultInputPolicy", "ImmediateInputPolicy", "SyncSetInputPolicy",
+    "make_input_policy",
+    "GraphValidationError", "validate",
+    "Graph", "GraphError", "OutputStreamPoller",
+    "Tracer", "NullTracer", "TraceEvent", "visualizer",
+    "load_graph_config", "parse_graph_config", "serialize_graph_config", "TextFormatError",
+]

@@ -1,0 +1,70 @@
+"""Executors and scheduler queues (paper §4.1.1).
+
+Each graph has at least one scheduler queue; each scheduler queue has
+exactly one executor; nodes are statically assigned to a queue.  The default
+executor is a thread pool sized from the config.  The scheduler queue is a
+priority queue — priorities come from the topological sort (nodes closer to
+the graph output run first; sources last).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Callable, List, Optional, Tuple
+
+
+class Executor:
+    """A scheduler queue + its thread pool."""
+
+    def __init__(self, name: str, num_threads: int,
+                 run_task: Callable[[object], None]):
+        self.name = name
+        self.num_threads = max(1, num_threads)
+        self._run_task = run_task
+        self._heap: List[Tuple[int, int, object]] = []
+        self._seq = itertools.count()
+        self._cv = threading.Condition()
+        self._stopping = False
+        self._threads: List[threading.Thread] = []
+
+    def start(self) -> None:
+        for i in range(self.num_threads):
+            t = threading.Thread(target=self._worker,
+                                 name=f"executor-{self.name}-{i}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def submit(self, priority: int, task: object) -> None:
+        with self._cv:
+            # heapq pops the smallest tuple; higher priority must pop first.
+            heapq.heappush(self._heap, (-priority, next(self._seq), task))
+            self._cv.notify()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._heap and not self._stopping:
+                    self._cv.wait()
+                if self._stopping and not self._heap:
+                    return
+                _, _, task = heapq.heappop(self._heap)
+            try:
+                self._run_task(task)
+            except Exception:  # pragma: no cover - run_task must not raise
+                import traceback
+                traceback.print_exc()
+
+    def stop(self, join: bool = True) -> None:
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+        if join:
+            for t in self._threads:
+                t.join(timeout=5.0)
+        self._threads.clear()
+
+    def queued(self) -> int:
+        with self._cv:
+            return len(self._heap)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot spots: blockwise flash attention
+and fused RMSNorm.  Each kernel ships with a jit wrapper (ops.py) and a
+pure-jnp oracle (ref.py); interpret=True validates on CPU."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the blockwise online-softmax algorithm (DESIGN.md §6):
+
+* grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the LAST grid axis
+  iterates innermost and sequentially on TPU, so the (m, l, acc) running
+  statistics live in VMEM scratch carried across kv blocks;
+* BlockSpecs tile Q/K/V/O into VMEM with MXU-aligned tiles (block sizes are
+  multiples of 128 in the lane dim; head_dim is the minor axis);
+* GQA is expressed in the K/V index_map (query head h reads kv head
+  h // group_size) — no repeated KV in HBM;
+* causal/windowed masking is computed from block indices; fully-masked kv
+  blocks write nothing and skip the matmuls via ``pl.when``.
+
+Validated against ``ref.flash_attention_ref`` in interpret mode (CPU);
+on real TPU hardware the same code lowers via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level skip: no valid entries when the whole kv block is in the
+    # causal future or behind the window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window:
+        run = jnp.logical_and(run,
+                              k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # [bq, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bk, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)        # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                     # [bq, bk]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        valid = k_pos < seq_k
+        if causal:
+            valid = valid & (k_pos <= q_pos)
+        if window:
+            valid = valid & (k_pos > q_pos - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd].  Returns [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    pad_q = (-S) % block_q
+    pad_k = (-T) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sp, Tp = S + pad_q, T + pad_k
+    nq, nk = Sp // block_q, Tp // block_k
+    grid = (B, H, nq, nk)
+
+    q_spec = pl.BlockSpec((1, block_q, 1, hd),
+                          lambda b, h, iq, ik: (b, iq, h, 0))
+    kv_spec = pl.BlockSpec((1, block_k, 1, hd),
+                           lambda b, h, iq, ik: (b, ik, h // G, 0))
+    o_spec = pl.BlockSpec((1, block_q, 1, hd),
+                          lambda b, h, iq, ik: (b, iq, h, 0))
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, seq_q=S, seq_k=T,
+        scale=float(hd) ** -0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m
+            pltpu.VMEM((block_q,), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,31 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``INTERPRET`` defaults to True in this CPU container (the kernels execute
+through the Pallas interpreter for correctness validation); on a real TPU
+deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET env var) and the same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .rmsnorm import rmsnorm_kernel
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0) -> jax.Array:
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    return rmsnorm_kernel(x, scale, eps=eps, interpret=INTERPRET)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth
+for per-kernel allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd]; GQA by head grouping."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, kf) / jnp.sqrt(hd)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = jnp.ones((S, T), bool)
+    if causal:
+        m = m & (j <= i)
+    if window:
+        m = m & (j > i - window)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

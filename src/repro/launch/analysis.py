@@ -1,0 +1,113 @@
+"""Dry-run artifact analysis: memory, HLO cost, collective bytes, roofline.
+
+``collective_bytes`` parses the post-SPMD optimized HLO and sums the output
+byte-sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cost_analysis does not expose collectives).  The
+roofline terms follow the brief:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,512,128]{3,2,1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the whole module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = next((k for k in _COLLECTIVES if op == k or
+                     op.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        out[kind] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        out[name] = float(getattr(ma, name, 0) or 0)
+    out["total_per_device"] = (out["argument_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def roofline(flops: float, bytes_hbm: float, bytes_coll: float,
+             chips: int, per_device: bool = True) -> Dict[str, float]:
+    """Roofline terms in seconds.  cost_analysis numbers from a compiled
+    SPMD module are *per device* already (the module is the per-device
+    program); collective bytes likewise.  ``chips`` retained for the
+    MODEL_FLOPS utilisation ratio computed by callers."""
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_hbm / HBM_BW
+    coll_s = bytes_coll / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant}
+
+
+def model_flops(cfg, shape, mtp: bool = False) -> float:
+    """Analytic 6·N_active·D for the step (train: fwd+bwd; decode: 2·N·D)."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else 1)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,76 @@
+"""Serving launcher: runs the MediaPipe-style flow-limited serving graph
+around an LLMEngine.
+
+    python -m repro.launch.serve --arch qwen3_32b --reduced \
+        --requests 32 --batch-size 4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from ..configs import get_config
+from ..core import Graph
+from ..serving import LLMEngine, build_serving_graph
+from .. import calculators  # noqa: F401 - registers basics
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-in-flight", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    engine = LLMEngine(cfg, max_len=128, seed=args.seed)
+    graph_cfg = build_serving_graph(batch_size=args.batch_size,
+                                    max_in_flight=args.max_in_flight)
+    g = Graph(graph_cfg, side_packets={"engine": engine})
+
+    done = {}
+    latencies = {}
+    t_submit = {}
+
+    def on_response(p):
+        done[p.payload["id"]] = p.payload["tokens"]
+        latencies[p.payload["id"]] = time.time() - t_submit[p.payload["id"]]
+
+    g.observe_output_stream("responses", on_response)
+    g.start_run()
+    rng = np.random.RandomState(args.seed)
+    t0 = time.time()
+    for i in range(args.requests):
+        rid = f"req{i}"
+        t_submit[rid] = time.time()
+        g.add_packet_to_input_stream("requests", {
+            "tokens": rng.randint(0, cfg.vocab_size,
+                                  size=rng.randint(4, 24)).tolist(),
+            "id": rid, "max_new_tokens": args.max_new_tokens,
+        }, i)
+    g.close_all_input_streams()
+    g.wait_until_done(timeout=600)
+    wall = time.time() - t0
+    lat = sorted(latencies.values())
+    print(f"served {len(done)}/{args.requests} requests in {wall:.2f}s "
+          f"({len(done) * args.max_new_tokens / wall:.1f} tok/s)")
+    print(f"latency p50={lat[len(lat)//2]*1e3:.0f}ms "
+          f"p95={lat[int(len(lat)*0.95)]*1e3:.0f}ms")
+    hist = g.tracer.node_histograms(g.node_names())
+    for k, v in sorted(hist.items()):
+        print(f"  {k:10s} runs={v['count']:4.0f} mean={v['mean_us']:9.0f}us "
+              f"max={v['max_us']:9.0f}us")
+    return 0 if len(done) == args.requests else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

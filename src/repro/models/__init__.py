@@ -1,0 +1,9 @@
+from .config import ArchConfig, InputShape, INPUT_SHAPES
+from .model import Model
+from .params import (ParamSpec, abstract_params, init_params, logical_axes,
+                     param_count, stack_template)
+from .transformer import RuntimeFlags, DEFAULT_FLAGS
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "Model", "ParamSpec",
+           "abstract_params", "init_params", "logical_axes", "param_count",
+           "stack_template", "RuntimeFlags", "DEFAULT_FLAGS"]

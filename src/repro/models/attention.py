@@ -1,0 +1,203 @@
+"""GQA attention with RoPE, optional qk-norm (qwen3), sliding windows, and
+a KV cache for decode.  Pure functions; the Pallas flash kernel is an
+optional drop-in for the prefill/train path (see repro.kernels).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, rms_norm
+from .params import ParamSpec, Template
+
+NEG_INF = -1e30
+
+
+def attention_template(cfg: ArchConfig) -> Template:
+    d, hd = cfg.d_model, cfg.head_dim
+    t: Template = {
+        "wq": ParamSpec((d, cfg.num_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.num_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = {"scale": ParamSpec((hd,), ("head_dim",), init="ones")}
+        t["k_norm"] = {"scale": ParamSpec((hd,), ("head_dim",), init="ones")}
+    return t
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype) -> Dict[str, jax.Array]:
+    window = cfg.sliding_window or 0
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    window = cfg.sliding_window or 0
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
+            "v": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))}
+
+
+def _qkv(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """q: [B,S,H,hd], k/v: [B,T,KV,hd], mask: [B,1,1,S,T] or broadcastable.
+    Grouped einsum avoids materializing repeated KV heads."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(seq: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    m = j <= i
+    if window:
+        m = m & (j > i - window)
+    return m[None, None, None]      # [1,1,1,S,T]
+
+
+def _seq_attention(q, k, v, cfg: ArchConfig, impl: str,
+                   flags=None) -> jax.Array:
+    """Dispatch over attention implementations for full-sequence paths."""
+    if impl == "flash":
+        from ..kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=True,
+                               window=cfg.sliding_window)
+    if impl == "chunked":
+        from .chunked_attention import (chunked_attention,
+                                        sequence_parallel_attention)
+        if flags is not None and getattr(flags, "model_size", 1) > 1:
+            return sequence_parallel_attention(
+                q, k, v, causal=True, window=cfg.sliding_window,
+                flags=flags)
+        return chunked_attention(q, k, v, causal=True,
+                                 window=cfg.sliding_window)
+    mask = causal_mask(q.shape[1], cfg.sliding_window)
+    return _grouped_attention(q, k, v, mask)
+
+
+def attention_apply(params, cfg: ArchConfig, x: jax.Array,
+                    positions: jax.Array,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    impl: str = "chunked", flags=None
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence (cache=None) or single-token decode (cache given).
+
+    positions: [B, S] absolute positions.
+    cache_pos: [] scalar — number of tokens already in the cache.
+    """
+    q, k, v = _qkv(params, cfg, x, positions)
+    if cache is None:
+        out = _seq_attention(q, k, v, cfg, impl, flags)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, None
+
+    # ---- decode: append one token, attend to cache -------------------
+    B, S, KV, hd = cache["k"].shape
+    assert x.shape[1] == 1, "decode processes one new token"
+    window = cfg.sliding_window or 0
+    slot = (cache_pos % S) if window else cache_pos
+    k_new = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_new = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+    idx = jnp.arange(S)
+    if window:
+        # with wraparound, every slot below min(cache_pos+1, S) is valid
+        valid = idx < jnp.minimum(cache_pos + 1, S)
+    else:
+        valid = idx <= cache_pos
+    mask = valid[None, None, None, None, :]     # [1,1,1,1,T]
+    mp = getattr(flags, "model_size", 1) if flags is not None else 1
+    if (mp > 1 and KV % mp != 0 and hd % mp == 0):
+        # hd-sharded cache (kv heads don't divide the mesh): explicit
+        # partial-score psum instead of XLA's full-cache all-gather
+        # (EXPERIMENTS.md §Perf, jamba decode pair iteration 2).
+        out = _decode_attention_hd_sharded(q, k_new, v_new, valid, flags)
+    else:
+        out = _grouped_attention(q, k_new, v_new, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_new, "v": v_new}
+
+
+def prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array, max_len: int,
+                       impl: str = "chunked", flags=None):
+    """Run full attention over the prompt AND build the decode cache."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = _seq_attention(q, k, v, cfg, impl, flags)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    window = cfg.sliding_window or 0
+    S = x.shape[1]
+    size = min(max_len, window) if window else max_len
+    if window and S >= size:
+        # keep the last `size` positions, rotated so slot = pos % size
+        tail_k, tail_v = k[:, S - size:], v[:, S - size:]
+        start = (S - size) % size
+        k_c = jnp.roll(tail_k, start, axis=1)
+        v_c = jnp.roll(tail_v, start, axis=1)
+    else:
+        pad = size - S
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, {"k": k_c, "v": v_c}
+
+
+def _decode_attention_hd_sharded(q, k, v, valid, flags):
+    """Decode attention with the head_dim sharded over the model axis:
+    scores are contracted over the sharded hd (partial + psum of the SMALL
+    [B,KV,G,1,T] score tensor); the value contraction stays local and the
+    output remains hd-sharded for the (also hd-sharded) wo projection."""
+    from jax.sharding import PartitionSpec as P
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    axis = flags.model_axis
+    batch_axes = flags.batch_axes
+    bspec = None
+    if batch_axes and B % flags.batch_divisor == 0:
+        bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def body(q_l, k_l, v_l, valid_l):
+        qg = q_l.reshape(q_l.shape[0], 1, KV, G, -1)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_l).astype(jnp.float32)
+        s = jax.lax.psum(s, axis) * scale
+        s = jnp.where(valid_l[None, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q_l.dtype)
+        o = jnp.einsum("bkgst,btkd->bskgd", p, v_l)
+        return o.reshape(o.shape[0], 1, H, -1)
+
+    return jax.shard_map(
+        body,
+        in_specs=(P(bspec, None, None, axis), P(bspec, None, None, axis),
+                  P(bspec, None, None, axis), P(None)),
+        out_specs=P(bspec, None, None, axis),
+        check_vma=False,
+    )(q, k, v, valid)

@@ -1,0 +1,153 @@
+"""Memory-sane attention: two-level blockwise online-softmax in pure JAX.
+
+Vanilla attention materializes [B, H, S, T] fp32 scores — 24 GiB/layer at
+S=4k on the assigned configs.  This implementation chunks queries with
+``lax.map`` and scans KV chunks with the flash-attention online-softmax
+recurrence (running max ``m``, normalizer ``l``, accumulator ``acc``), so
+peak live memory is O(B·H·qc·kc) per step.  ``jax.checkpoint`` on the whole
+call keeps the backward pass at the same footprint (recompute, not store).
+
+This is also the algorithmic REFERENCE for the Pallas TPU kernel in
+``repro.kernels.flash_attention`` — same blocking, same recurrence; the
+kernel adds explicit VMEM BlockSpecs and MXU-aligned tiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@partial(jax.checkpoint, static_argnums=(4, 5, 6, 7))
+def _chunked_gqa(q, k, v, q_offset, causal: bool, window: int,
+                 q_chunk: int, kv_chunk: int) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd]; returns [B,S,H,hd].
+    ``q_offset`` (traced scalar) shifts query positions — used by the
+    sequence-parallel wrapper where each model shard owns an S/mp slice."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                 # value head dim (MLA: != qk head dim)
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    pad_q = (-S) % qc
+    pad_k = (-T) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    Sp, Tp = S + pad_q, T + pad_k
+    nq, nk = Sp // qc, Tp // kc
+
+    # [nq, B, qc, KV, G, hd]
+    qs = qp.reshape(B, nq, qc, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = kp.reshape(B, nk, kc, KV, hd)
+    vs = vp.reshape(B, nk, kc, KV, vd)
+
+    def one_q_chunk(args):
+        qi, q_blk = args                       # q_blk: [B,qc,KV,G,hd]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(ks, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vs, kj, 1, keepdims=False)
+            k_pos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk)
+            s = s.astype(jnp.float32) * scale
+            valid = (k_pos[None, :] < T)
+            if causal:
+                valid = valid & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqt,btkd->bkgqd",
+                                    p.astype(v_blk.dtype), v_blk))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)   # [B,qc,KV,G,hd]
+
+    outs = jax.lax.map(one_q_chunk, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, KV * G, vd)
+    return out[:, :S].astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      q_offset=None) -> jax.Array:
+    """Public entry. q: [B,S,H,hd]; k,v: [B,T,KV,hd] with H % KV == 0."""
+    if q_offset is None:
+        q_offset = jnp.zeros((), jnp.int32)
+    return _chunked_gqa(q, k, v, q_offset, causal, window, q_chunk, kv_chunk)
+
+
+def sequence_parallel_attention(q, k, v, *, causal: bool, window: int,
+                                flags) -> jax.Array:
+    """Model-axis-parallel attention via shard_map, two strategies:
+
+    * HEAD-sharded (preferred, when both H and KV divide the model axis —
+      MLA's 128 heads, deepseek-7b's 32 MHA heads): every shard computes
+      its own query heads against its own KV heads.  ZERO attention
+      collectives (EXPERIMENTS.md §Perf iteration 3).
+    * SEQUENCE-sharded fallback (any head count — granite's 24 heads on a
+      16-way axis): query positions shard; each shard computes S/mp rows
+      against the full K/V, with masks shifted by the shard's offset.
+    """
+    from jax.sharding import PartitionSpec as P
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    mp = flags.model_size
+    axis = flags.model_axis
+    batch_axes = flags.batch_axes
+    bspec = None
+    if batch_axes and B % flags.batch_divisor == 0:
+        bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    if mp > 1 and H % mp == 0 and KV % mp == 0 \
+            and (H // mp) % (KV // mp) == 0:
+        def body_heads(q_l, k_l, v_l):
+            return chunked_attention(q_l, k_l, v_l, causal=causal,
+                                     window=window)
+
+        return jax.shard_map(
+            body_heads,
+            in_specs=(P(bspec, None, axis, None),
+                      P(bspec, None, axis, None),
+                      P(bspec, None, axis, None)),
+            out_specs=P(bspec, None, axis, None),
+            check_vma=False,
+        )(q, k, v)
+
+    if mp <= 1 or S % mp != 0:
+        return chunked_attention(q, k, v, causal=causal, window=window)
+
+    def body(q_l, k_l, v_l):
+        off = jax.lax.axis_index(axis) * q_l.shape[1]
+        return chunked_attention(q_l, k_l, v_l, causal=causal,
+                                 window=window, q_offset=off)
+
+    return jax.shard_map(
+        body,
+        in_specs=(P(bspec, axis, None, None), P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, axis, None, None),
+        check_vma=False,
+    )(q, k, v)
+

@@ -1,0 +1,91 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec, Template
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_template(d: int, axis: str = "embed") -> Template:
+    return {"scale": ParamSpec((d,), (axis,), init="ones")}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-5,
+             use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from ..kernels.ops import rmsnorm as rmsnorm_kernel
+        return rmsnorm_kernel(x, params["scale"], eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_template(d: int, d_ff: int) -> Template:
+    return {
+        "w_gate": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def embed_template(vocab: int, d: int) -> Template:
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"),
+                                   init="scaled", scale=0.02)}
+
+
+def embed_apply(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def lm_head_template(d: int, vocab: int) -> Template:
+    return {"w": ParamSpec((d, vocab), ("embed", "vocab"))}
+
+
+def lm_head_apply(params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", x, params["w"])

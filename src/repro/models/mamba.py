@@ -1,0 +1,186 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer, arXiv:2403.19887).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced by
+a *chunked* linear-recurrence — ``lax.scan`` over sequence chunks carrying
+the SSM state, with ``lax.associative_scan`` inside each chunk.  This keeps
+the materialized state tensor at [B, chunk, d_inner, d_state] (VMEM-friendly)
+instead of [B, S, d_inner, d_state], and gives O(S/chunk) sequential steps
+instead of O(S).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamSpec, Template
+
+
+def mamba_template(cfg: ArchConfig) -> Template:
+    d, di = cfg.d_model, cfg.d_inner
+    ds, dtr, wc = cfg.ssm_state_dim, cfg.ssm_dt_rank, cfg.ssm_conv_width
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((wc, di), (None, "ssm_inner_vec"), init="scaled",
+                            scale=0.1),
+        "conv_b": ParamSpec((di,), ("ssm_inner_vec",), init="zeros"),
+        "x_proj": ParamSpec((di, dtr + 2 * ds), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((dtr, di), (None, "ssm_inner")),
+        "dt_bias": ParamSpec((di,), ("ssm_inner_vec",), init="zeros"),
+        "A_log": ParamSpec((di, ds), ("ssm_inner", None), init="alog"),
+        "D": ParamSpec((di,), ("ssm_inner_vec",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def abstract_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    di = cfg.d_inner
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv_width - 1, di), jnp.dtype(dtype)),
+        "h": jax.ShapeDtypeStruct(
+            (batch, di, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def _causal_conv(params, x: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along S.  x: [B, S, di]."""
+    wc = params["conv_w"].shape[0]
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (wc - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    # windowed sum: out[t] = sum_j w[j] * xp[t+j]
+    out = sum(xp[:, j:j + x.shape[1], :] * params["conv_w"][j]
+              for j in range(wc))
+    return out + params["conv_b"]
+
+
+def _ssm_params(params, cfg: ArchConfig, xc: jax.Array):
+    """xc: [B, L, di] (post conv+silu).  Returns a,b,C for the recurrence."""
+    dtr, ds = cfg.ssm_dt_rank, cfg.ssm_state_dim
+    proj = jnp.einsum("bld,dk->blk", xc, params["x_proj"])
+    dt_raw, Bmat, Cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_raw, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))             # [B,L,di]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [di,ds]
+    a = jnp.exp(dt[..., None] * A)                           # [B,L,di,ds]
+    b = (dt[..., None] * Bmat[:, :, None, :].astype(jnp.float32)
+         * xc[..., None].astype(jnp.float32))                # [B,L,di,ds]
+    return a, b, Cmat.astype(jnp.float32)
+
+
+def _scan_combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba_apply(params, cfg: ArchConfig, x: jax.Array
+                ) -> Tuple[jax.Array, None]:
+    """Full-sequence (training/prefill). x: [B, S, d] -> [B, S, d]."""
+    B, S, d = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(params, x_in).astype(jnp.float32)
+                     ).astype(x.dtype)
+
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad:  # pad with dt=0 positions (handled by zero xc -> b=0, a=exp(0·A)=1)
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def chunk_step(h0, xc_chunk):
+        # xc_chunk: [B, L, di]
+        a, b, Cm = _ssm_params(params, cfg, xc_chunk)
+        A_cum, B_cum = jax.lax.associative_scan(_scan_combine, (a, b), axis=1)
+        h = A_cum * h0[:, None] + B_cum                      # [B,L,di,ds]
+        y = jnp.einsum("blds,bls->bld", h, Cm)               # [B,L,di]
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, cfg.ssm_state_dim), jnp.float32)
+    xc_chunks = xc.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xc_chunks)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S].astype(x.dtype)
+    y = y + params["D"].astype(x.dtype) * xc[:, :S]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"]), None
+
+
+def mamba_decode(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step. x: [B, 1, d]."""
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(
+        _causal_conv(params, x_in, prev=cache["conv"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    conv_new = jnp.concatenate([cache["conv"][:, 1:],
+                                x_in.astype(cache["conv"].dtype)], axis=1)
+    a, b, Cm = _ssm_params(params, cfg, xc)                  # L = 1
+    h = a[:, 0] * cache["h"] + b[:, 0]                       # [B,di,ds]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None, :].astype(x.dtype)
+    y = y + params["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": conv_new, "h": h}
+
+
+def mamba_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
+    """Full-sequence forward AND final recurrent state for decode."""
+    B, S, d = x.shape
+    di = cfg.d_inner
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(params, x_in).astype(jnp.float32)
+                     ).astype(x.dtype)
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    # padded positions must not perturb the final state: mask makes dt=0
+    # there (a=1, b=0 -> identity recurrence step).
+    mask = None
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        mask = (jnp.arange(S + pad) < S).astype(jnp.float32)
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def chunk_step(h0, inputs):
+        xc_chunk, m_chunk = inputs
+        a, b, Cm = _ssm_params(params, cfg, xc_chunk)
+        if mask is not None:
+            mm = m_chunk[None, :, None, None]
+            a = a * mm + (1.0 - mm)          # a=1 on padded steps
+            b = b * mm                        # b=0 on padded steps
+        A_cum, B_cum = jax.lax.associative_scan(_scan_combine, (a, b), axis=1)
+        h = A_cum * h0[:, None] + B_cum
+        y = jnp.einsum("blds,bls->bld", h, Cm)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, cfg.ssm_state_dim), jnp.float32)
+    xc_chunks = xc.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+    m_chunks = (mask if mask is not None else
+                jnp.ones((Sp,), jnp.float32)).reshape(nc, chunk)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xc_chunks, m_chunks))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S].astype(x.dtype)
+    y = y + params["D"].astype(x.dtype) * xc[:, :S]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    conv_state = x_in[:, S - (cfg.ssm_conv_width - 1):, :]
+    return out, {"conv": conv_state, "h": h_last}

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Keys/values are compressed into a small latent ``c_kv`` (rank
+``kv_lora_rank``) plus a shared per-position RoPE key.  The decode cache
+stores ONLY the latent + rope key — a ~14x KV-memory reduction versus GQA at
+kv=128 — and decode uses the *weight absorption* trick: queries are mapped
+into latent space so attention runs against the compressed cache directly,
+never materializing per-head K/V.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, rms_norm
+from .params import ParamSpec, Template
+
+NEG_INF = -1e30
+
+
+def mla_template(cfg: ArchConfig) -> Template:
+    d = cfg.d_model
+    H = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, cfg.q_lora_rank), ("embed", "q_lora")),
+        "q_a_norm": {"scale": ParamSpec((cfg.q_lora_rank,), ("q_lora",),
+                                        init="ones")},
+        "wq_b": ParamSpec((cfg.q_lora_rank, H, nope + rope),
+                          ("q_lora", "heads", "qk_dim")),
+        "wkv_a": ParamSpec((d, cfg.kv_lora_rank + rope), ("embed", "kv_lora")),
+        "kv_a_norm": {"scale": ParamSpec((cfg.kv_lora_rank,), ("kv_lora",),
+                                         init="ones")},
+        "wk_b": ParamSpec((cfg.kv_lora_rank, H, nope),
+                          ("kv_lora", "heads", "qk_dim")),
+        "wv_b": ParamSpec((cfg.kv_lora_rank, H, vd),
+                          ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, vd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _cache_size(cfg: ArchConfig, max_len: int) -> int:
+    w = cfg.sliding_window or 0
+    return min(max_len, w) if w else max_len
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    S = _cache_size(cfg, max_len)
+    return {"c_kv": jnp.zeros((batch, S, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, S, cfg.qk_rope_head_dim), dtype)}
+
+
+def abstract_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    S = _cache_size(cfg, max_len)
+    dt = jnp.dtype(dtype)
+    return {"c_kv": jax.ShapeDtypeStruct((batch, S, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct(
+                (batch, S, cfg.qk_rope_head_dim), dt)}
+
+
+def _project_q(params, cfg: ArchConfig, x, positions):
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    cq = rms_norm(params["q_a_norm"], cq, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, cfg: ArchConfig, x, positions):
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = rms_norm(params["kv_a_norm"], ckv[..., :cfg.kv_lora_rank],
+                    cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:]
+    # rope on the shared key: shape [B,S,rope] -> add head axis of 1
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None, flags=None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    scale = 1.0 / jnp.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    if cache is None:
+        # ---- training/prefill: materialize per-head K/V and reuse the
+        # blockwise online-softmax attention (KV = H here) ---------------
+        q_nope, q_rope = _project_q(params, cfg, x, positions)
+        c_kv, k_rope = _project_kv_latent(params, cfg, x, positions)
+        k_nope = jnp.einsum("btr,rhk->bthk", c_kv, params["wk_b"])
+        v = jnp.einsum("btr,rhk->bthk", c_kv, params["wv_b"])
+        H = cfg.num_heads
+        qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kh = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + k_rope.shape[-1:])],
+            axis=-1)
+        from .chunked_attention import (chunked_attention,
+                                        sequence_parallel_attention)
+        if flags is not None and getattr(flags, "model_size", 1) > 1:
+            out = sequence_parallel_attention(
+                qh, kh, v, causal=True, window=cfg.sliding_window,
+                flags=flags)
+        else:
+            out = chunked_attention(qh, kh, v, causal=True,
+                                    window=cfg.sliding_window)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, None
+
+    # ---- decode with weight absorption --------------------------------
+    B, S, R = cache["c_kv"].shape
+    window = cfg.sliding_window or 0
+    slot = (cache_pos % S) if window else cache_pos
+    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
+    c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
+    c_kv = cache["c_kv"].at[:, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[:, slot].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    # absorb wk_b into the query: q_lat [B,1,H,R]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv) +
+              jnp.einsum("bshk,btk->bhst", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    idx = jnp.arange(S)
+    valid = (idx < jnp.minimum(cache_pos + 1, S)) if window else \
+        (idx <= cache_pos)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)      # [B,1,H,R]
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                           positions: jax.Array, max_len: int, flags=None):
+    y, _ = mla_apply(params, cfg, x, positions, flags=flags)
+    c_kv, k_rope = _project_kv_latent(params, cfg, x, positions)
+    S_in = x.shape[1]
+    size = _cache_size(cfg, max_len)
+    window = cfg.sliding_window or 0
+    if window and S_in >= size:
+        start = (S_in - size) % size
+        # position p lands in slot p % size: cache = roll(tail, +start)
+        c_kv = jnp.roll(c_kv[:, S_in - size:], start, axis=1)
+        k_rope = jnp.roll(k_rope[:, S_in - size:], start, axis=1)
+    else:
+        pad = size - S_in
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

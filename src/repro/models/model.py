@@ -1,0 +1,94 @@
+"""Model facade: one object per architecture bundling template, init,
+abstract shapes, forward/prefill/decode and logical sharding axes."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+from .config import ArchConfig, InputShape
+from .params import (abstract_params, init_params, logical_axes,
+                     param_count)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.template = tf.model_template(cfg)
+
+    # ---- params -----------------------------------------------------
+    def init(self, key: jax.Array):
+        return init_params(self.template, key, self.cfg.dtype)
+
+    def abstract(self):
+        return abstract_params(self.template, self.cfg.dtype)
+
+    def axes(self):
+        return logical_axes(self.template)
+
+    def param_count(self) -> int:
+        return param_count(self.template)
+
+    # ---- compute ------------------------------------------------------
+    def forward(self, params, tokens, prefix_embeds=None, enc_embeds=None,
+                flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+        return tf.forward(params, self.cfg, tokens, prefix_embeds,
+                          enc_embeds, flags)
+
+    def prefill(self, params, tokens, max_cache_len, prefix_embeds=None,
+                enc_embeds=None, flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+        return tf.prefill(params, self.cfg, tokens, max_cache_len,
+                          prefix_embeds, enc_embeds, flags)
+
+    def decode_step(self, params, tokens, cache, cache_pos,
+                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+        return tf.decode_step(params, self.cfg, tokens, cache, cache_pos,
+                              flags)
+
+    def mtp_logits(self, params, hidden, tokens,
+                   flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+        return tf.mtp_logits(params, self.cfg, hidden, tokens, flags)
+
+    def abstract_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        return tf.abstract_cache(self.cfg, batch, max_len, enc_len)
+
+    # ---- modality stubs -------------------------------------------------
+    def input_shapes_for(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStructs for every model input under an InputShape.
+        The frontend carve-out: audio/vlm prefix embeddings arrive
+        precomputed (see DESIGN.md §4)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        specs: Dict[str, Any] = {}
+        i32 = jnp.dtype(jnp.int32)
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            if cfg.is_encoder_decoder:
+                specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            elif cfg.frontend:
+                P = cfg.num_prefix_embeddings
+                specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (B, P, cfg.d_model), dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        elif shape.kind == "prefill":
+            if cfg.is_encoder_decoder:
+                specs["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+            elif cfg.frontend:
+                P = cfg.num_prefix_embeddings
+                specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (B, P, cfg.d_model), dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        else:  # decode
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        return specs

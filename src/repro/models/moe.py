@@ -1,0 +1,291 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity-based token dropping
+and a load-balance auxiliary loss (configs: Jamba 16e top-2, Granite 40e
+top-8, DeepSeek-V3 1 shared + 256 routed top-8).
+
+Two implementations, selected by ``RuntimeFlags.moe_impl``:
+
+* ``gather`` — pure-jnp global sort-based dispatch.  Correct everywhere
+  (single CPU device included); under SPMD the global argsort/scatter
+  replicates the dispatch buffers, so it is only the smoke/oracle path.
+* ``ep`` — expert-parallel via ``jax.shard_map``: experts are sharded over
+  the ``model`` mesh axis; each model shard dispatches the *local* tokens
+  destined for *its* experts into an [E_local, C, d] buffer, runs the FFN,
+  scatters back and ``psum``s partial outputs over the model axis.  No
+  global dispatch tensor ever exists.
+
+Expert counts are padded to a multiple of ``expert_pad_multiple`` (16 = the
+production model-axis size) so EP divides evenly — e.g. Granite's 40
+experts become 48 rows, with the 8 pad experts masked to -inf in the router
+(they receive no tokens and contribute no loss).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ArchConfig
+from .layers import mlp_apply, mlp_template
+from .params import ParamSpec, Template
+
+
+def padded_experts(cfg: ArchConfig) -> int:
+    m = cfg.expert_pad_multiple
+    return -(-cfg.num_experts // m) * m
+
+
+def moe_template(cfg: ArchConfig) -> Template:
+    d, ff = cfg.d_model, cfg.d_ff
+    E = padded_experts(cfg)
+    t: Template = {
+        "router": ParamSpec((d, E), ("embed", "experts_vec"), scale=0.02,
+                            init="scaled"),
+        "w_gate": ParamSpec((E, d, ff), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((E, d, ff), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((E, ff, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        t["shared"] = mlp_template(d, cfg.num_shared_experts * ff)
+    return t
+
+
+def capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def route(params, cfg: ArchConfig, xf: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router on [N, d] tokens -> (gates [N,k], expert_idx [N,k], aux)."""
+    E_real = cfg.num_experts
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    E_pad = logits.shape[-1]
+    if E_pad != E_real:  # mask pad experts
+        col = jnp.arange(E_pad)
+        logits = jnp.where(col[None, :] < E_real, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                 # [N, E]
+    gates, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance loss: E * sum_e (fraction routed to e) * (mean prob e)
+    one_hot = jax.nn.one_hot(idx[..., 0], E_pad, dtype=jnp.float32)
+    frac = one_hot.mean(0)
+    mean_prob = probs.mean(0)
+    aux = E_real * jnp.sum(frac * mean_prob)
+    return gates.astype(xf.dtype), idx, aux
+
+
+def _dispatch_ffn_combine(xl, gl, il, wg, wu, wd, *, cfg: ArchConfig,
+                          e_offset, E_l: int, C: int):
+    """Local dispatch -> expert FFN -> combine for E_l experts.
+    xl [N,d]; gl/il [N,k]; wg/wu [E_l,d,ff]; wd [E_l,ff,d]."""
+    N, d = xl.shape
+    k = cfg.num_experts_per_tok
+    flat_e = il.reshape(N * k) - e_offset
+    mine = (flat_e >= 0) & (flat_e < E_l)
+    eid = jnp.where(mine, flat_e, E_l)
+    order = jnp.argsort(eid, stable=True)
+    sorted_e = eid[order]
+    token_of = order // k
+    counts = jnp.bincount(eid, length=E_l + 1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(N * k) - starts[sorted_e]
+    keep = (sorted_e < E_l) & (pos < C)
+    dest = jnp.where(keep, sorted_e * C + pos, E_l * C)
+
+    buf = jnp.zeros((E_l * C, d), xl.dtype)
+    buf = buf.at[dest].set(xl[token_of], mode="drop").reshape(E_l, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xl.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_l * C, d)
+
+    gathered = out_buf[jnp.minimum(dest, E_l * C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gl.reshape(N * k)[order][:, None]
+    return jnp.zeros((N, d), xl.dtype).at[token_of].add(weighted)
+
+
+def moe_apply(params, cfg: ArchConfig, x: jax.Array, flags=None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss)."""
+    impl = getattr(flags, "moe_impl", "gather") if flags is not None \
+        else "gather"
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    gates, idx, aux = route(params, cfg, xf)
+
+    if impl == "ep" and B * S <= 16 * params["w_gate"].shape[0]:
+        # decode-sized batches: tokens are KB, expert weights are GB —
+        # keep weights stationary and move the tokens instead
+        # (EXPERIMENTS.md §Perf, jamba decode pair).
+        out = _moe_ep_decode(params, cfg, x, gates.reshape(B, S, -1),
+                             idx.reshape(B, S, -1), flags)
+    elif impl == "ep":
+        out = _moe_ep(params, cfg, x, gates.reshape(B, S, -1),
+                      idx.reshape(B, S, -1), flags)
+    else:
+        E_pad = params["w_gate"].shape[0]
+        C = capacity(cfg, B * S)
+        out = _dispatch_ffn_combine(
+            xf, gates, idx, params["w_gate"], params["w_up"],
+            params["w_down"], cfg=cfg, e_offset=0, E_l=E_pad,
+            C=C).reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x)
+    return out, aux.astype(jnp.float32)
+
+
+def _moe_ep(params, cfg: ArchConfig, x, gates, idx, flags):
+    """Expert-parallel dispatch via shard_map over the model axis."""
+    batch_axes = flags.batch_axes or ()
+    model_axis = flags.model_axis
+    mp = flags.model_size
+    E_pad = params["w_gate"].shape[0]
+    E_l = E_pad // mp
+    B, S, d = x.shape
+    div = max(flags.batch_divisor, 1)
+    divisible = batch_axes and B % div == 0
+    N_l = (B // div if divisible else B) * S
+    C = capacity(cfg, N_l)
+    bspec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+        if divisible else None
+
+    # Weight in_specs MATCH the stored sharding (experts->model, d or
+    # ff->data); the ZeRO gather over "data" happens INSIDE the body, per
+    # layer.  With the gather expressed as a resharding in_spec instead,
+    # XLA hoists it out of the layer scan and materializes ALL layers'
+    # expert weights at once — fp32, 4.8 TiB/device on deepseek-v3
+    # (EXPERIMENTS.md §Perf iteration 1).
+    zero_axis = "data" if ("data" in batch_axes) else None
+
+    def body(xl, gl, il, wg, wu, wd):
+        Bl, Sl, _ = xl.shape
+        if zero_axis is not None:
+            wg = jax.lax.all_gather(wg, zero_axis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, zero_axis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, zero_axis, axis=2, tiled=True)
+        my = jax.lax.axis_index(model_axis) * E_l
+        fn = jax.checkpoint(
+            lambda xf, gf, if_, a, b, c: _dispatch_ffn_combine(
+                xf, gf, if_, a, b, c, cfg=cfg, e_offset=my, E_l=E_l, C=C))
+        yl = fn(xl.reshape(Bl * Sl, d), gl.reshape(Bl * Sl, -1),
+                il.reshape(Bl * Sl, -1), wg, wu, wd)
+        return jax.lax.psum(yl.reshape(Bl, Sl, d), model_axis)
+
+    w_specs = ((P(model_axis, zero_axis, None),
+                P(model_axis, zero_axis, None),
+                P(model_axis, None, zero_axis)) if zero_axis else
+               (P(model_axis, None, None), P(model_axis, None, None),
+                P(model_axis, None, None)))
+    return jax.shard_map(
+        body,
+        in_specs=(P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None)) + w_specs,
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(x, gates, idx, params["w_gate"], params["w_up"], params["w_down"])
+
+
+def _moe_ep_decode(params, cfg: ArchConfig, x, gates, idx, flags):
+    """Weight-stationary MoE for tiny token counts (decode): gather the
+    TOKENS (a few MB) to every shard, compute each (expert-row x d-slice)
+    partial FFN against the weights in their stored sharding, and psum.
+    No expert-weight gather ever happens — versus ~9 GiB/layer of weight
+    all-gathers when the training-shaped EP path runs at decode."""
+    batch_axes = flags.batch_axes or ()
+    model_axis = flags.model_axis
+    mp = flags.model_size
+    E_pad = params["w_gate"].shape[0]
+    E_l = E_pad // mp
+    B, S, d = x.shape
+    div = max(flags.batch_divisor, 1)
+    divisible = bool(batch_axes) and B % div == 0
+    bspec = (batch_axes if len(batch_axes) > 1 else batch_axes[0]) \
+        if divisible else None
+    zero_axis = "data" if "data" in batch_axes else None
+    C = capacity(cfg, B * S)
+    k = cfg.num_experts_per_tok
+
+    def body(xl, gl, il, wg_s, wu_s, wd_s):
+        # tokens to every shard (tiny)
+        if divisible:
+            x_all = jax.lax.all_gather(xl, batch_axes, axis=0, tiled=True)
+            g_all = jax.lax.all_gather(gl, batch_axes, axis=0, tiled=True)
+            i_all = jax.lax.all_gather(il, batch_axes, axis=0, tiled=True)
+        else:
+            x_all, g_all, i_all = xl, gl, il
+        N = B * S
+        xf = x_all.reshape(N, d)
+        # dispatch for MY experts over ALL tokens
+        my = jax.lax.axis_index(model_axis) * E_l
+        flat_e = i_all.reshape(N * k) - my
+        mine = (flat_e >= 0) & (flat_e < E_l)
+        eid = jnp.where(mine, flat_e, E_l)
+        order = jnp.argsort(eid, stable=True)
+        sorted_e = eid[order]
+        token_of = order // k
+        counts = jnp.bincount(eid, length=E_l + 1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(N * k) - starts[sorted_e]
+        keep = (sorted_e < E_l) & (pos < C)
+        dest = jnp.where(keep, sorted_e * C + pos, E_l * C)
+        buf = jnp.zeros((E_l * C, d), xf.dtype)
+        buf = buf.at[dest].set(xf[token_of], mode="drop")
+        buf = buf.reshape(E_l, C, d)
+        # FFN with d sharded over "data": partial contraction + psum
+        if zero_axis is not None:
+            dl = wg_s.shape[1]
+            off = jax.lax.axis_index(zero_axis) * dl
+            buf_d = jax.lax.dynamic_slice_in_dim(buf, off, dl, axis=2)
+        else:
+            buf_d = buf
+        g = jnp.einsum("ecd,edf->ecf", buf_d, wg_s)
+        u = jnp.einsum("ecd,edf->ecf", buf_d, wu_s)
+        if zero_axis is not None:
+            g = jax.lax.psum(g, zero_axis)
+            u = jax.lax.psum(u, zero_axis)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype) * u
+        out_slice = jnp.einsum("ecf,efd->ecd", h, wd_s)   # [E_l,C,d/dp]
+        dl_out = out_slice.shape[-1]
+        flat_out = out_slice.reshape(E_l * C, dl_out)
+        gathered = flat_out[jnp.minimum(dest, E_l * C - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        weighted = gathered * g_all.reshape(N * k)[order][:, None]
+        y_slice = jnp.zeros((N, dl_out), xf.dtype).at[token_of].add(weighted)
+        y_slice = jax.lax.psum(y_slice, model_axis)       # sum experts
+        if zero_axis is not None:
+            # reassemble full d from the data-sharded slices
+            y_full = jax.lax.all_gather(y_slice, zero_axis, axis=1,
+                                        tiled=True)       # [N, d]
+        else:
+            y_full = y_slice
+        if divisible:
+            # keep only my batch rows
+            bidx = jax.lax.axis_index(batch_axes[0])
+            if len(batch_axes) > 1:
+                bidx = (bidx * jax.lax.axis_size(batch_axes[1])
+                        + jax.lax.axis_index(batch_axes[1]))
+            Bl = B // div
+            y_full = jax.lax.dynamic_slice_in_dim(
+                y_full.reshape(B, S, d), bidx * Bl, Bl, axis=0)
+            return y_full
+        return y_full.reshape(B, S, d)
+
+    w_specs = ((P(model_axis, zero_axis, None),
+                P(model_axis, zero_axis, None),
+                P(model_axis, None, zero_axis)) if zero_axis else
+               (P(model_axis, None, None), P(model_axis, None, None),
+                P(model_axis, None, None)))
+    return jax.shard_map(
+        body,
+        in_specs=(P(bspec, None, None), P(bspec, None, None),
+                  P(bspec, None, None)) + w_specs,
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(x, gates, idx, params["w_gate"], params["w_up"], params["w_down"])

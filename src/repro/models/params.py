@@ -1,0 +1,92 @@
+"""Parameter templates — single source of truth for shapes, init and
+logical sharding axes.
+
+A model's parameters are described once as a pytree of :class:`ParamSpec`
+leaves (shape + logical axis names + initializer).  From the template we
+derive:
+  * ``init_params``      — materialized jnp arrays (smoke tests, examples)
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run lowering, no memory)
+  * ``logical_axes``     — pytree of logical-axis tuples
+  * concrete PartitionSpecs via ``repro.sharding.rules``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | scaled | conv | alog
+    scale: float = 1.0
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Template = Dict[str, Any]   # nested dict with ParamSpec leaves
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "alog":
+        # mamba A_log init: log(1..d_state) broadcast
+        d_state = spec.shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)),
+                     spec.shape[:-1] + (1,))
+        return a.astype(dt)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if spec.init == "scaled":
+        std = spec.scale
+    else:
+        std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(template: Template, key: jax.Array, dtype: str) -> Any:
+    leaves, treedef = jax.tree.flatten(template, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    dt = jnp.dtype(dtype)
+    out = [_init_leaf(l, k, dt) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(template: Template, dtype: str) -> Any:
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype) if s.dtype else dt),
+        template, is_leaf=_is_spec)
+
+
+def logical_axes(template: Template) -> Any:
+    return jax.tree.map(lambda s: s.axes, template, is_leaf=_is_spec)
+
+
+def stack_template(template: Template, n: int,
+                   axis_name: Optional[str] = "layers") -> Template:
+    """Add a leading stacking dimension (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes),
+        template, is_leaf=_is_spec)
+
+
+def param_count(template: Template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=_is_spec)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))

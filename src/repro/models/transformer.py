@@ -1,0 +1,531 @@
+"""Model composition: per-layer blocks (attn / MLA / mamba / m-sLSTM ×
+dense / MoE FFN), repeated-group layer stacking via ``lax.scan`` (compile
+time stays flat in depth), encoder-decoder wiring, MTP head, and the three
+entry points used by the runtime: ``forward`` (train), ``prefill`` and
+``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mam
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import xlstm as xl
+from .config import ArchConfig
+from .layers import (embed_apply, embed_template, lm_head_apply,
+                     lm_head_template, mlp_apply, mlp_template, rms_norm,
+                     rmsnorm_template)
+from .params import ParamSpec, Template, stack_template
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    use_flash: bool = False          # Pallas flash-attention for seq paths
+    attn_impl: str = "chunked"       # "chunked" | "naive" ("flash" wins if set)
+    remat: str = "group"             # "none" | "group"
+    fused_rmsnorm: bool = False
+    # Explicit activation sharding: batch dim of [B, S, d] activations is
+    # pinned to these mesh axes at every layer boundary (SPMD propagation
+    # alone loses the sharding inside remat'd scans — see EXPERIMENTS §Perf).
+    batch_axes: Tuple[str, ...] = ()
+    batch_divisor: int = 1
+    # MoE implementation: "gather" (pure jnp, any device count) or "ep"
+    # (shard_map expert parallelism over the model axis)
+    moe_impl: str = "gather"
+    model_axis: str = "model"
+    model_size: int = 1
+
+
+DEFAULT_FLAGS = RuntimeFlags()
+
+
+def constrain_batch(x: jax.Array, flags: RuntimeFlags) -> jax.Array:
+    """Pin the leading (batch) dim of an activation to the data axes."""
+    if not flags.batch_axes or x.shape[0] % flags.batch_divisor != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(flags.batch_axes if len(flags.batch_axes) > 1
+             else flags.batch_axes[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def group_structure(cfg: ArchConfig):
+    """Split layers into (unrolled head, repeating pattern, repeat count)."""
+    kinds = list(zip(cfg.layer_kinds(), cfg.ffn_kinds()))
+    k = cfg.first_k_dense if cfg.num_experts else 0
+    head, rest = kinds[:k], kinds[k:]
+    P = len(rest)
+    for p in range(1, len(rest) + 1):
+        if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+            P = p
+            break
+    return head, rest[:P], (len(rest) // P if rest else 0)
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def layer_template(cfg: ArchConfig, kind: str, ffn_kind: str,
+                   cross: bool = False) -> Template:
+    d = cfg.d_model
+    t: Template = {"norm1": rmsnorm_template(d)}
+    if kind == "attn":
+        t["mixer"] = mla_mod.mla_template(cfg) if cfg.use_mla \
+            else attn.attention_template(cfg)
+    elif kind == "mamba":
+        t["mixer"] = mam.mamba_template(cfg)
+    elif kind == "mlstm":
+        t["mixer"] = xl.mlstm_template(cfg)
+    elif kind == "slstm":
+        t["mixer"] = xl.slstm_template(cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cross:
+        t["cross_norm"] = rmsnorm_template(d)
+        t["cross"] = attn.attention_template(
+            dataclasses.replace(cfg, qk_norm=False))
+    dff = cfg.dense_d_ff if ffn_kind == "dense" else cfg.d_ff
+    if dff and not (kind in ("mlstm", "slstm") and cfg.d_ff == 0):
+        t["norm2"] = rmsnorm_template(d)
+        t["ffn"] = moe_mod.moe_template(cfg) if ffn_kind == "moe" \
+            else mlp_template(d, dff)
+    return t
+
+
+def _cross_attention(params, cfg: ArchConfig, x, memory_kv, flags):
+    """x: [B,S,d]; memory_kv: dict k/v [B,T,KV,hd] (precomputed)."""
+    from .chunked_attention import (chunked_attention,
+                                    sequence_parallel_attention)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if flags is not None and getattr(flags, "model_size", 1) > 1:
+        out = sequence_parallel_attention(q, memory_kv["k"],
+                                          memory_kv["v"], causal=False,
+                                          window=0, flags=flags)
+    else:
+        out = chunked_attention(q, memory_kv["k"], memory_kv["v"],
+                                causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cross_kv(params, memory: jax.Array) -> Dict[str, jax.Array]:
+    k = jnp.einsum("btd,dhk->bthk", memory, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, params["wv"])
+    return {"k": k, "v": v}
+
+
+def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
+                x: jax.Array, positions: jax.Array,
+                cache: Optional[Dict] = None,
+                cache_pos: Optional[jax.Array] = None,
+                memory_kv: Optional[Dict] = None,
+                flags: RuntimeFlags = DEFAULT_FLAGS,
+                want_cache: bool = False, max_cache_len: int = 0,
+                ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+    """Returns (x_out, aux_loss, new_cache)."""
+    h = rms_norm(params["norm1"], x, cfg.norm_eps, flags.fused_rmsnorm)
+    new_cache: Dict[str, Any] = {}
+    decode = cache is not None
+    if kind == "attn":
+        if cfg.use_mla:
+            if decode:
+                y, c = mla_mod.mla_apply(params["mixer"], cfg, h, positions,
+                                         cache["mixer"], cache_pos)
+            elif want_cache:
+                y, c = mla_mod.mla_prefill_into_cache(
+                    params["mixer"], cfg, h, positions, max_cache_len,
+                    flags=flags)
+            else:
+                y, c = mla_mod.mla_apply(params["mixer"], cfg, h, positions,
+                                         flags=flags)
+        else:
+            impl = "flash" if flags.use_flash else flags.attn_impl
+            if decode:
+                y, c = attn.attention_apply(params["mixer"], cfg, h,
+                                            positions, cache["mixer"],
+                                            cache_pos, impl, flags)
+            elif want_cache:
+                y, c = attn.prefill_into_cache(
+                    params["mixer"], cfg, h, positions, max_cache_len,
+                    impl, flags)
+            else:
+                y, c = attn.attention_apply(params["mixer"], cfg, h,
+                                            positions, impl=impl,
+                                            flags=flags)
+    elif kind == "mamba":
+        if decode:
+            y, c = mam.mamba_decode(params["mixer"], cfg, h, cache["mixer"])
+        elif want_cache:
+            y, c = mam.mamba_prefill_into_cache(params["mixer"], cfg, h)
+        else:
+            y, c = mam.mamba_apply(params["mixer"], cfg, h)
+    elif kind == "mlstm":
+        # sequence-parallel scan pays off once S spans many model shards
+        use_sp = flags.model_size > 1 and x.shape[1] >= 8192
+        if decode:
+            y, c = xl.mlstm_decode(params["mixer"], cfg, h, cache["mixer"])
+        elif use_sp:
+            y, c = xl.mlstm_apply_sp(params["mixer"], cfg, h, flags,
+                                     want_cache=want_cache)
+        elif want_cache:
+            y, c = xl.mlstm_prefill_into_cache(params["mixer"], cfg, h)
+        else:
+            y, c = xl.mlstm_apply(params["mixer"], cfg, h)
+    elif kind == "slstm":
+        if decode:
+            y, c = xl.slstm_decode(params["mixer"], cfg, h, cache["mixer"])
+        elif want_cache:
+            y, c = xl.slstm_prefill_into_cache(params["mixer"], cfg, h)
+        else:
+            y, c = xl.slstm_apply(params["mixer"], cfg, h)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    new_cache["mixer"] = c
+    x = x + y
+
+    if "cross" in params and memory_kv is not None:
+        hc = rms_norm(params["cross_norm"], x, cfg.norm_eps,
+                      flags.fused_rmsnorm)
+        x = x + _cross_attention(params["cross"], cfg, hc, memory_kv, flags)
+
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in params:
+        h2 = rms_norm(params["norm2"], x, cfg.norm_eps, flags.fused_rmsnorm)
+        if ffn_kind == "moe":
+            y2, aux = moe_mod.moe_apply(params["ffn"], cfg, h2, flags)
+        else:
+            y2 = mlp_apply(params["ffn"], h2)
+        x = x + y2
+    x = constrain_batch(x, flags)
+    return x, aux, (new_cache if (decode or want_cache) else None)
+
+
+# ---------------------------------------------------------------------------
+# whole-model template
+# ---------------------------------------------------------------------------
+
+def model_template(cfg: ArchConfig) -> Template:
+    d, V = cfg.d_model, cfg.padded_vocab
+    t: Template = {
+        "embed": embed_template(V, d),
+        "final_norm": rmsnorm_template(d),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = lm_head_template(d, V)
+    head, pattern, R = group_structure(cfg)
+    if head:
+        t["head_layers"] = {f"layer{i}": layer_template(cfg, k, f)
+                            for i, (k, f) in enumerate(head)}
+    if R:
+        group = {f"l{j}": layer_template(
+            cfg, k, f, cross=cfg.is_encoder_decoder)
+            for j, (k, f) in enumerate(pattern)}
+        t["blocks"] = stack_template(group, R)
+    if cfg.is_encoder_decoder:
+        enc_layer = layer_template(
+            dataclasses.replace(cfg, use_mla=False, num_experts=0),
+            "attn", "dense")
+        t["encoder"] = {
+            "blocks": stack_template(enc_layer, cfg.num_encoder_layers),
+            "final_norm": rmsnorm_template(d),
+        }
+    if cfg.mtp_depth:
+        t["mtp"] = {
+            "proj": ParamSpec((2 * d, d), ("embed_b", "embed")),
+            "norm": rmsnorm_template(d),
+            "block": layer_template(cfg, "attn",
+                                    "dense" if cfg.first_k_dense else
+                                    cfg.ffn_kinds()[-1]),
+        }
+    return t
+
+
+# ---------------------------------------------------------------------------
+# encoder (bidirectional, for enc-dec archs; consumes stub embeddings)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ArchConfig, enc_embeds: jax.Array,
+           flags: RuntimeFlags) -> jax.Array:
+    B, T, d = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    enc_cfg = dataclasses.replace(cfg, use_mla=False, num_experts=0,
+                                  sliding_window=0)
+
+    from .chunked_attention import (chunked_attention,
+                                    sequence_parallel_attention)
+
+    def step(x, layer_params):
+        h = rms_norm(layer_params["norm1"], x, cfg.norm_eps)
+        q, k, v = attn._qkv(layer_params["mixer"], enc_cfg, h, positions)
+        if getattr(flags, "model_size", 1) > 1:
+            o = sequence_parallel_attention(q, k, v, causal=False,
+                                            window=0, flags=flags)
+        else:
+            o = chunked_attention(q, k, v, causal=False)   # bidirectional
+        x = x + jnp.einsum("bshk,hkd->bsd", o, layer_params["mixer"]["wo"])
+        h2 = rms_norm(layer_params["norm2"], x, cfg.norm_eps)
+        x = x + mlp_apply(layer_params["ffn"], h2)
+        return constrain_batch(x, flags), None
+
+    fn = jax.checkpoint(step) if flags.remat != "none" else step
+    x, _ = jax.lax.scan(lambda c, p: fn(c, p), enc_embeds,
+                        params["encoder"]["blocks"])
+    return rms_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval) — full sequence, no cache
+# ---------------------------------------------------------------------------
+
+def _logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["embedding"])
+    else:
+        logits = lm_head_apply(params["lm_head"], x)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad columns so softmax mass stays on the real vocab
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None,
+            flags: RuntimeFlags = DEFAULT_FLAGS,
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (logits [B,S,V], aux_loss, final_hidden [B,S,d])."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    x = constrain_batch(x, flags)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    memory_kv = None
+    head, pattern, R = group_structure(cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    if enc_embeds is not None and cfg.is_encoder_decoder:
+        memory = encode(params, cfg, enc_embeds, flags)
+    else:
+        memory = None
+
+    for i in range(len(head)):
+        lp = params["head_layers"][f"layer{i}"]
+        x, a, _ = layer_apply(lp, cfg, head[i][0], head[i][1], x, positions,
+                              flags=flags)
+        aux = aux + a
+
+    if R:
+        def group_step(carry, group_params):
+            x, aux = carry
+            for j, (k, f) in enumerate(pattern):
+                mkv = cross_kv(group_params[f"l{j}"]["cross"], memory) \
+                    if (memory is not None and
+                        "cross" in group_params[f"l{j}"]) else None
+                x, a, _ = layer_apply(group_params[f"l{j}"], cfg, k, f, x,
+                                      positions, memory_kv=mkv, flags=flags)
+                aux = aux + a
+            return (x, aux), None
+
+        fn = jax.checkpoint(group_step) if flags.remat != "none" \
+            else group_step
+        (x, aux), _ = jax.lax.scan(fn, (x, aux), params["blocks"])
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
+    logits = _logits(params, cfg, x)
+    return logits, aux, x
+
+
+def mtp_logits(params, cfg: ArchConfig, hidden: jax.Array,
+               tokens: jax.Array, flags: RuntimeFlags = DEFAULT_FLAGS
+               ) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction head (depth 1): combines the final
+    hidden at position t with the embedding of token t+1 to predict t+2."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S, d = hidden.shape
+    nxt = embed_apply(params["embed"], tokens, dt)
+    nxt = jnp.concatenate([nxt[:, 1:], jnp.zeros((B, 1, d), dt)], axis=1)
+    h = jnp.concatenate([hidden, nxt], axis=-1)
+    h = jnp.einsum("bsk,kd->bsd", h, params["mtp"]["proj"])
+    h = rms_norm(params["mtp"]["norm"], h, cfg.norm_eps)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kind = "attn"
+    ffn = "dense" if "ffn" in params["mtp"]["block"] and \
+        "router" not in params["mtp"]["block"].get("ffn", {}) else "moe"
+    h, _, _ = layer_apply(params["mtp"]["block"], cfg, kind, ffn, h,
+                          positions, flags=flags)
+    return _logits(params, cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def abstract_layer_cache(cfg: ArchConfig, kind: str, batch: int,
+                         max_len: int, cross: bool = False,
+                         enc_len: int = 0):
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "attn":
+        c = mla_mod.abstract_mla_cache(cfg, batch, max_len, dt) \
+            if cfg.use_mla else \
+            attn.abstract_kv_cache(cfg, batch, max_len, dt)
+    elif kind == "mamba":
+        c = mam.abstract_mamba_cache(cfg, batch, dt)
+    elif kind == "mlstm":
+        c = xl.abstract_mlstm_cache(cfg, batch, dt)
+    elif kind == "slstm":
+        c = xl.abstract_slstm_cache(cfg, batch, dt)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    out = {"mixer": c}
+    if cross:
+        out["cross"] = {
+            "k": jax.ShapeDtypeStruct(
+                (batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": jax.ShapeDtypeStruct(
+                (batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dt)}
+    return out
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   enc_len: int = 0):
+    """ShapeDtypeStruct pytree matching what prefill() returns."""
+    head, pattern, R = group_structure(cfg)
+    cache: Dict[str, Any] = {}
+    cross = cfg.is_encoder_decoder
+    if head:
+        cache["head_layers"] = {
+            f"layer{i}": abstract_layer_cache(cfg, k, batch, max_len)
+            for i, (k, f) in enumerate(head)}
+    if R:
+        group = {f"l{j}": abstract_layer_cache(cfg, k, batch, max_len,
+                                               cross, enc_len)
+                 for j, (k, f) in enumerate(pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), group)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_embeds: Optional[jax.Array] = None,
+            flags: RuntimeFlags = DEFAULT_FLAGS):
+    """Run the prompt, return (last-token logits [B,V], cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    x = constrain_batch(x, flags)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    head, pattern, R = group_structure(cfg)
+    memory = encode(params, cfg, enc_embeds, flags) \
+        if (enc_embeds is not None and cfg.is_encoder_decoder) else None
+
+    cache: Dict[str, Any] = {}
+    if head:
+        cache["head_layers"] = {}
+        for i, (k, f) in enumerate(head):
+            lp = params["head_layers"][f"layer{i}"]
+            x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                  want_cache=True, max_cache_len=max_cache_len,
+                                  flags=flags)
+            cache["head_layers"][f"layer{i}"] = c
+    if R:
+        def group_step(x, group_params):
+            caches = {}
+            for j, (k, f) in enumerate(pattern):
+                lp = group_params[f"l{j}"]
+                mkv = cross_kv(lp["cross"], memory) \
+                    if (memory is not None and "cross" in lp) else None
+                x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                      memory_kv=mkv, want_cache=True,
+                                      max_cache_len=max_cache_len,
+                                      flags=flags)
+                if mkv is not None:
+                    c["cross"] = mkv
+                caches[f"l{j}"] = c
+            return x, caches
+
+        x, group_caches = jax.lax.scan(group_step, x, params["blocks"])
+        cache["blocks"] = group_caches
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
+                cache, cache_pos: jax.Array,
+                flags: RuntimeFlags = DEFAULT_FLAGS):
+    """One decode step. tokens: [B, 1]. Returns (logits [B,V], new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dt)
+    x = constrain_batch(x, flags)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache_pos, (B, 1))
+    head, pattern, R = group_structure(cfg)
+
+    new_cache: Dict[str, Any] = {}
+    if head:
+        new_cache["head_layers"] = {}
+        for i, (k, f) in enumerate(head):
+            lp = params["head_layers"][f"layer{i}"]
+            x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                  cache=cache["head_layers"][f"layer{i}"],
+                                  cache_pos=cache_pos, flags=flags)
+            new_cache["head_layers"][f"layer{i}"] = c
+    if R:
+        # The stacked cache rides in the scan CARRY (updated in place per
+        # layer group with dynamic_update_index) rather than as xs/ys — XLA
+        # then keeps ONE cache buffer alive instead of separate in/out
+        # copies, halving decode HBM (EXPERIMENTS.md §Perf).
+        blocks_cache = cache["blocks"]
+
+        def group_step(carry, scanned):
+            x, blocks_cache = carry
+            group_params, idx = scanned
+            group_cache = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                       keepdims=False),
+                blocks_cache)
+            new_group = {}
+            for j, (k, f) in enumerate(pattern):
+                lp = group_params[f"l{j}"]
+                mkv = group_cache[f"l{j}"].get("cross")
+                x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                      cache=group_cache[f"l{j}"],
+                                      cache_pos=cache_pos,
+                                      memory_kv=mkv, flags=flags)
+                if mkv is not None:
+                    c["cross"] = mkv
+                new_group[f"l{j}"] = c
+            blocks_cache = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), idx, 0),
+                blocks_cache, new_group)
+            return (x, blocks_cache), None
+
+        (x, blocks_cache), _ = jax.lax.scan(
+            group_step, (x, blocks_cache),
+            (params["blocks"], jnp.arange(R)))
+        new_cache["blocks"] = blocks_cache
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, new_cache

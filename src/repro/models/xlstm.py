@@ -1,0 +1,407 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunk-parallel)
+and sLSTM (scalar memory, strictly sequential).
+
+TPU adaptation: the paper's fused CUDA recurrence is mapped to (a) a
+chunkwise-parallel mLSTM — quadratic gated attention within a chunk,
+recurrent (C, n, m) state across chunks via ``lax.scan`` — and (b) a
+two-level checkpointed scan for sLSTM (inner scan over time, outer remat
+chunks) that bounds backward-pass state storage to chunk boundaries.
+All gate accumulations are stabilized in log space with a running max ``m``
+exactly as in the paper (eq. 15-19).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .params import ParamSpec, Template
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_template(cfg: ArchConfig) -> Template:
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "up_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        # block-diagonal (head-wise) q/k/v, as in the paper's
+        # LinearHeadwiseExpand — di^2/H params each, not di^2
+        "wq": ParamSpec((H, hd, hd), (None, "mlstm_dk", None)),
+        "wk": ParamSpec((H, hd, hd), (None, "mlstm_dk", None)),
+        "wv": ParamSpec((H, hd, hd), (None, "mlstm_dk", None)),
+        "w_igate": ParamSpec((di, H), ("ssm_inner_b", None), init="scaled",
+                             scale=0.01),
+        "b_igate": ParamSpec((H,), (None,), init="zeros"),
+        "w_fgate": ParamSpec((di, H), ("ssm_inner_b", None), init="scaled",
+                             scale=0.01),
+        "b_fgate": ParamSpec((H,), (None,), init="ones"),
+        "down_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg: ArchConfig, x: jax.Array):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    B, S, _ = xm.shape
+    xh = xm.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"])
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv"])
+    li = (jnp.einsum("bse,eh->bsh", xm, params["w_igate"])
+          + params["b_igate"]).astype(jnp.float32)           # log input gate
+    f_raw = (jnp.einsum("bse,eh->bsh", xm, params["w_fgate"])
+             + params["b_fgate"]).astype(jnp.float32)
+    lf = -jax.nn.softplus(-f_raw)                            # log sigmoid(f)
+    return q, k, v, li, lf, z
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype):
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), 0.0, jnp.float32)}
+
+
+def abstract_mlstm_cache(cfg: ArchConfig, batch: int, dtype):
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    return {"C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32)}
+
+
+def _mlstm_chunk(carry, inputs, hd: int):
+    """One chunk of the chunkwise-parallel mLSTM.
+    carry: (C0 [B,H,dk,dv], n0 [B,H,dk], m0 [B,H])
+    inputs: q,k,v [B,L,H,hd]; li,lf [B,L,H]
+    """
+    C0, n0, m0 = carry
+    q, k, v, li, lf = inputs
+    B, L, H, _ = q.shape
+    F = jnp.cumsum(lf, axis=1)                               # [B,L,H]
+    F_t = F.transpose(0, 2, 1)                               # [B,H,L]
+    li_t = li.transpose(0, 2, 1)
+    # D[t,s] = F_t - F_s + li_s   (s <= t)
+    D = F_t[:, :, :, None] - F_t[:, :, None, :] + li_t[:, :, None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(causal[None, None], D, NEG_INF)
+    G = F_t + m0[:, :, None]                                 # [B,H,L] inter
+    m = jnp.maximum(D.max(-1), G)                            # [B,H,L]
+    scale = 1.0 / jnp.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale   # scale q once: intra AND inter
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qk = jnp.einsum("bthd,bshd->bhts", qf, kf)               # [B,H,L,L]
+    Sc = qk * jnp.exp(D - m[..., None])
+    inter_w = jnp.exp(G - m)                                 # [B,H,L]
+    num = (jnp.einsum("bhts,bshd->bthd", Sc, vf)
+           + inter_w.transpose(0, 2, 1)[..., None]
+           * jnp.einsum("bthd,bhde->bthe", qf, C0))
+    den = (Sc.sum(-1).transpose(0, 2, 1)
+           + inter_w.transpose(0, 2, 1)
+           * jnp.einsum("bthd,bhd->bth", qf, n0))            # [B,L,H]
+    # stabilized denominator floor: max(|den|, exp(-m)) (paper eq. 19)
+    floor = jnp.exp(-m).transpose(0, 2, 1)
+    h = num / jnp.maximum(jnp.abs(den), floor)[..., None]    # [B,L,H,hd]
+    # ---- state update to the end of the chunk ------------------------
+    decay_s = F_t[:, :, -1:] - F_t + li_t                    # [B,H,L]
+    m_next = jnp.maximum(F_t[:, :, -1] + m0, decay_s.max(-1))
+    w_s = jnp.exp(decay_s - m_next[..., None])               # [B,H,L]
+    w0 = jnp.exp(F_t[:, :, -1] + m0 - m_next)                # [B,H]
+    C_next = (w0[..., None, None] * C0
+              + jnp.einsum("bhs,bshd,bshe->bhde", w_s, kf, vf))
+    n_next = w0[..., None] * n0 + jnp.einsum("bhs,bshd->bhd", w_s, kf)
+    return (C_next, n_next, m_next), h
+
+
+def mlstm_apply(params, cfg: ArchConfig, x: jax.Array
+                ) -> Tuple[jax.Array, None]:
+    y, _ = _mlstm_forward(params, cfg, x, want_cache=False)
+    return y, None
+
+
+def mlstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
+    return _mlstm_forward(params, cfg, x, want_cache=True)
+
+
+def _mlstm_forward(params, cfg: ArchConfig, x: jax.Array, want_cache: bool,
+                   initial_state=None):
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    q, k, v, li, lf, z = _mlstm_qkv_gates(params, cfg, x)
+    L = min(cfg.mlstm_chunk, S)
+    pad = (-S) % L
+    if pad:
+        # padded positions: input gate closed (li=-inf), forget gate 1
+        # (lf=0) -> state and outputs beyond S are untouched.
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zp) for a in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEG_INF)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    def split_chunks(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    inputs = tuple(map(split_chunks, (q, k, v, li, lf)))
+    if initial_state is not None:
+        carry0 = (initial_state["C"], initial_state["n"],
+                  initial_state["m"])
+    else:
+        carry0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                  jnp.zeros((B, H, hd), jnp.float32),
+                  jnp.zeros((B, H), jnp.float32))
+    step = lambda c, i: _mlstm_chunk(c, i, hd)
+    carry, hs = jax.lax.scan(jax.checkpoint(step), carry0, inputs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", h, params["down_proj"])
+    cache = {"C": carry[0], "n": carry[1], "m": carry[2]} if want_cache \
+        else None
+    return y, cache
+
+
+def mlstm_decode(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]):
+    """One token. x: [B,1,d]."""
+    B = x.shape[0]
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    q, k, v, li, lf, z = _mlstm_qkv_gates(params, cfg, x)
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    li0, lf0 = li[:, 0], lf[:, 0]                            # [B,H]
+    C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    m = jnp.maximum(lf0 + m0, li0)
+    fw = jnp.exp(lf0 + m0 - m)[..., None]
+    iw = jnp.exp(li0 - m)[..., None]
+    C = fw[..., None] * C0 + jnp.einsum("bhd,bhe->bhde", iw * kf, vf)
+    n = fw * n0 + iw * kf
+    scale = 1.0 / jnp.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", qf * scale, C)
+    den = jnp.einsum("bhd,bhd->bh", qf * scale, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]  # [B,H,hd]
+    h = h.reshape(B, 1, di).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", h, params["down_proj"])
+    return y, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_template(cfg: ArchConfig) -> Template:
+    d = cfg.d_model
+    H = cfg.slstm_num_heads
+    hd = d // H
+    return {
+        # input weights for i, f, z, o gates
+        "w_x": ParamSpec((d, 4 * d), ("embed", "ssm_inner")),
+        "b": ParamSpec((4 * d,), ("ssm_inner_vec",), init="zeros"),
+        # block-diagonal recurrent weights per head
+        "w_h": ParamSpec((H, hd, 4 * hd), (None, "head_dim", "ssm_inner")),
+        "out_proj": ParamSpec((d, d), ("embed_b", "embed")),
+    }
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in ("c", "n", "h")} \
+        | {"m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def abstract_slstm_cache(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {k: jax.ShapeDtypeStruct((batch, d), jnp.float32)
+            for k in ("c", "n", "h", "m")}
+
+
+def _slstm_step(params, cfg: ArchConfig, carry, x_t):
+    """carry: dict of [B, d] fp32; x_t: [B, 4d] precomputed input proj."""
+    d = cfg.d_model
+    H = cfg.slstm_num_heads
+    hd = d // H
+    c, n, h, m = carry
+    B = c.shape[0]
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hdk->bhk", hh.astype(jnp.float32),
+                     params["w_h"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = x_t.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    li = gi                                                  # exp input gate
+    lf = -jax.nn.softplus(-gf)                               # log sigmoid
+    m_new = jnp.maximum(lf + m, li)
+    iw = jnp.exp(li - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params, cfg: ArchConfig, x: jax.Array
+                ) -> Tuple[jax.Array, None]:
+    y, _ = _slstm_forward(params, cfg, x, want_cache=False)
+    return y, None
+
+
+def slstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
+    return _slstm_forward(params, cfg, x, want_cache=True)
+
+
+def _slstm_forward(params, cfg: ArchConfig, x: jax.Array, want_cache: bool):
+    B, S, d = x.shape
+    xg = jnp.einsum("bsd,dk->bsk", x, params["w_x"])         # [B,S,4d]
+    carry0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    # two-level scan: outer remat chunks bound stored carries
+    L = 64 if S % 64 == 0 else (S if S < 64 else 1)
+    if S % L != 0:
+        L = 1
+    nc = S // L
+    xg_c = xg.reshape(B, nc, L, 4 * d).transpose(1, 2, 0, 3)  # [nc,L,B,4d]
+
+    def inner(carry, x_t):
+        return _slstm_step(params, cfg, carry, x_t)
+
+    def outer(carry, chunk):
+        return jax.lax.scan(inner, carry, chunk)
+
+    carry, hs = jax.lax.scan(jax.checkpoint(outer), carry0, xg_c)
+    h = hs.reshape(nc, L, B, d).transpose(2, 0, 1, 3).reshape(B, S, d)
+    y = jnp.einsum("bsd,dk->bsk", h.astype(x.dtype), params["out_proj"])
+    cache = None
+    if want_cache:
+        cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y, cache
+
+
+def slstm_decode(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array]):
+    xg = jnp.einsum("bsd,dk->bsk", x, params["w_x"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, h = _slstm_step(params, cfg, carry, xg)
+    y = jnp.einsum("bsd,dk->bsk", h[:, None].astype(x.dtype),
+                   params["out_proj"])
+    return y, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel mLSTM (shard_map over the model axis)
+# ---------------------------------------------------------------------------
+
+def _combine_states(left, right):
+    """Associative combine of per-segment mLSTM summaries.
+    Each summary: dict(C, n, m, F) where (C, n) are stabilized by exp(m)
+    and F is the segment's total log-forget.  ``left`` precedes ``right``
+    in time; the result summarizes the concatenated segment."""
+    m_new = jnp.maximum(left["m"] + right["F"], right["m"])
+    wl = jnp.exp(left["m"] + right["F"] - m_new)
+    wr = jnp.exp(right["m"] - m_new)
+    return {
+        "C": wl[..., None, None] * left["C"] + wr[..., None, None] * right["C"],
+        "n": wl[..., None] * left["n"] + wr[..., None] * right["n"],
+        "m": m_new,
+        "F": left["F"] + right["F"],
+    }
+
+
+def mlstm_apply_sp(params, cfg: ArchConfig, x: jax.Array, flags,
+                   want_cache: bool = False):
+    """Sequence-parallel chunked mLSTM (EXPERIMENTS.md §Perf, xlstm pair):
+
+    the sequence is split across the model axis; every shard scans its
+    S/mp slice from a zero state (pass 1), shard summaries (C, n, m, total
+    log-forget F) are all-gathered and prefix-combined locally, and the
+    slice is re-scanned from the correct prefix state (pass 2).  Compute
+    doubles (it is <2%% of the roofline here); the 10+ GiB/layer qkv
+    all-gathers of the tensor-parallel formulation disappear — weights are
+    small (1.9B model) and arrive replicated instead.
+    """
+    from jax.sharding import PartitionSpec as P
+    B, S, d = x.shape
+    mp = flags.model_size
+    axis = flags.model_axis
+    if mp <= 1 or S % mp != 0 or (S // mp) < 2:
+        return (mlstm_prefill_into_cache(params, cfg, x) if want_cache
+                else mlstm_apply(params, cfg, x))
+    batch_axes = flags.batch_axes
+    bspec = None
+    if batch_axes and B % flags.batch_divisor == 0:
+        bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def body(params_l, x_l):
+        # pass 1: local scan from zero; also the segment's total log-forget
+        _, _, _, _, lf, _ = _mlstm_qkv_gates(params_l, cfg, x_l)
+        F_total = lf.sum(axis=1)                            # [B, H]
+        y0, end = _mlstm_forward(params_l, cfg, x_l, want_cache=True)
+        summary = {"C": end["C"], "n": end["n"], "m": end["m"],
+                   "F": F_total}
+        all_sum = jax.lax.all_gather(summary, axis)          # [P, ...]
+        idx = jax.lax.axis_index(axis)
+        P_ = mp
+
+        di = 2 * cfg.d_model
+        H = cfg.num_heads
+        hd = di // H
+        Bl = x_l.shape[0]
+        zero = {"C": jnp.zeros((Bl, H, hd, hd), jnp.float32),
+                "n": jnp.zeros((Bl, H, hd), jnp.float32),
+                "m": jnp.zeros((Bl, H), jnp.float32),
+                "F": jnp.zeros((Bl, H), jnp.float32)}
+
+        def fold(carry, i):
+            seg = jax.tree.map(lambda a: a[i], all_sum)
+            nxt = _combine_states(carry, seg)
+            # only accumulate segments strictly before my shard
+            keep = i < idx
+            out = jax.tree.map(
+                lambda a, b: jnp.where(keep, b, a), carry, nxt)
+            return out, None
+
+        prefix, _ = jax.lax.scan(fold, zero, jnp.arange(P_))
+        # pass 2: rescan with the correct initial state
+        y, _ = _mlstm_forward(params_l, cfg, x_l, want_cache=False,
+                              initial_state=prefix)
+        # global end state = fold over ALL segments (for the decode cache)
+        def fold_all(carry, i):
+            seg = jax.tree.map(lambda a: a[i], all_sum)
+            return _combine_states(carry, seg), None
+        end_all, _ = jax.lax.scan(fold_all, zero, jnp.arange(P_))
+        return y, end_all["C"], end_all["n"], end_all["m"]
+
+    y, C, n, m = jax.shard_map(
+        body,
+        in_specs=(P(), P(bspec, axis, None)),
+        out_specs=(P(bspec, axis, None), P(bspec), P(bspec), P(bspec)),
+        check_vma=False,
+    )(params, x)
+    if want_cache:
+        return y, {"C": C, "n": n, "m": m}
+    return y, None

@@ -1,0 +1,133 @@
+"""Optimizers, from raw JAX (no optax in the container).
+
+* AdamW — fp32 m/v state; for <=100B-class models.
+* Adafactor — factored second moment (row/col statistics), no first moment
+  by default; the memory-sane choice for the 398B/671B giants: state is
+  ~2/d_model of AdamW's.
+
+State pytrees mirror the param pytree so the same PartitionSpecs shard them
+(ZeRO-style: states inherit each param's sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any          # first moment (None leaves for adafactor)
+    v: Any          # second moment (tuple leaves (row, col) for adafactor)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> OptState:
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+    # m and v must be DISTINCT buffers (donation would otherwise see the
+    # same buffer twice)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: OptState, params, lr,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + \
+            weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moment
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adafactor_init(params) -> OptState:
+    def v_init(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return (row, col)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    is_leaf = lambda x: isinstance(x, tuple)
+    return OptState(jnp.zeros((), jnp.int32), None,
+                    jax.tree.map(v_init, params))
+
+
+def adafactor_update(grads, state: OptState, params, lr,
+                     decay=0.8, eps=1e-30, clip=1.0, weight_decay=0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, v, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if isinstance(v, tuple):
+            row, col = v
+            row2 = beta * row + (1 - beta) * g2.mean(-1)
+            col2 = beta * col + (1 - beta) * g2.mean(-2)
+            rms_factor = row2 / jnp.maximum(
+                row2.mean(-1, keepdims=True), eps)
+            precond = (rms_factor[..., None] * col2[..., None, :])
+            update = gf * jax.lax.rsqrt(jnp.maximum(precond, eps))
+            v_new = (row2, col2)
+        else:
+            v2 = beta * v + (1 - beta) * g2
+            update = gf * jax.lax.rsqrt(jnp.maximum(v2, eps))
+            v_new = v2
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / clip)
+        pf = p.astype(jnp.float32)
+        if weight_decay:
+            update = update + weight_decay * pf
+        return (pf - lr * update).astype(p.dtype), v_new
+
+    is_v_leaf = lambda x: isinstance(x, tuple) or not isinstance(x, dict)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = jax.tree.leaves(state.v, is_leaf=lambda x: isinstance(x, tuple))
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, OptState(step, None, new_v)
+
+
+# ---------------------------------------------------------------------------
+
+def make_optimizer(name: str) -> Tuple[Callable, Callable]:
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    return adamw_init, adamw_update

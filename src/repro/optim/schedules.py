@@ -1,0 +1,37 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM
+arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> stable at peak -> sharp exponential decay in the last
+    ``decay_frac`` of training."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    decay_start = total * (1.0 - decay_frac)
+    t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                 0.0, 1.0)
+    decay = peak_lr * jnp.exp(jnp.log(min_ratio) * t)
+    stable = jnp.full_like(step, peak_lr)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, stable, decay))
+    return out
+
+
+def make_schedule(name: str, **kw):
+    if name == "wsd":
+        return lambda s: wsd_schedule(s, **kw)
+    return lambda s: cosine_schedule(s, **kw)

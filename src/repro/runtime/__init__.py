@@ -1,0 +1,5 @@
+from .steps import (cross_entropy, make_decode_step, make_prefill_step,
+                    make_train_step, TrainState)
+
+__all__ = ["cross_entropy", "make_train_step", "make_prefill_step",
+           "make_decode_step", "TrainState"]

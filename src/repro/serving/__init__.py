@@ -1,0 +1,8 @@
+from .engine import LLMEngine
+from .calculators import (BatcherCalculator, UnbatchCalculator,
+                          LLMPrefillCalculator, LLMDecodeLoopCalculator)
+from .pipeline import build_serving_graph
+
+__all__ = ["LLMEngine", "BatcherCalculator", "UnbatchCalculator",
+           "LLMPrefillCalculator", "LLMDecodeLoopCalculator",
+           "build_serving_graph"]

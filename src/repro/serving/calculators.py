@@ -1,0 +1,129 @@
+"""Serving calculators: request batching, LLM prefill/decode, unbatching.
+
+This is the paper's framework applied to LLM serving: requests are packets
+on a stream; a batcher groups them (the flow-limiter pattern bounds
+in-flight batches); the engine node runs jitted sharded inference; an
+unbatch node fans results back out to per-request timestamps.  The default
+input policy guarantees responses align with their originating requests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from ..core.calculator import Calculator, CalculatorContext
+from ..core.contract import AnyType, contract
+from ..core.registry import register_calculator
+from ..core.timestamp import Timestamp
+
+
+@register_calculator
+class BatcherCalculator(Calculator):
+    """Groups request packets into fixed-size padded batches.
+
+    Input:  REQUEST — dict {'tokens': 1-D int32 list/array, 'id': any}
+    Output: BATCH   — dict {'tokens': [B,S] int32, 'ids': [...],
+                            'timestamps': [...], 'lengths': [...]}
+    Options: batch_size (default 4), pad_id (default 0),
+             max_wait (packets to wait before flushing a short batch).
+    """
+
+    CONTRACT = (contract()
+                .add_input("REQUEST", AnyType)
+                .add_output("BATCH")
+                .set_input_policy("immediate"))
+
+    def open(self, ctx: CalculatorContext) -> None:
+        self.batch_size = int(ctx.options.get("batch_size", 4))
+        self.pad_id = int(ctx.options.get("pad_id", 0))
+        self.pending: List = []
+
+    def _flush(self, ctx: CalculatorContext) -> None:
+        if not self.pending:
+            return
+        reqs = self.pending
+        self.pending = []
+        S = max(len(r.payload["tokens"]) for r in reqs)
+        B = len(reqs)
+        toks = np.full((B, S), self.pad_id, np.int32)
+        lengths = []
+        for i, r in enumerate(reqs):
+            t = np.asarray(r.payload["tokens"], np.int32)
+            toks[i, S - len(t):] = t          # left-pad
+            lengths.append(len(t))
+        batch = {"tokens": toks,
+                 "ids": [r.payload.get("id") for r in reqs],
+                 "timestamps": [r.timestamp for r in reqs],
+                 "lengths": lengths,
+                 "max_new_tokens": max(r.payload.get("max_new_tokens", 16)
+                                       for r in reqs)}
+        # the batch carries the timestamp of its newest request
+        ctx.outputs("BATCH").add(batch, reqs[-1].timestamp)
+
+    def process(self, ctx: CalculatorContext) -> None:
+        p = ctx.inputs["REQUEST"]
+        if p.is_empty():
+            return
+        self.pending.append(p)
+        if len(self.pending) >= self.batch_size:
+            self._flush(ctx)
+
+    def close(self, ctx: CalculatorContext) -> None:
+        self._flush(ctx)
+
+
+@register_calculator
+class LLMPrefillCalculator(Calculator):
+    """Runs engine.generate on a BATCH (prefill + greedy decode).
+
+    Side packet: engine — an LLMEngine.
+    Pin this node to a dedicated executor in the GraphConfig for thread
+    locality (paper §3.6's mobile-inference advice, unchanged on TPU hosts).
+    """
+
+    CONTRACT = (contract()
+                .add_input("BATCH", AnyType)
+                .add_output("BATCH_RESULT")
+                .add_input_side_packet("engine", AnyType))
+
+    def open(self, ctx: CalculatorContext) -> None:
+        self._engine = ctx.side("engine")
+
+    def process(self, ctx: CalculatorContext) -> None:
+        p = ctx.inputs["BATCH"]
+        if p.is_empty():
+            return
+        batch = p.payload
+        out = self._engine.generate(batch["tokens"],
+                                    batch["max_new_tokens"])
+        ctx.outputs("BATCH_RESULT").add(dict(batch, output_tokens=out),
+                                        p.timestamp)
+
+
+# Backwards-compatible alias used by the serving pipeline docs
+LLMDecodeLoopCalculator = LLMPrefillCalculator
+
+
+@register_calculator
+class UnbatchCalculator(Calculator):
+    """Fans a BATCH_RESULT back out to one packet per original request, at
+    each request's ORIGINAL timestamp — responses stay associated with the
+    requests that produced them (the paper's timestamp-as-sync-key idea)."""
+
+    CONTRACT = (contract()
+                .add_input("BATCH_RESULT", AnyType)
+                .add_output("RESPONSE"))
+
+    def open(self, ctx: CalculatorContext) -> None:
+        self._emitted: List[Timestamp] = []
+
+    def process(self, ctx: CalculatorContext) -> None:
+        p = ctx.inputs["BATCH_RESULT"]
+        if p.is_empty():
+            return
+        batch = p.payload
+        for i, (rid, ts) in enumerate(zip(batch["ids"],
+                                          batch["timestamps"])):
+            ctx.outputs("RESPONSE").add(
+                {"id": rid, "tokens": batch["output_tokens"][i]}, ts)

@@ -1,0 +1,59 @@
+"""LLM inference engine: jitted prefill + decode with KV/SSM cache.
+
+The engine is the "model inference" component consumed by the MediaPipe
+graph's InferenceCalculator (paper §6.1 'performs ML inference ... using an
+inference engine').  On a pod it holds pjit-sharded params; in the examples
+and tests it runs a reduced config on CPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ArchConfig
+from ..models.model import Model
+from ..models.transformer import DEFAULT_FLAGS, RuntimeFlags
+from ..runtime.steps import make_decode_step, make_prefill_step
+
+
+class LLMEngine:
+    def __init__(self, cfg: ArchConfig, params=None, *,
+                 max_len: int = 512, seed: int = 0,
+                 flags: RuntimeFlags = DEFAULT_FLAGS):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.max_len = max_len
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(self.model, max_len,
+                                                  flags))
+        self._decode = jax.jit(make_decode_step(self.model, flags))
+
+    def generate(self, tokens: np.ndarray, max_new_tokens: int = 16,
+                 eos_id: Optional[int] = None) -> np.ndarray:
+        """Greedy-decode a batch. tokens: [B, S] int32 -> [B, max_new]."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, S = tokens.shape
+        batch = {"tokens": tokens}
+        next_tok, cache = self._prefill(self.params, batch)
+        out = [np.asarray(next_tok)]
+        cur = next_tok[:, None]
+        pos = S
+        for _ in range(max_new_tokens - 1):
+            cur, cache = self._decode(self.params, cur, cache,
+                                      jnp.asarray(pos, jnp.int32))
+            out.append(np.asarray(cur[:, 0]))
+            pos += 1
+            if eos_id is not None and bool((cur == eos_id).all()):
+                break
+        return np.stack(out, axis=1)
+
+    def __call__(self, payload):
+        """Engine interface for InferenceCalculator: payload is a dict
+        {'tokens': [B,S] int32, 'max_new_tokens': int}."""
+        return self.generate(payload["tokens"],
+                             payload.get("max_new_tokens", 16))

@@ -1,0 +1,62 @@
+"""The serving pipeline graph — MediaPipe's flow-limited inference pattern
+(paper Fig. 3 + §6.1) applied to LLM serving:
+
+    requests -> FlowLimiter -> Batcher -> LLMPrefill -> Unbatch -> responses
+                     ^                                      |
+                     +----------- FINISHED loopback ---------+
+
+The flow limiter bounds in-flight batches so request bursts do not queue
+unbounded work behind the accelerator; drops happen UPSTREAM of batching
+(no wasted prefill).  The heavy inference node runs on a dedicated executor
+(paper §3.6's thread-locality advice).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.graph_config import ExecutorConfig, GraphConfig
+
+
+def build_serving_graph(*, batch_size: int = 4, max_in_flight: int = 2,
+                        queue_size: int = 256,
+                        drop_on_overload: bool = False) -> GraphConfig:
+    cfg = GraphConfig(
+        input_streams=["requests"],
+        output_streams=["responses"],
+        input_side_packets=["engine"],
+        executors=[ExecutorConfig("inference", 1)],
+        num_threads=4,
+        enable_tracer=True,
+    )
+    cfg.add_node(
+        "FlowLimiterCalculator", name="limiter",
+        inputs={"IN": "requests", "FINISHED": "responses_loop"},
+        outputs={"OUT": "admitted"},
+        options={"max_in_flight": max_in_flight * batch_size,
+                 "queue_size": 0 if drop_on_overload else queue_size},
+        back_edge_inputs=["FINISHED"],
+    )
+    cfg.add_node(
+        "BatcherCalculator", name="batcher",
+        inputs={"REQUEST": "admitted"},
+        outputs={"BATCH": "batches"},
+        options={"batch_size": batch_size},
+    )
+    cfg.add_node(
+        "LLMPrefillCalculator", name="engine",
+        inputs={"BATCH": "batches"},
+        outputs={"BATCH_RESULT": "batch_results"},
+        input_side_packets={"engine": "engine"},
+        executor="inference",
+    )
+    cfg.add_node(
+        "UnbatchCalculator", name="unbatch",
+        inputs={"BATCH_RESULT": "batch_results"},
+        outputs={"RESPONSE": "responses"},
+    )
+    cfg.add_node(
+        "PassThroughCalculator", name="loop",
+        inputs={"responses": "responses"},
+        outputs={"responses": "responses_loop"},
+    )
+    return cfg

@@ -1,0 +1,5 @@
+from .rules import (RULES, batch_specs, cache_specs, param_specs,
+                    resolve_spec, train_state_specs)
+
+__all__ = ["RULES", "resolve_spec", "param_specs", "batch_specs",
+           "cache_specs", "train_state_specs"]

@@ -1,0 +1,215 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+``resolve_spec`` is deliberately defensive: a logical axis is only mapped to
+a mesh axis if the dimension is divisible by the axis size and the mesh axis
+has not been claimed by an earlier dimension of the same tensor — otherwise
+that dimension is replicated.  This is what lets one rule set cover ten
+architectures (e.g. kv_heads=8 on a 16-way model axis falls back to
+replication, while 64 query heads shard 16-way).
+
+Rule summary (single-pod mesh ("data","model"); multi-pod adds "pod"):
+  params:  embed→data (ZeRO/FSDP: optimizer state inherits), heads/mlp/
+           experts/vocab/ssm_inner→model
+  batch:   →(pod,data)
+  decode caches: batch→(pod,data), sequence→model (context-parallel cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.params import ParamSpec, logical_axes
+
+# logical axis -> mesh axis (or "batch" placeholder resolved per mesh)
+RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "experts_vec": "model",
+    "ssm_inner": "model",
+    "ssm_inner_vec": "model",
+    "ssm_inner_b": None,
+    "embed_b": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "qk_dim": None,
+    "layers": None,
+    # activation / cache axes
+    "batch": "__batch__",
+    "seq": "model",
+    "mlstm_dk": "model",
+    "embed_sharded": "model",
+    "kv_lora_sharded": "model",
+    "head_dim_sharded": "model",
+}
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(shape: Tuple[int, ...],
+                 axes: Tuple[Optional[str], ...],
+                 mesh: Mesh,
+                 rules: Optional[Dict[str, Any]] = None) -> P:
+    rules = rules or RULES
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if mesh_ax == "__batch__":
+            mesh_ax = _batch_axes(mesh)
+        if mesh_ax is None:
+            parts.append(None)
+            continue
+        tup = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        # drop already-claimed axes; then check divisibility of the rest
+        tup = tuple(a for a in tup if a not in used)
+        if not tup or dim % _axis_size(mesh, tup) != 0:
+            parts.append(None)
+            continue
+        used.update(tup)
+        parts.append(tup[0] if len(tup) == 1 else tup)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _spec_tree_from_template(template, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: resolve_spec(s.shape, s.axes, mesh, rules),
+        template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(template, mesh: Mesh, rules=None):
+    """NamedSharding pytree for a param template."""
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        _spec_tree_from_template(template, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_specs(template, mesh: Mesh, optimizer: str, rules=None):
+    """Shardings for TrainState(params, OptState(step, m, v)) — optimizer
+    state leaves inherit the param sharding (ZeRO via embed→data)."""
+    from ..optim.optimizers import OptState
+    from ..runtime.steps import TrainState
+    pspec = _spec_tree_from_template(template, mesh, rules)
+
+    def as_shard(p):
+        return NamedSharding(mesh, p)
+
+    params_sh = jax.tree.map(as_shard, pspec,
+                             is_leaf=lambda x: isinstance(x, P))
+    step_sh = NamedSharding(mesh, P())
+    if optimizer == "adafactor":
+        def v_spec(spec_leaf, tmpl_leaf):
+            shape, axes = tmpl_leaf.shape, tmpl_leaf.axes
+            if len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8:
+                row = resolve_spec(shape[:-1], axes[:-1], mesh, rules)
+                col = resolve_spec(shape[:-2] + shape[-1:],
+                                   axes[:-2] + axes[-1:], mesh, rules)
+                return (NamedSharding(mesh, row), NamedSharding(mesh, col))
+            return NamedSharding(mesh, resolve_spec(shape, axes, mesh, rules))
+
+        v_sh = jax.tree.map(v_spec, pspec, template,
+                            is_leaf=lambda x: isinstance(x, P))
+        m_sh = None
+    else:
+        v_sh = jax.tree.map(as_shard, pspec,
+                            is_leaf=lambda x: isinstance(x, P))
+        m_sh = v_sh
+    return TrainState(params_sh, OptState(step_sh, m_sh, v_sh))
+
+
+# ---------------------------------------------------------------------------
+# batch / input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shapes: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh):
+    out = {}
+    for name, sds in batch_shapes.items():
+        axes: Tuple[Optional[str], ...] = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[name] = NamedSharding(mesh, resolve_spec(sds.shape, axes, mesh))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs
+# ---------------------------------------------------------------------------
+
+_MIXER_CACHE_AXES = {
+    # GQA / cross-attn KV — axes chosen mesh-aware in _kv_cache_axes
+    ("k", 4): "__kv__",
+    ("v", 4): "__kv__",
+    # MLA latent: shard the lora rank (contract dim -> partial scores +
+    # small all-reduce) rather than the sequence (full-cache all-gather)
+    ("c_kv", 3): ("batch", None, "kv_lora_sharded"),
+    ("k_rope", 3): ("batch", "seq", None),
+    # mamba
+    ("conv", 3): ("batch", None, "ssm_inner"),
+    ("h", 3): ("batch", "ssm_inner", None),
+    # mLSTM
+    ("C", 4): ("batch", None, "mlstm_dk", None),
+    ("n", 3): ("batch", None, "mlstm_dk"),
+    ("m", 2): ("batch", "embed_sharded"),
+    # sLSTM ([B, d]; mLSTM's m [B,H] falls back to replication on dim 1)
+    ("c", 2): ("batch", "embed_sharded"),
+    ("n", 2): ("batch", "embed_sharded"),
+    ("h", 2): ("batch", "embed_sharded"),
+}
+
+
+def _kv_cache_axes(shape, mesh: Mesh):
+    """[B, S, KV, hd] preference: kv_heads -> head_dim -> sequence.
+    Head/lane sharding keeps attention local (partial-sum all-reduce of
+    small score tensors); sequence sharding is the fallback and costs a
+    full-cache all-gather under plain SPMD."""
+    m = mesh.shape["model"]
+    B, S, KV, hd = shape
+    if KV % m == 0:
+        return ("batch", None, "kv_heads", None)
+    if hd % m == 0:
+        return ("batch", None, None, "head_dim_sharded")
+    return ("batch", "seq", None, None)
+
+
+def _cache_leaf_axes(key: str, shape, scanned: bool, mesh: Mesh):
+    eff_shape = shape[1:] if scanned else shape
+    axes = _MIXER_CACHE_AXES.get((key, len(eff_shape)))
+    if axes == "__kv__":
+        axes = _kv_cache_axes(eff_shape, mesh)
+    if axes is None:
+        axes = ("batch",) + (None,) * (len(eff_shape) - 1)
+    return ((None,) + axes) if scanned else axes
+
+
+def cache_specs(cache_sds, mesh: Mesh):
+    """Walk the abstract-cache pytree and assign shardings by leaf name."""
+    def walk(tree, scanned: bool):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, scanned or k == "blocks")
+            else:
+                axes = _cache_leaf_axes(k, v.shape, scanned, mesh)
+                out[k] = NamedSharding(
+                    mesh, resolve_spec(v.shape, axes, mesh))
+        return out
+
+    return walk(cache_sds, False)

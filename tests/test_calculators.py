@@ -1,0 +1,175 @@
+"""Calculator library tests: demux/mux, gate, cloner, frame select,
+detection merge, interpolation, tracer, visualizer."""
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401
+from repro.core import Graph, GraphConfig, Timestamp
+from repro.core import visualizer
+from repro.calculators.perception import Detection
+
+
+def run_graph(cfg, inputs, outputs, side_packets=None, timeout=30):
+    """inputs: {stream: [(t, payload)]}; outputs: [stream] -> collected."""
+    g = Graph(cfg, side_packets=side_packets)
+    got = {s: [] for s in outputs}
+    for s in outputs:
+        g.observe_output_stream(
+            s, lambda p, s=s: got[s].append((p.timestamp.value, p.payload)))
+    g.start_run()
+    events = sorted([(t, s, v) for s, tv in inputs.items()
+                     for t, v in tv])
+    for t, s, v in events:
+        g.add_packet_to_input_stream(s, v, t)
+    g.close_all_input_streams()
+    g.wait_until_done(timeout=timeout)
+    return got, g
+
+
+class TestDemuxMux:
+    def test_roundtrip(self):
+        cfg = GraphConfig(input_streams=["in"], output_streams=["out"])
+        cfg.add_node("DemuxCalculator", name="demux",
+                     inputs={"IN": "in"},
+                     outputs={"OUT0": "d0", "OUT1": "d1"})
+        cfg.add_node("MuxCalculator", name="mux",
+                     inputs={"d0": "d0", "d1": "d1"},
+                     outputs={"OUT": "out"})
+        got, _ = run_graph(cfg, {"in": [(t, t * 10) for t in range(8)]},
+                           ["out"])
+        assert got["out"] == [(t, t * 10) for t in range(8)]
+
+    def test_demux_alternates(self):
+        cfg = GraphConfig(input_streams=["in"],
+                          output_streams=["d0", "d1"])
+        cfg.add_node("DemuxCalculator",
+                     inputs={"IN": "in"},
+                     outputs={"OUT0": "d0", "OUT1": "d1"})
+        got, _ = run_graph(cfg, {"in": [(t, t) for t in range(6)]},
+                           ["d0", "d1"])
+        assert [v for _, v in got["d0"]] == [0, 2, 4]
+        assert [v for _, v in got["d1"]] == [1, 3, 5]
+
+
+class TestGate:
+    def test_gating(self):
+        cfg = GraphConfig(input_streams=["in", "allow"],
+                          output_streams=["out"])
+        cfg.add_node("GateCalculator",
+                     inputs={"IN": "in", "ALLOW": "allow"},
+                     outputs={"OUT": "out"})
+        got, _ = run_graph(
+            cfg,
+            {"in": [(1, "a"), (3, "b"), (5, "c")],
+             "allow": [(0, True), (2, False), (4, True)]},
+            ["out"])
+        vals = [v for _, v in got["out"]]
+        assert vals == ["a", "c"]
+
+
+class TestPacketCloner:
+    def test_clone_latest(self):
+        cfg = GraphConfig(input_streams=["value", "tick"],
+                          output_streams=["out"])
+        cfg.add_node("PacketClonerCalculator",
+                     inputs={"VALUE": "value", "TICK": "tick"},
+                     outputs={"OUT": "out"})
+        got, _ = run_graph(
+            cfg,
+            {"value": [(0, "v0"), (10, "v1")],
+             "tick": [(2, "t"), (4, "t"), (12, "t")]},
+            ["out"])
+        assert got["out"] == [(2, "v0"), (4, "v0"), (12, "v1")]
+
+
+class TestFrameSelect:
+    def test_every_n_with_bound_propagation(self):
+        """Dropped timestamps must advance the bound so a downstream
+        default-policy join with the original stream stays live."""
+        cfg = GraphConfig(input_streams=["in"], output_streams=["sel"])
+        cfg.add_node("FrameSelectCalculator",
+                     inputs={"IN": "in"}, outputs={"OUT": "sel"},
+                     options={"every": 3})
+        got, _ = run_graph(cfg, {"in": [(t, t) for t in range(9)]},
+                           ["sel"])
+        assert [t for t, _ in got["sel"]] == [0, 3, 6]
+
+
+class TestDetectionMerge:
+    def test_dedupes_by_iou(self):
+        d1 = Detection((0.1, 0.1, 0.3, 0.3), "cat", 0.9)
+        d2 = Detection((0.11, 0.11, 0.31, 0.31), "cat", 0.8, track_id=7)
+        d3 = Detection((0.6, 0.6, 0.8, 0.8), "dog", 0.7)
+        cfg = GraphConfig(input_streams=["det", "trk"],
+                          output_streams=["merged"])
+        cfg.add_node("DetectionMergeCalculator",
+                     inputs={"DETECTIONS": "det", "TRACKED": "trk"},
+                     outputs={"MERGED": "merged", "RESET": "reset"})
+        got, _ = run_graph(cfg, {"det": [(0, [d1, d3])],
+                                 "trk": [(0, [d2])]},
+                           ["merged"])
+        merged = got["merged"][0][1]
+        assert len(merged) == 2                  # d1 deduped into d2's track
+        cat = next(m for m in merged if m.label == "cat")
+        assert cat.track_id == 7 and cat.score == 0.9
+
+
+class TestTemporalInterpolation:
+    def test_linear_interp(self):
+        cfg = GraphConfig(input_streams=["value", "tick"],
+                          output_streams=["out"])
+        cfg.add_node("TemporalInterpolationCalculator",
+                     inputs={"VALUE": "value", "TICK": "tick"},
+                     outputs={"OUT": "out"})
+        got, _ = run_graph(
+            cfg,
+            {"value": [(0, np.array([0.0])), (10, np.array([10.0]))],
+             "tick": [(5, "t")]},
+            ["out"])
+        (t, v), = got["out"]
+        assert t == 5 and abs(float(v[0]) - 5.0) < 1e-6
+
+
+class TestTracerVisualizer:
+    def _graph(self):
+        cfg = GraphConfig(input_streams=["in"], output_streams=["out"],
+                          enable_tracer=True)
+        cfg.add_node("PassThroughCalculator", name="pt",
+                     inputs={"in": "in"}, outputs={"in": "out"})
+        return cfg
+
+    def test_tracer_records_and_histograms(self):
+        got, g = run_graph(self._graph(),
+                           {"in": [(t, t) for t in range(5)]}, ["out"])
+        evs = g.tracer.events()
+        assert any(e.event_type == "RUN_START" for e in evs)
+        assert any(e.event_type == "PACKET_EMIT" for e in evs)
+        hist = g.tracer.node_histograms(g.node_names())
+        assert hist["pt"]["count"] >= 5
+        assert g.tracer.stream_histograms().get("in", 0) >= 5
+
+    def test_critical_path(self):
+        got, g = run_graph(self._graph(),
+                           {"in": [(3, "x")]}, ["out"])
+        assert g.tracer.critical_path(g.node_names(), 3) == ["pt"]
+
+    def test_latency(self):
+        got, g = run_graph(self._graph(), {"in": [(0, "x")]}, ["out"])
+        assert g.tracer.latency_ns("out", 0) >= 0
+
+    def test_null_tracer_when_disabled(self):
+        cfg = self._graph()
+        cfg.enable_tracer = False
+        got, g = run_graph(cfg, {"in": [(0, 1)]}, ["out"])
+        assert g.tracer.events() == []
+
+    def test_visualizer_outputs(self):
+        cfg = self._graph()
+        ascii_art = visualizer.topology_ascii(cfg)
+        assert "PassThroughCalculator" in ascii_art
+        dot = visualizer.topology_dot(cfg)
+        assert "digraph" in dot and "pt" in dot
+        got, g = run_graph(cfg, {"in": [(t, t) for t in range(3)]},
+                           ["out"])
+        tl = visualizer.timeline_ascii(g.tracer, g.node_names())
+        assert "timeline" in tl

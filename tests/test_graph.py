@@ -1,0 +1,274 @@
+"""Graph construction, validation, subgraphs, side packets, pollers,
+error handling, executors (paper §3.5-3.6)."""
+import threading
+import time
+
+import pytest
+
+import repro.calculators  # noqa: F401 - registers library calculators
+from repro.core import (AnyType, Calculator, CalculatorContext, Graph,
+                        GraphConfig, GraphError, GraphValidationError,
+                        NodeConfig, Timestamp, contract, make_packet,
+                        register_calculator, register_subgraph, validate)
+
+
+@register_calculator
+class AddOneCalculator(Calculator):
+    CONTRACT = contract().add_input("IN", int).add_output("OUT", int)
+
+    def process(self, ctx):
+        p = ctx.inputs["IN"]
+        if not p.is_empty():
+            ctx.outputs("OUT").add(p.payload + 1, p.timestamp)
+
+
+@register_calculator
+class FailingCalculator(Calculator):
+    CONTRACT = contract().add_input("IN", AnyType).add_output("OUT")
+
+    def process(self, ctx):
+        raise RuntimeError("boom")
+
+
+@register_calculator
+class SideProducerCalculator(Calculator):
+    CONTRACT = (contract().add_input("IN", AnyType)
+                .add_output_side_packet("total"))
+
+    def open(self, ctx):
+        self.total = 0
+
+    def process(self, ctx):
+        if not ctx.inputs["IN"].is_empty():
+            self.total += ctx.inputs["IN"].payload
+
+    def close(self, ctx):
+        ctx.output_side_packet("total", self.total)
+
+
+def run_chain(values, n_nodes=3):
+    cfg = GraphConfig(input_streams=["s0"], output_streams=[f"s{n_nodes}"])
+    for i in range(n_nodes):
+        cfg.add_node("AddOneCalculator", name=f"n{i}",
+                     inputs={"IN": f"s{i}"}, outputs={"OUT": f"s{i+1}"})
+    g = Graph(cfg)
+    out = []
+    g.observe_output_stream(f"s{n_nodes}", lambda p: out.append(
+        (p.timestamp.value, p.payload)))
+    g.start_run()
+    for t, v in enumerate(values):
+        g.add_packet_to_input_stream("s0", v, t)
+    g.close_all_input_streams()
+    g.wait_until_done(timeout=30)
+    return out
+
+
+class TestGraphBasics:
+    def test_chain(self):
+        assert run_chain([10, 20, 30]) == [(0, 13), (1, 23), (2, 33)]
+
+    def test_poller(self):
+        cfg = GraphConfig(input_streams=["a"], output_streams=["b"])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "b"})
+        g = Graph(cfg)
+        poller = g.add_output_stream_poller("b")
+        g.start_run()
+        g.add_packet_to_input_stream("a", 1, 0)
+        g.add_packet_to_input_stream("a", 2, 1)
+        g.close_all_input_streams()
+        assert poller.next().payload == 2
+        assert poller.next().payload == 3
+        g.wait_until_done(timeout=30)
+        assert poller.next() is None    # closed and drained
+
+    def test_output_side_packet(self):
+        cfg = GraphConfig(input_streams=["a"],
+                          output_side_packets=["total"])
+        cfg.add_node("SideProducerCalculator", inputs={"IN": "a"},
+                     output_side_packets={"total": "total"})
+        g = Graph(cfg)
+        g.start_run()
+        for t, v in enumerate([1, 2, 3, 4]):
+            g.add_packet_to_input_stream("a", v, t)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        assert g.output_side_packet("total") == 10
+
+    def test_side_packet_gates_open(self):
+        """A node whose side packet is produced by another node opens late
+        but still correctly."""
+        cfg = GraphConfig(input_streams=["a", "b"],
+                          output_streams=["out"])
+        cfg.add_node("SideProducerCalculator", name="producer",
+                     inputs={"IN": "a"},
+                     output_side_packets={"total": "bias"})
+        cfg.add_node("SinkWithSide", name="consumer",
+                     inputs={"IN": "b"}, outputs={"OUT": "out"},
+                     input_side_packets={"bias": "bias"})
+
+        @register_calculator(name="SinkWithSide")
+        class _SinkWithSide(Calculator):
+            CONTRACT = (contract().add_input("IN", AnyType)
+                        .add_output("OUT")
+                        .add_input_side_packet("bias", AnyType))
+
+            def open(self, ctx):
+                self.bias = ctx.side("bias")
+
+            def process(self, ctx):
+                p = ctx.inputs["IN"]
+                if not p.is_empty():
+                    ctx.outputs("OUT").add(p.payload + self.bias,
+                                           p.timestamp)
+
+        g = Graph(cfg)
+        out = []
+        g.observe_output_stream("out", lambda p: out.append(p.payload))
+        g.start_run()
+        g.add_packet_to_input_stream("a", 5, 0)
+        g.add_packet_to_input_stream("b", 100, 0)
+        g.close_input_stream("a")   # producer closes -> side packet lands
+        time.sleep(0.1)
+        g.add_packet_to_input_stream("b", 200, 1)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        assert out == [105, 205]
+
+    def test_error_terminates_run(self):
+        cfg = GraphConfig(input_streams=["a"], output_streams=["b"])
+        cfg.add_node("FailingCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "b"})
+        g = Graph(cfg)
+        g.start_run()
+        g.add_packet_to_input_stream("a", 1, 0)
+        g.close_all_input_streams()
+        with pytest.raises(GraphError, match="boom"):
+            g.wait_until_done(timeout=30)
+
+    def test_cancel(self):
+        cfg = GraphConfig(input_streams=["a"], output_streams=["b"])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "b"})
+        g = Graph(cfg)
+        g.start_run()
+        g.cancel()
+        with pytest.raises(GraphError, match="cancel"):
+            g.wait_until_done(timeout=10)
+
+
+class TestValidation:
+    def test_unknown_calculator(self):
+        cfg = GraphConfig()
+        cfg.add_node("NoSuchCalculator")
+        with pytest.raises((GraphValidationError, KeyError)):
+            Graph(cfg)
+
+    def test_missing_producer(self):
+        cfg = GraphConfig(output_streams=["out"])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "nowhere"},
+                     outputs={"OUT": "out"})
+        with pytest.raises(GraphValidationError, match="no producer"):
+            Graph(cfg)
+
+    def test_double_producer(self):
+        cfg = GraphConfig(input_streams=["a"])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "dup"})
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "dup"})
+        with pytest.raises(GraphValidationError, match="produced by both"):
+            Graph(cfg)
+
+    def test_type_mismatch(self):
+        @register_calculator
+        class StrSource(Calculator):
+            CONTRACT = contract().add_output("OUT", str)
+
+            def process(self, ctx):
+                return False
+
+        cfg = GraphConfig()
+        cfg.add_node("StrSource", outputs={"OUT": "s"})
+        cfg.add_node("AddOneCalculator", inputs={"IN": "s"},
+                     outputs={"OUT": "t"})
+        with pytest.raises(GraphValidationError, match="type mismatch"):
+            Graph(cfg)
+
+    def test_unconnected_required_input(self):
+        cfg = GraphConfig()
+        cfg.add_node("AddOneCalculator", outputs={"OUT": "x"})
+        with pytest.raises(GraphValidationError, match="required input"):
+            Graph(cfg)
+
+    def test_undeclared_cycle_rejected(self):
+        cfg = GraphConfig(input_streams=["a"])
+        cfg.add_node("TwoInAdd", name="x",
+                     inputs={"IN": "a", "LOOP": "y_out"},
+                     outputs={"OUT": "x_out"})
+        cfg.add_node("AddOneCalculator", name="y",
+                     inputs={"IN": "x_out"}, outputs={"OUT": "y_out"})
+
+        @register_calculator(name="TwoInAdd")
+        class _TwoInAdd(Calculator):
+            CONTRACT = (contract().add_input("IN", AnyType)
+                        .add_input("LOOP", AnyType, optional=True)
+                        .add_output("OUT"))
+
+            def process(self, ctx):
+                pass
+
+        with pytest.raises(GraphValidationError, match="cycle"):
+            Graph(cfg)
+
+
+class TestSubgraphs:
+    def test_expansion_semantics(self):
+        sub = GraphConfig(input_streams=["in"], output_streams=["out"])
+        sub.add_node("AddOneCalculator", name="inner1",
+                     inputs={"IN": "in"}, outputs={"OUT": "mid"})
+        sub.add_node("AddOneCalculator", name="inner2",
+                     inputs={"IN": "mid"}, outputs={"OUT": "out"})
+        register_subgraph("AddTwoSubgraph", sub)
+
+        cfg = GraphConfig(input_streams=["x"], output_streams=["y"])
+        cfg.add_node("AddTwoSubgraph", name="plus2",
+                     inputs={"in": "x"}, outputs={"out": "mid"})
+        cfg.add_node("AddOneCalculator", inputs={"IN": "mid"},
+                     outputs={"OUT": "y"})
+        g = Graph(cfg)
+        out = []
+        g.observe_output_stream("y", lambda p: out.append(p.payload))
+        g.start_run()
+        g.add_packet_to_input_stream("x", 0, 0)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        assert out == [3]
+        # expanded nodes are namespaced
+        names = [n.name for n in g.nodes]
+        assert any("plus2/" in n for n in names)
+
+
+class TestExecutors:
+    def test_dedicated_executor_runs(self):
+        from repro.core import ExecutorConfig
+        cfg = GraphConfig(input_streams=["a"], output_streams=["b"],
+                          executors=[ExecutorConfig("heavy", 2)])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "b"}, executor="heavy")
+        g = Graph(cfg)
+        out = []
+        g.observe_output_stream("b", lambda p: out.append(p.payload))
+        g.start_run()
+        for t in range(20):
+            g.add_packet_to_input_stream("a", t, t)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        assert out == [t + 1 for t in range(20)]
+
+    def test_unknown_executor_rejected(self):
+        cfg = GraphConfig(input_streams=["a"])
+        cfg.add_node("AddOneCalculator", inputs={"IN": "a"},
+                     outputs={"OUT": "b"}, executor="ghost")
+        with pytest.raises(GraphError, match="unknown executor"):
+            Graph(cfg)

@@ -1,0 +1,142 @@
+"""Input-policy semantics (paper §4.1.3): the Figure-2 example, the four
+default-policy guarantees (as properties over random arrival interleavings),
+and the immediate / sync-set policies."""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Timestamp, make_packet
+from repro.core.input_policy import (DefaultInputPolicy,
+                                     ImmediateInputPolicy,
+                                     SyncSetInputPolicy)
+from repro.core.stream import InputStreamQueue
+
+
+def make_queues(names):
+    return {n: InputStreamQueue(n, "node", n) for n in names}
+
+
+class TestDefaultPolicy:
+    def test_figure2(self):
+        """FOO has packets @10,20; BAR @10,30.  10 and 20 are processable;
+        30 must wait (FOO unsettled past 20)."""
+        qs = make_queues(["FOO", "BAR"])
+        p = DefaultInputPolicy()
+        qs["FOO"].add(make_packet("f10", 10))
+        qs["FOO"].add(make_packet("f20", 20))
+        qs["BAR"].add(make_packet("b10", 10))
+        qs["BAR"].add(make_packet("b30", 30))
+
+        t = p.ready_timestamp(qs)
+        assert t == Timestamp(10)
+        s = p.pop_input_set(qs, t)
+        assert s["FOO"].payload == "f10" and s["BAR"].payload == "b10"
+
+        t = p.ready_timestamp(qs)
+        assert t == Timestamp(20)
+        s = p.pop_input_set(qs, t)
+        assert s["FOO"].payload == "f20" and s["BAR"].is_empty()
+
+        # 30 not processable: FOO's bound is 21
+        assert p.ready_timestamp(qs) is None
+        # a FOO packet at 25 must be processed before 30
+        qs["FOO"].add(make_packet("f25", 25))
+        assert p.ready_timestamp(qs) == Timestamp(25)
+
+    def test_bound_settles_without_packet(self):
+        qs = make_queues(["A", "B"])
+        p = DefaultInputPolicy()
+        qs["A"].add(make_packet("a5", 5))
+        assert p.ready_timestamp(qs) is None     # B unsettled
+        qs["B"].advance_bound(Timestamp(6))      # B settled through 5
+        assert p.ready_timestamp(qs) == Timestamp(5)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.data())
+    def test_deterministic_under_arrival_order(self, data):
+        """Guarantees 1-3: same packets, any arrival interleaving ->
+        identical sequence of input sets."""
+        stamps_a = sorted(data.draw(st.sets(
+            st.integers(0, 30), min_size=1, max_size=8)))
+        stamps_b = sorted(data.draw(st.sets(
+            st.integers(0, 30), min_size=1, max_size=8)))
+
+        def run(order_seed):
+            qs = make_queues(["A", "B"])
+            p = DefaultInputPolicy()
+            events = ([("A", t) for t in stamps_a]
+                      + [("B", t) for t in stamps_b])
+            # interleave while preserving per-stream order
+            ia = ib = 0
+            seq = []
+            rnd = data.draw(st.randoms(use_true_random=False),
+                            label=f"order{order_seed}")
+            while ia < len(stamps_a) or ib < len(stamps_b):
+                pick_a = ib >= len(stamps_b) or \
+                    (ia < len(stamps_a) and rnd.random() < 0.5)
+                if pick_a:
+                    qs["A"].add(make_packet(("A", stamps_a[ia]),
+                                            stamps_a[ia]))
+                    ia += 1
+                else:
+                    qs["B"].add(make_packet(("B", stamps_b[ib]),
+                                            stamps_b[ib]))
+                    ib += 1
+                while True:
+                    t = p.ready_timestamp(qs)
+                    if t is None:
+                        break
+                    s = p.pop_input_set(qs, t)
+                    seq.append((t.value, s["A"].payload, s["B"].payload))
+            qs["A"].close()
+            qs["B"].close()
+            while True:
+                t = p.ready_timestamp(qs)
+                if t is None:
+                    break
+                s = p.pop_input_set(qs, t)
+                seq.append((t.value, s["A"].payload, s["B"].payload))
+            return seq
+
+        s1, s2 = run(0), run(1)
+        assert s1 == s2                                  # deterministic
+        times = [t for t, _, _ in s1]
+        assert times == sorted(times)                    # ascending order
+        # no packet dropped
+        got_a = [p for _, p, _ in s1 if p is not None]
+        assert len(got_a) == len(stamps_a)
+
+    def test_ascending_and_complete(self):
+        qs = make_queues(["A"])
+        p = DefaultInputPolicy()
+        for t in [1, 5, 9]:
+            qs["A"].add(make_packet(t, t))
+        out = []
+        while (t := p.ready_timestamp(qs)) is not None:
+            out.append(p.pop_input_set(qs, t)["A"].payload)
+        assert out == [1, 5, 9]
+
+
+class TestImmediatePolicy:
+    def test_no_waiting(self):
+        qs = make_queues(["A", "B"])
+        p = ImmediateInputPolicy()
+        qs["A"].add(make_packet("a", 7))
+        # B has no bound progress, but immediate doesn't care
+        assert p.ready_timestamp(qs) == Timestamp(7)
+
+
+class TestSyncSets:
+    def test_within_set_alignment_only(self):
+        qs = make_queues(["A1", "A2", "B"])
+        p = SyncSetInputPolicy([["A1", "A2"], ["B"]])
+        qs["B"].add(make_packet("b3", 3))
+        # set B is ready alone even though A1/A2 are unsettled
+        assert p.ready_timestamp(qs) == Timestamp(3)
+        s = p.pop_input_set(qs, Timestamp(3))
+        assert s["B"].payload == "b3" and s["A1"].is_empty()
+        # A-set still requires alignment between A1 and A2
+        qs["A1"].add(make_packet("a5", 5))
+        assert p.ready_timestamp(qs) is None
+        qs["A2"].advance_bound(Timestamp(6))
+        assert p.ready_timestamp(qs) == Timestamp(5)

@@ -1,0 +1,120 @@
+"""Text-format GraphConfig files (paper §3.6) and trace-file round-trips
+(paper §5.2)."""
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401
+from repro.core import (Graph, GraphConfig, TextFormatError, Tracer,
+                        parse_graph_config, serialize_graph_config,
+                        visualizer)
+
+EXAMPLE = """
+# the paper's Fig.-1 skeleton in text format
+input_stream: "frame"
+output_stream: "annotated"
+num_threads: 4
+enable_tracer: true
+executor { name: "inference" num_threads: 1 }
+node {
+  calculator: "FrameSelectCalculator"
+  name: "select"
+  input_stream: "IN:frame"
+  output_stream: "OUT:selected"
+  options { every: 3 }
+}
+node {
+  calculator: "ObjectDetectorCalculator"
+  name: "detect"
+  input_stream: "FRAME:selected"
+  output_stream: "DETECTIONS:detections"
+  executor: "inference"
+  options { threshold: 0.3 }
+}
+node {
+  calculator: "AnnotationOverlayCalculator"
+  name: "annotate"
+  input_stream: "FRAME:frame"
+  input_stream: "DETECTIONS:detections"
+  output_stream: "ANNOTATED_FRAME:annotated"
+}
+"""
+
+
+class TestTextFormat:
+    def test_parse_runs_end_to_end(self):
+        cfg = parse_graph_config(EXAMPLE)
+        assert cfg.num_threads == 4 and cfg.enable_tracer
+        assert [n.calculator for n in cfg.nodes] == [
+            "FrameSelectCalculator", "ObjectDetectorCalculator",
+            "AnnotationOverlayCalculator"]
+        assert cfg.nodes[0].options == {"every": 3}
+        assert cfg.nodes[1].executor == "inference"
+        g = Graph(cfg)
+        out = []
+        g.observe_output_stream("annotated", lambda p: out.append(
+            p.timestamp.value))
+        g.start_run()
+        rng = np.random.RandomState(0)
+        for t in range(6):
+            g.add_packet_to_input_stream(
+                "frame", (rng.rand(16, 16) * 255).astype(np.float32), t)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        assert out == list(range(6))
+
+    def test_round_trip(self):
+        cfg = parse_graph_config(EXAMPLE)
+        text = serialize_graph_config(cfg)
+        cfg2 = parse_graph_config(text)
+        assert cfg2.to_dict() == cfg.to_dict()
+
+    def test_bad_input_rejected(self):
+        with pytest.raises(TextFormatError):
+            parse_graph_config("node { }")          # missing calculator
+        with pytest.raises(TextFormatError):
+            parse_graph_config("bogus_field: 3")
+        with pytest.raises(TextFormatError):
+            parse_graph_config('node { calculator: "X" weird: 1 }')
+
+    def test_back_edge_and_policy(self):
+        cfg = parse_graph_config("""
+        input_stream: "in"
+        node {
+          calculator: "FlowLimiterCalculator"
+          input_stream: "IN:in"
+          input_stream: "FINISHED:loop"
+          output_stream: "OUT:out"
+          back_edge_input: "FINISHED"
+          input_policy: "immediate"
+          options { max_in_flight: 2 }
+        }
+        node {
+          calculator: "PassThroughCalculator"
+          input_stream: "out:out"
+          output_stream: "out:loop"
+        }
+        """)
+        Graph(cfg)  # validates (cycle is declared)
+
+
+class TestTraceFiles:
+    def test_save_load_round_trip(self, tmp_path):
+        cfg = parse_graph_config(EXAMPLE)
+        g = Graph(cfg)
+        g.start_run()
+        rng = np.random.RandomState(1)
+        for t in range(4):
+            g.add_packet_to_input_stream(
+                "frame", (rng.rand(8, 8) * 255).astype(np.float32), t)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        path = str(tmp_path / "trace.jsonl")
+        g.tracer.save(path, g.node_names())
+        tracer2, names = Tracer.load(path)
+        assert len(tracer2.events()) == len(g.tracer.events())
+        # loaded traces drive the same analyses (paper §5.2 timeline view)
+        h1 = g.tracer.node_histograms(g.node_names())
+        h2 = tracer2.node_histograms(names)
+        assert h1.keys() == h2.keys()
+        tl = visualizer.timeline_ascii(tracer2, names)
+        assert "timeline" in tl

@@ -1,0 +1,101 @@
+"""Unit tests: timestamps (ordering, bounds), packets, stream queues."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import Packet, Timestamp, make_packet, ts
+from repro.core.stream import InputStreamQueue, StreamError
+
+
+class TestTimestamp:
+    def test_ordering_specials(self):
+        assert Timestamp.unset() < Timestamp.unstarted() < \
+            Timestamp.prestream() < Timestamp.min() < Timestamp(0) < \
+            Timestamp(1) < Timestamp.max() < Timestamp.poststream() < \
+            Timestamp.done()
+
+    def test_next_allowed(self):
+        assert Timestamp(5).next_allowed_in_stream() == Timestamp(6)
+        assert Timestamp.prestream().next_allowed_in_stream() == \
+            Timestamp.min()
+        assert Timestamp.max().next_allowed_in_stream() == Timestamp.done()
+
+    def test_stream_allowed(self):
+        assert Timestamp(0).is_allowed_in_stream()
+        assert Timestamp.prestream().is_allowed_in_stream()
+        assert not Timestamp.unset().is_allowed_in_stream()
+        assert not Timestamp.done().is_allowed_in_stream()
+
+    def test_arithmetic(self):
+        assert Timestamp(3) + 4 == Timestamp(7)
+        assert Timestamp(7) - Timestamp(3) == 4
+
+    @given(st.integers(-10**6, 10**6), st.integers(-10**6, 10**6))
+    def test_order_total(self, a, b):
+        ta, tb = Timestamp(a), Timestamp(b)
+        assert (ta < tb) == (a < b)
+        assert (ta == tb) == (a == b)
+
+
+class TestPacket:
+    def test_value_semantics(self):
+        payload = {"x": 1}
+        p = make_packet(payload, 5)
+        q = p.at(9)
+        assert q.payload is p.payload       # shared ownership
+        assert p.timestamp == Timestamp(5)
+        assert q.timestamp == Timestamp(9)
+
+    def test_empty(self):
+        from repro.core import empty_packet
+        e = empty_packet(Timestamp(3))
+        assert e.is_empty()
+        with pytest.raises(ValueError):
+            e.get()
+
+
+class TestInputStreamQueue:
+    def test_monotonic_enforced(self):
+        q = InputStreamQueue("s", "n", "IN")
+        q.add(make_packet("a", 3))
+        with pytest.raises(StreamError):
+            q.add(make_packet("b", 3))      # same ts: bound is 4
+        q.add(make_packet("b", 4))
+
+    def test_bound_advances(self):
+        q = InputStreamQueue("s", "n", "IN")
+        assert not q.settled(Timestamp(0))
+        q.add(make_packet("a", 10))
+        assert q.settled(Timestamp(10))     # bound = 11
+        assert not q.settled(Timestamp(11))
+        q.advance_bound(Timestamp(20))
+        assert q.settled(Timestamp(19))
+        with pytest.raises(StreamError):
+            q.advance_bound(Timestamp(5))   # regression forbidden
+
+    def test_close(self):
+        q = InputStreamQueue("s", "n", "IN")
+        q.add(make_packet("a", 1))
+        q.close()
+        assert q.settled(Timestamp(10**9))
+        assert not q.is_done()              # still has a packet queued
+        q.pop()
+        assert q.is_done()
+        with pytest.raises(StreamError):
+            q.add(make_packet("b", 2))
+
+    def test_backpressure_flag(self):
+        q = InputStreamQueue("s", "n", "IN", max_queue_size=2)
+        q.add(make_packet("a", 1))
+        assert not q.is_full()
+        q.add(make_packet("b", 2))
+        assert q.is_full()
+
+    @given(st.lists(st.integers(0, 1000), min_size=1, max_size=50,
+                    unique=True))
+    def test_fifo_order(self, stamps):
+        stamps = sorted(stamps)
+        q = InputStreamQueue("s", "n", "IN")
+        for t in stamps:
+            q.add(make_packet(t, t))
+        got = [q.pop().timestamp.value for _ in stamps]
+        assert got == stamps
