@@ -1,14 +1,18 @@
 #!/usr/bin/env python
-"""End-to-end driver: serve a small LM with batched requests through the
-flow-limited MediaPipe serving graph (deliverable (b): 'serve a small model
-with batched requests, as the paper's kind dictates').
+"""End-to-end driver: serve a small LM through the continuous-batching
+GraphServer with several concurrent client threads (requests join the
+running decode batch as slots free up; tokens stream back per step).
 
     PYTHONPATH=src python examples/serve_llm.py
+
+Pass ``--fixed-batch`` to run the original batch-and-drain pipeline
+instead, for comparison.
 """
 import sys
 
 from repro.launch.serve import main
 
 sys.exit(main(["--arch", "qwen3_32b", "--reduced",
-               "--requests", "24", "--batch-size", "4",
-               "--max-new-tokens", "8"]))
+               "--requests", "24", "--clients", "6",
+               "--num-slots", "4", "--max-new-tokens", "8"]
+              + sys.argv[1:]))

@@ -26,7 +26,7 @@ from ..sharding.rules import (batch_specs, cache_specs, param_specs,
 from .analysis import (collective_bytes, cost_stats, memory_stats,
                        model_flops, roofline)                  # noqa: E402
 from .hlo_cost import hlo_cost                                 # noqa: E402
-from .mesh import make_production_mesh                         # noqa: E402
+from .mesh import make_production_mesh, mesh_context          # noqa: E402
 
 LONG_WINDOW = 8192
 
@@ -110,7 +110,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         fn, args = build_lowering(arch, shape_name, mesh, flags)
         lowered = fn.lower(*args)
         compiled = lowered.compile()

@@ -27,3 +27,11 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = model_parallel if n % model_parallel == 0 else 1
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    where it exists (>= 0.5), else the Mesh object itself (0.4.x Meshes are
+    context managers with the same ambient-mesh effect)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh

@@ -1,40 +1,79 @@
-"""Serving launcher: runs the MediaPipe-style flow-limited serving graph
-around an LLMEngine.
+"""Serving launcher: the continuous-batching GraphServer (default) or the
+original fixed-batch flow-limited graph (``--fixed-batch``) around an
+LLMEngine.
 
     python -m repro.launch.serve --arch qwen3_32b --reduced \
-        --requests 32 --batch-size 4
+        --requests 32 --clients 8
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import threading
 import time
 
 import numpy as np
 
 from ..configs import get_config
 from ..core import Graph
-from ..serving import LLMEngine, build_serving_graph
+from ..serving import (GraphServer, LLMEngine, build_serving_graph)
 from .. import calculators  # noqa: F401 - registers basics
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="minicpm_2b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--max-new-tokens", type=int, default=8)
-    ap.add_argument("--max-in-flight", type=int, default=2)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _make_prompts(rng, n, vocab):
+    # a few length buckets: grouped prefill engages, jit compiles stay few
+    return [rng.randint(0, vocab, size=int(rng.choice([6, 10, 14, 18])))
+            .astype(np.int32) for _ in range(n)]
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    engine = LLMEngine(cfg, max_len=128, seed=args.seed)
+
+def run_continuous(args, cfg, engine) -> int:
+    """Multi-client demo: ``--clients`` threads submit concurrently; the
+    server keeps the decode batch full across all of them."""
+    rng = np.random.RandomState(args.seed)
+    prompts = _make_prompts(rng, args.requests, cfg.vocab_size)
+    lat = [None] * args.requests
+    results = [None] * args.requests
+
+    with GraphServer(engine, num_slots=args.num_slots,
+                     max_in_flight=args.max_in_flight,
+                     max_new_tokens=args.max_new_tokens) as srv:
+        t0 = time.time()
+
+        def client(worker: int) -> None:
+            for i in range(worker, args.requests, args.clients):
+                h = srv.submit(prompts[i], request_id=f"req{i}")
+                results[i] = h.result(timeout=600)
+                lat[i] = time.time() - t0
+
+        threads = [threading.Thread(target=client, args=(w,))
+                   for w in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t0
+        stats = srv.stats()
+
+    done = sum(r is not None for r in results)
+    toks = sum(len(r) for r in results if r is not None)
+    ls = sorted(l for l in lat if l is not None)
+    print(f"served {done}/{args.requests} requests from {args.clients} "
+          f"clients in {wall:.2f}s ({toks / wall:.1f} tok/s)")
+    if ls:
+        print(f"latency p50={ls[len(ls)//2]*1e3:.0f}ms "
+              f"p95={ls[int(len(ls)*0.95)]*1e3:.0f}ms")
+    sched = stats.get("scheduler", {})
+    print(f"admitted={stats.get('admitted')} dropped={stats.get('dropped')} "
+          f"decode_steps={sched.get('decode_steps')} "
+          f"prefill_calls={sched.get('prefill_calls')} "
+          f"max_active_slots={sched.get('max_active_slots')}")
+    return 0 if done == args.requests else 1
+
+
+def run_fixed_batch(args, cfg, engine) -> int:
+    """The original batch-and-drain pipeline (kept for comparison)."""
     graph_cfg = build_serving_graph(batch_size=args.batch_size,
-                                    max_in_flight=args.max_in_flight)
+                                    max_in_flight=args.max_in_flight or 2)
     g = Graph(graph_cfg, side_packets={"engine": engine})
 
     done = {}
@@ -70,6 +109,30 @@ def main(argv=None) -> int:
         print(f"  {k:10s} runs={v['count']:4.0f} mean={v['mean_us']:9.0f}us "
               f"max={v['max_us']:9.0f}us")
     return 0 if len(done) == args.requests else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-in-flight", type=int, default=0)
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="use the original batch-and-drain pipeline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    engine = LLMEngine(cfg, max_len=128, seed=args.seed)
+    if args.fixed_batch:
+        return run_fixed_batch(args, cfg, engine)
+    return run_continuous(args, cfg, engine)
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ from ..models.transformer import RuntimeFlags
 from ..optim import make_schedule
 from ..runtime.steps import TrainState, make_train_step
 from ..sharding.rules import batch_specs, param_specs, train_state_specs
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import make_host_mesh, make_production_mesh, mesh_context
 
 
 def main(argv=None) -> int:
@@ -76,7 +76,7 @@ def main(argv=None) -> int:
     state = init_state(params)
 
     state_sh = train_state_specs(model.template, mesh, cfg.optimizer)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state = jax.device_put(state, state_sh)
         step_fn = jax.jit(train_step, in_shardings=(state_sh, None),
                           out_shardings=(state_sh, None),

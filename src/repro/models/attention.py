@@ -112,7 +112,9 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
     """Full-sequence (cache=None) or single-token decode (cache given).
 
     positions: [B, S] absolute positions.
-    cache_pos: [] scalar — number of tokens already in the cache.
+    cache_pos: [] scalar — number of tokens already in the cache — or a
+        [B] vector of per-row positions (continuous batching: each slot of
+        the decode batch is an independent request at its own offset).
     """
     q, k, v = _qkv(params, cfg, x, positions)
     if cache is None:
@@ -124,18 +126,33 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
     B, S, KV, hd = cache["k"].shape
     assert x.shape[1] == 1, "decode processes one new token"
     window = cfg.sliding_window or 0
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
+    per_row = cache_pos.ndim == 1
     slot = (cache_pos % S) if window else cache_pos
-    k_new = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
-    v_new = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+    if per_row:
+        rows = jnp.arange(B)
+        k_new = cache["k"].at[rows, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        v_new = cache["v"].at[rows, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+    else:
+        k_new = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_new = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
     idx = jnp.arange(S)
+    pos = cache_pos[:, None] if per_row else cache_pos   # [B,1] or []
     if window:
         # with wraparound, every slot below min(cache_pos+1, S) is valid
-        valid = idx < jnp.minimum(cache_pos + 1, S)
+        valid = idx < jnp.minimum(pos + 1, S)
     else:
-        valid = idx <= cache_pos
-    mask = valid[None, None, None, None, :]     # [1,1,1,1,T]
+        valid = idx <= pos                       # [B,T] or [T]
+    mask = valid[:, None, None, None, :] if per_row \
+        else valid[None, None, None, None, :]    # [B|1,1,1,1,T]
     mp = getattr(flags, "model_size", 1) if flags is not None else 1
-    if (mp > 1 and KV % mp != 0 and hd % mp == 0):
+    # per_row decode takes the generic path: the hd-sharded psum body
+    # assumes one shared [T] validity mask, and a [B,T] mask needs per-row
+    # plumbing through the shard_map before slot decode can use it on
+    # meshes where KV heads don't divide the model axis
+    if (mp > 1 and KV % mp != 0 and hd % mp == 0 and not per_row):
         # hd-sharded cache (kv heads don't divide the mesh): explicit
         # partial-score psum instead of XLA's full-cache all-gather
         # (EXPERIMENTS.md §Perf, jamba decode pair iteration 2).

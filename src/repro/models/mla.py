@@ -116,21 +116,33 @@ def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
     # ---- decode with weight absorption --------------------------------
     B, S, R = cache["c_kv"].shape
     window = cfg.sliding_window or 0
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
+    per_row = cache_pos.ndim == 1    # [B] per-slot positions
     slot = (cache_pos % S) if window else cache_pos
     q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
     c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
-    c_kv = cache["c_kv"].at[:, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[:, slot].set(
-        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    if per_row:
+        rows = jnp.arange(B)
+        c_kv = cache["c_kv"].at[rows, slot].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, slot].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+    else:
+        c_kv = cache["c_kv"].at[:, slot].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[:, slot].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
     # absorb wk_b into the query: q_lat [B,1,H,R]
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
     scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv) +
               jnp.einsum("bshk,btk->bhst", q_rope, k_rope))
     scores = scores.astype(jnp.float32) * scale
     idx = jnp.arange(S)
-    valid = (idx < jnp.minimum(cache_pos + 1, S)) if window else \
-        (idx <= cache_pos)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    pos = cache_pos[:, None] if per_row else cache_pos   # [B,1] or []
+    valid = (idx < jnp.minimum(pos + 1, S)) if window else (idx <= pos)
+    mask = valid[:, None, None, :] if per_row else \
+        valid[None, None, None, :]                       # [B|1,1,1,T]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)      # [B,1,H,R]
     out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])

@@ -473,12 +473,18 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
 def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 cache, cache_pos: jax.Array,
                 flags: RuntimeFlags = DEFAULT_FLAGS):
-    """One decode step. tokens: [B, 1]. Returns (logits [B,V], new_cache)."""
+    """One decode step. tokens: [B, 1]. Returns (logits [B,V], new_cache).
+
+    ``cache_pos`` is either a scalar (all rows at the same offset — the
+    classic static batch) or a [B] vector of per-row offsets (continuous
+    batching: every row is an independent request/slot)."""
     dt = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens, dt)
     x = constrain_batch(x, flags)
     B = x.shape[0]
-    positions = jnp.broadcast_to(cache_pos, (B, 1))
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
+    positions = cache_pos[:, None] if cache_pos.ndim == 1 \
+        else jnp.broadcast_to(cache_pos, (B, 1))
     head, pattern, R = group_structure(cfg)
 
     new_cache: Dict[str, Any] = {}

@@ -115,3 +115,29 @@ def make_decode_step(model: Model, flags: RuntimeFlags = DEFAULT_FLAGS):
         return next_tok, new_cache
 
     return decode_step
+
+
+def make_slot_decode_step(model: Model,
+                          flags: RuntimeFlags = DEFAULT_FLAGS,
+                          pad_id: int = 0):
+    """Decode one token for every *slot* of a continuous batch.
+
+    Unlike :func:`make_decode_step`, the batch rows are independent
+    in-flight requests: ``positions`` is a [N] vector of per-slot cache
+    offsets and ``active`` a [N] bool mask of occupied slots.  Inactive
+    slots still flow through the computation (the batch shape is static so
+    the step compiles once — every row op is row-independent, so they
+    cannot perturb active rows, and a later insert overwrites the whole
+    cache row anyway) but their emitted token is forced to ``pad_id`` so
+    the host scheduler can ignore them.
+    """
+    def slot_decode_step(params, tokens, cache, positions, active):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              positions, flags=flags)
+        next_tok = jnp.where(
+            active[:, None],
+            jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None],
+            jnp.asarray(pad_id, jnp.int32))
+        return next_tok, new_cache
+
+    return slot_decode_step

@@ -1,8 +1,13 @@
 from .engine import LLMEngine
-from .calculators import (BatcherCalculator, UnbatchCalculator,
-                          LLMPrefillCalculator, LLMDecodeLoopCalculator)
-from .pipeline import build_serving_graph
+from .batching import Request, SlotScheduler, TokenEvent
+from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
+                          UnbatchCalculator, LLMPrefillCalculator,
+                          LLMDecodeLoopCalculator)
+from .pipeline import build_continuous_serving_graph, build_serving_graph
+from .server import GraphServer, RequestHandle
 
-__all__ = ["LLMEngine", "BatcherCalculator", "UnbatchCalculator",
-           "LLMPrefillCalculator", "LLMDecodeLoopCalculator",
-           "build_serving_graph"]
+__all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
+           "UnbatchCalculator", "LLMPrefillCalculator",
+           "LLMDecodeLoopCalculator", "Request", "SlotScheduler",
+           "TokenEvent", "build_serving_graph",
+           "build_continuous_serving_graph", "GraphServer", "RequestHandle"]

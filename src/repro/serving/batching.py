@@ -1,0 +1,243 @@
+"""Continuous batching: slot-based KV-cache management + request scheduler.
+
+This is the core of the GraphServer subsystem (vLLM-style continuous
+batching mapped onto the repo's MediaPipe-like graph runtime).  The decode
+batch is a fixed set of ``num_slots`` *slots*; each slot holds one
+in-flight request's KV/recurrent cache row.  New requests are prefilled
+(grouped by equal prompt length so one jitted prefill serves the group)
+and **inserted** into free slots while other slots keep decoding; finished
+requests are **evicted** so their slot is immediately reusable.  Per-slot
+positions feed the model's vectorised ``cache_pos`` decode path
+(:func:`repro.runtime.steps.make_slot_decode_step`), which keeps batched
+greedy decode bit-identical to one-request-at-a-time decode — every row op
+is row-independent.
+
+The scheduler here is host-side and graph-agnostic: the MediaPipe wiring
+(admission through ``FlowLimiterCalculator``, the tick loopback that lets
+the graph scheduler interleave admission with decode steps) lives in
+:mod:`repro.serving.calculators` / :mod:`repro.serving.pipeline`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+from jax import lax
+from jax.tree_util import tree_map_with_path
+
+
+def slot_batch_axis(path) -> int:
+    """Axis of the slot (batch) dimension in a cache leaf.
+
+    ``prefill`` returns head-layer leaves shaped [B, ...] and scanned-block
+    leaves shaped [R, B, ...] (R = layer-group repeat count), so the batch
+    axis is 1 under the top-level ``"blocks"`` key and 0 everywhere else.
+    """
+    return 1 if (path and getattr(path[0], "key", None) == "blocks") else 0
+
+
+def make_slot_insert():
+    """Build ``insert(cache, rows, row, slot)``: copy cache row ``row`` of a
+    freshly prefilled batch into slot ``slot`` of the persistent slot cache.
+    ``row``/``slot`` are traced scalars, so one compilation covers every
+    slot index (recompiles only on a new prefill batch width)."""
+
+    def insert(cache, rows, row, slot):
+        def ins(path, big, rs):
+            ax = slot_batch_axis(path)
+            r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
+            return lax.dynamic_update_slice_in_dim(
+                big, r.astype(big.dtype), slot, axis=ax)
+
+        return tree_map_with_path(ins, cache, rows)
+
+    return insert
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request as tracked by the scheduler."""
+    id: Any
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    finished: bool = False
+    finish_reason: str = ""            # "eos" | "length"
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One generated token (or the request's completion)."""
+    request: Request
+    token: int
+    index: int                          # 0-based position in the generation
+    finished: bool
+
+
+class SlotScheduler:
+    """Admission + per-step decode over a fixed-width slot batch.
+
+    Drive it with::
+
+        sched.submit(payload)      # any number of times, any time
+        events = sched.admit()     # prefill waiting requests into free slots
+        events += sched.step()     # one decode step across active slots
+
+    until :meth:`has_work` is False.  ``admit``/``step`` return
+    :class:`TokenEvent` lists in deterministic (slot) order.
+    """
+
+    def __init__(self, engine, num_slots: int = 4, *,
+                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
+                 pad_id: int = 0):
+        if engine.cfg.is_encoder_decoder:
+            raise ValueError("continuous batching supports decoder-only "
+                             "models (encoder-decoder prefill needs "
+                             "enc_embeds plumbing)")
+        self.engine = engine
+        self.num_slots = int(num_slots)
+        self.default_max_new = int(max_new_tokens)
+        self.default_eos = eos_id
+        self.pad_id = int(pad_id)
+        self.waiting: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * self.num_slots
+        self.free: List[int] = list(range(self.num_slots))  # LIFO reuse
+        self.cache = engine.new_slot_cache(self.num_slots)
+        self.positions = np.zeros(self.num_slots, np.int32)
+        self.last_tokens = np.full(self.num_slots, self.pad_id, np.int32)
+        self.stats: Dict[str, Any] = {
+            "submitted": 0, "completed": 0, "decode_steps": 0,
+            "prefill_calls": 0, "prefill_requests": 0,
+            "prefill_padded_rows": 0,
+            "evictions_eos": 0, "evictions_length": 0,
+            "max_active_slots": 0,
+            # peak requests inside the subsystem (waiting + active): with a
+            # FlowLimiter upstream this must never exceed max_in_flight
+            "max_outstanding": 0,
+        }
+
+    # -- state predicates -------------------------------------------------
+    @property
+    def active(self) -> int:
+        return self.num_slots - len(self.free)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.active > 0
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, payload: Dict[str, Any]) -> Request:
+        """payload: {'tokens': [S] ints, 'id': any,
+        'max_new_tokens': int?, 'eos_id': int?}"""
+        prompt = np.asarray(payload["tokens"], np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + payload.get("max_new_tokens",
+                                     self.default_max_new) > \
+                self.engine.max_len:
+            raise ValueError(
+                f"request {payload.get('id')!r}: prompt ({prompt.size}) + "
+                f"max_new_tokens exceeds engine max_len "
+                f"({self.engine.max_len})")
+        req = Request(
+            id=payload.get("id"),
+            prompt=prompt,
+            max_new_tokens=int(payload.get("max_new_tokens",
+                                           self.default_max_new)),
+            eos_id=payload.get("eos_id", self.default_eos))
+        self.waiting.append(req)
+        self.stats["submitted"] += 1
+        self.stats["max_outstanding"] = max(
+            self.stats["max_outstanding"],
+            self.stats["submitted"] - self.stats["completed"])
+        return req
+
+    # -- admission: dynamic prefill batching ------------------------------
+    def admit(self) -> List[TokenEvent]:
+        """Prefill waiting requests into free slots.
+
+        Head-of-line requests with equal prompt length are prefilled as one
+        batch (dynamic prefill batching); admission stays FIFO.  Prefill
+        already yields each request's first generated token.
+
+        The batch is padded to a power-of-two width with duplicates of its
+        first row: group width depends on arrival timing, so without
+        bucketing each new width is a fresh XLA compile at an unpredictable
+        moment.  Padding rows are row-independent (they cannot perturb real
+        rows) and are simply not inserted.
+        """
+        events: List[TokenEvent] = []
+        while self.waiting and self.free:
+            L = self.waiting[0].prompt.size
+            group: List[Request] = []
+            while (self.waiting and len(group) < len(self.free)
+                   and self.waiting[0].prompt.size == L):
+                group.append(self.waiting.popleft())
+            width = 1
+            while width < len(group):
+                width *= 2
+            prompts = np.stack([r.prompt for r in group]
+                               + [group[0].prompt] * (width - len(group)))
+            first, rows = self.engine.prefill(prompts)
+            self.stats["prefill_calls"] += 1
+            self.stats["prefill_requests"] += len(group)
+            self.stats["prefill_padded_rows"] += width - len(group)
+            for i, req in enumerate(group):
+                slot = self.free.pop()
+                req.slot = slot
+                self.slots[slot] = req
+                self.cache = self.engine.insert_slot(self.cache, rows,
+                                                     i, slot)
+                self.positions[slot] = req.prompt.size
+                events.append(self._record(req, int(first[i])))
+            self.stats["max_active_slots"] = max(
+                self.stats["max_active_slots"], self.active)
+        return events
+
+    # -- one decode step over the slot mask -------------------------------
+    def step(self) -> List[TokenEvent]:
+        if self.active == 0:
+            return []
+        active = np.zeros(self.num_slots, bool)
+        for slot, req in enumerate(self.slots):
+            active[slot] = req is not None
+        next_tok, self.cache = self.engine.decode_slots(
+            self.cache, self.last_tokens, self.positions, active)
+        self.stats["decode_steps"] += 1
+        events = []
+        for slot in np.nonzero(active)[0]:
+            req = self.slots[slot]
+            self.positions[slot] += 1
+            events.append(self._record(req, int(next_tok[slot])))
+        return events
+
+    # -- bookkeeping ------------------------------------------------------
+    def _record(self, req: Request, token: int) -> TokenEvent:
+        req.tokens.append(token)
+        self.last_tokens[req.slot] = token
+        index = len(req.tokens) - 1
+        if req.eos_id is not None and token == req.eos_id:
+            req.finished, req.finish_reason = True, "eos"
+            self.stats["evictions_eos"] += 1
+        elif len(req.tokens) >= req.max_new_tokens:
+            req.finished, req.finish_reason = True, "length"
+            self.stats["evictions_length"] += 1
+        if req.finished:
+            self._evict(req)
+        return TokenEvent(req, token, index, req.finished)
+
+    def _evict(self, req: Request) -> None:
+        """Free the request's slot.  The cache row is left as-is: a later
+        insert overwrites the whole row, and inactive rows cannot perturb
+        active ones (row-independent decode)."""
+        slot = req.slot
+        self.slots[slot] = None
+        self.positions[slot] = 0
+        self.last_tokens[slot] = self.pad_id
+        self.free.append(slot)
+        req.slot = -1
+        self.stats["completed"] += 1

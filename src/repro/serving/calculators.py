@@ -1,10 +1,22 @@
-"""Serving calculators: request batching, LLM prefill/decode, unbatching.
+"""Serving calculators: request batching, LLM prefill/decode, unbatching,
+and the continuous-batching engine node.
 
 This is the paper's framework applied to LLM serving: requests are packets
 on a stream; a batcher groups them (the flow-limiter pattern bounds
 in-flight batches); the engine node runs jitted sharded inference; an
 unbatch node fans results back out to per-request timestamps.  The default
 input policy guarantees responses align with their originating requests.
+
+Two engine nodes:
+
+* ``BatcherCalculator`` + ``LLMPrefillCalculator`` + ``UnbatchCalculator``
+  — the original fixed-batch pipeline (a batch must drain before the next
+  one starts).
+* ``ContinuousBatchCalculator`` — slot-based continuous batching: requests
+  join a *running* decode batch and stream tokens out per step.  The decode
+  loop is driven by the graph scheduler itself through a tick loopback
+  stream, so admission of new requests naturally interleaves with decode
+  steps and back-pressure/tracing see every step.
 """
 from __future__ import annotations
 
@@ -16,6 +28,7 @@ from ..core.calculator import Calculator, CalculatorContext
 from ..core.contract import AnyType, contract
 from ..core.registry import register_calculator
 from ..core.timestamp import Timestamp
+from .batching import SlotScheduler, TokenEvent
 
 
 @register_calculator
@@ -103,6 +116,95 @@ class LLMPrefillCalculator(Calculator):
 
 # Backwards-compatible alias used by the serving pipeline docs
 LLMDecodeLoopCalculator = LLMPrefillCalculator
+
+
+@register_calculator
+class ContinuousBatchCalculator(Calculator):
+    """Slot-based continuous-batching engine node.
+
+    Inputs:
+        REQUEST  — admitted request packets
+                   ({'tokens', 'id', 'max_new_tokens'?, 'eos_id'?})
+        TICK     — self-loopback (back edge): each tick packet drives one
+                   admission round + one decode step.  The graph scheduler
+                   interleaves REQUEST packets between ticks, which is what
+                   lets new requests join the running batch.
+    Outputs:
+        TOKEN    — one packet per generated token
+                   {'id', 'token', 'index', 'finished'}
+        RESPONSE — one packet per finished request
+                   {'id', 'tokens': np int32 [n], 'finish_reason'}
+        TICK_OUT — loop back to TICK while work remains
+    Side packets:
+        engine   — an LLMEngine (pin this node to a dedicated executor).
+    Options:
+        num_slots (default 4), max_new_tokens (default 16), eos_id.
+
+    Each output stream carries its own monotonically increasing timestamp
+    counter: responses finish out of request order by design (that is the
+    point of continuous batching), so they cannot be emitted at the
+    request's own timestamp without violating stream monotonicity.
+    """
+
+    CONTRACT = (contract()
+                .add_input("REQUEST", AnyType)
+                .add_input("TICK", AnyType, optional=True)
+                .add_output("TOKEN")
+                .add_output("RESPONSE")
+                .add_output("TICK_OUT")
+                .add_input_side_packet("engine", AnyType)
+                .set_input_policy("immediate"))
+
+    def open(self, ctx: CalculatorContext) -> None:
+        self.sched = SlotScheduler(
+            ctx.side("engine"),
+            num_slots=int(ctx.options.get("num_slots", 4)),
+            max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
+            eos_id=ctx.options.get("eos_id"))
+        self._tick_pending = False
+        self._ts = {"TOKEN": 0, "RESPONSE": 0, "TICK_OUT": 0}
+
+    def _emit(self, ctx: CalculatorContext, port: str, payload) -> None:
+        ctx.outputs(port).add(payload, self._ts[port])
+        self._ts[port] += 1
+
+    def _emit_events(self, ctx: CalculatorContext,
+                     events: List[TokenEvent]) -> None:
+        for ev in events:
+            token = {"id": ev.request.id, "token": ev.token,
+                     "index": ev.index, "finished": ev.finished}
+            if ev.finished:
+                # the final TOKEN event is self-contained so stream
+                # consumers never need to join against RESPONSE packets
+                # (which arrive on another stream, i.e. another thread)
+                token["finish_reason"] = ev.request.finish_reason
+            self._emit(ctx, "TOKEN", token)
+            if ev.finished:
+                self._emit(ctx, "RESPONSE", {
+                    "id": ev.request.id,
+                    "tokens": np.asarray(ev.request.tokens, np.int32),
+                    "finish_reason": ev.request.finish_reason})
+
+    def process(self, ctx: CalculatorContext) -> None:
+        req = ctx.inputs["REQUEST"]
+        if not req.is_empty():
+            self.sched.submit(req.payload)
+        tick = ctx.inputs["TICK"]
+        if not tick.is_empty():
+            self._tick_pending = False
+            self._emit_events(ctx, self.sched.admit() + self.sched.step())
+        if self.sched.has_work() and not self._tick_pending:
+            # one tick in flight at a time: request bursts queue behind it
+            # and are admitted together at the next round.  (Payload must
+            # be non-None: a None payload is an *empty* packet.)
+            self._tick_pending = True
+            self._emit(ctx, "TICK_OUT", self._ts["TICK_OUT"])
+
+    def close(self, ctx: CalculatorContext) -> None:
+        # Drain: if the run is shutting down with work still in flight
+        # (tick loopback severed by quiescence), finish it synchronously.
+        while self.sched.has_work():
+            self._emit_events(ctx, self.sched.admit() + self.sched.step())
 
 
 @register_calculator

@@ -4,10 +4,20 @@ The engine is the "model inference" component consumed by the MediaPipe
 graph's InferenceCalculator (paper §6.1 'performs ML inference ... using an
 inference engine').  On a pod it holds pjit-sharded params; in the examples
 and tests it runs a reduced config on CPU.
+
+Two decode modes:
+
+* :meth:`generate` — classic static batch: prefill a [B, S] batch, then
+  greedy-decode all rows in lockstep (scalar ``cache_pos``).
+* the slot API (:meth:`new_slot_cache` / :meth:`insert_slot` /
+  :meth:`decode_slots`) — continuous batching: the decode batch is a fixed
+  set of slots, each an independent request at its own position, and
+  requests are inserted/evicted while the batch keeps decoding.  Used by
+  :class:`repro.serving.batching.SlotScheduler` and the GraphServer.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +26,9 @@ import numpy as np
 from ..models.config import ArchConfig
 from ..models.model import Model
 from ..models.transformer import DEFAULT_FLAGS, RuntimeFlags
-from ..runtime.steps import make_decode_step, make_prefill_step
+from ..runtime.steps import (make_decode_step, make_prefill_step,
+                             make_slot_decode_step)
+from .batching import make_slot_insert
 
 
 class LLMEngine:
@@ -32,7 +44,12 @@ class LLMEngine:
         self._prefill = jax.jit(make_prefill_step(self.model, max_len,
                                                   flags))
         self._decode = jax.jit(make_decode_step(self.model, flags))
+        self._slot_decode = jax.jit(make_slot_decode_step(self.model, flags))
+        self._insert = jax.jit(make_slot_insert())
 
+    # ------------------------------------------------------------------
+    # static-batch generation
+    # ------------------------------------------------------------------
     def generate(self, tokens: np.ndarray, max_new_tokens: int = 16,
                  eos_id: Optional[int] = None) -> np.ndarray:
         """Greedy-decode a batch. tokens: [B, S] int32 -> [B, max_new]."""
@@ -57,3 +74,41 @@ class LLMEngine:
         {'tokens': [B,S] int32, 'max_new_tokens': int}."""
         return self.generate(payload["tokens"],
                              payload.get("max_new_tokens", 16))
+
+    # ------------------------------------------------------------------
+    # slot API (continuous batching)
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: np.ndarray) -> Tuple[np.ndarray, Dict]:
+        """Prefill [B, S] prompts; returns (first tokens [B], cache rows).
+        All rows must share one length — the SlotScheduler groups by length
+        so padding never perturbs positions (exactness over utilisation)."""
+        next_tok, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens, jnp.int32)})
+        return np.asarray(next_tok), cache
+
+    def new_slot_cache(self, num_slots: int):
+        """Zeroed decode cache with a batch width of ``num_slots``."""
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.model.abstract_cache(num_slots, self.max_len))
+
+    def insert_slot(self, cache, rows, row: int, slot: int):
+        """Copy prefilled cache row ``row`` of ``rows`` into ``slot``."""
+        return self._insert(cache, rows, jnp.asarray(row, jnp.int32),
+                            jnp.asarray(slot, jnp.int32))
+
+    def decode_slots(self, cache, last_tokens: np.ndarray,
+                     positions: np.ndarray, active: np.ndarray
+                     ) -> Tuple[np.ndarray, Dict]:
+        """One greedy decode step across all slots.
+
+        last_tokens/positions/active: [N] — each slot's most recent token,
+        cache offset, and occupancy.  Returns ([N] next tokens, cache);
+        inactive slots yield the pad token."""
+        next_tok, cache = self._slot_decode(
+            self.params,
+            jnp.asarray(last_tokens, jnp.int32)[:, None],
+            cache,
+            jnp.asarray(positions, jnp.int32),
+            jnp.asarray(active, bool))
+        return np.asarray(next_tok[:, 0]), cache

@@ -1,19 +1,33 @@
-"""The serving pipeline graph — MediaPipe's flow-limited inference pattern
-(paper Fig. 3 + §6.1) applied to LLM serving:
+"""The serving pipeline graphs — MediaPipe's flow-limited inference pattern
+(paper Fig. 3 + §6.1) applied to LLM serving.
+
+Fixed-batch pipeline (:func:`build_serving_graph`):
 
     requests -> FlowLimiter -> Batcher -> LLMPrefill -> Unbatch -> responses
                      ^                                      |
                      +----------- FINISHED loopback ---------+
 
-The flow limiter bounds in-flight batches so request bursts do not queue
-unbounded work behind the accelerator; drops happen UPSTREAM of batching
-(no wasted prefill).  The heavy inference node runs on a dedicated executor
-(paper §3.6's thread-locality advice).
+Continuous-batching pipeline (:func:`build_continuous_serving_graph`):
+
+    requests -> FlowLimiter -> ContinuousBatch -+-> tokens
+                     ^              ^    |      +-> responses
+                     |              +-tick loop      |
+                     +--------- FINISHED loopback ---+
+
+The flow limiter bounds in-flight requests so bursts do not queue unbounded
+work behind the accelerator; drops happen UPSTREAM of prefill (no wasted
+work).  The heavy inference node runs on a dedicated executor (paper §3.6's
+thread-locality advice).  In the continuous graph the decode loop itself is
+a loopback stream: every decode step is one scheduler dispatch, so
+admission, back-pressure and the tracer all see the loop at step
+granularity.
 """
 from __future__ import annotations
 
 from typing import Optional
 
+from .. import calculators as _basic_calculators  # noqa: F401 (registers
+#     PassThroughCalculator & co. for the loopback nodes)
 from ..core.graph_config import ExecutorConfig, GraphConfig
 
 
@@ -56,6 +70,66 @@ def build_serving_graph(*, batch_size: int = 4, max_in_flight: int = 2,
     )
     cfg.add_node(
         "PassThroughCalculator", name="loop",
+        inputs={"responses": "responses"},
+        outputs={"responses": "responses_loop"},
+    )
+    return cfg
+
+
+def build_continuous_serving_graph(*, num_slots: int = 4,
+                                   max_in_flight: int = 0,
+                                   queue_size: int = 1024,
+                                   drop_on_overload: bool = False,
+                                   max_new_tokens: int = 16,
+                                   eos_id: Optional[int] = None,
+                                   enable_tracer: bool = True
+                                   ) -> GraphConfig:
+    """Continuous-batching serving graph (the GraphServer topology).
+
+    ``max_in_flight`` bounds requests inside the engine subsystem (waiting
+    for a slot + occupying one); 0 means ``2 * num_slots`` so a full next
+    wave is always staged while the current one decodes.  Beyond that the
+    limiter queues up to ``queue_size`` requests — or drops immediately
+    when ``drop_on_overload`` (which makes ``queue_size`` moot).
+    """
+    if max_in_flight <= 0:
+        max_in_flight = 2 * num_slots
+    cfg = GraphConfig(
+        input_streams=["requests"],
+        output_streams=["responses", "tokens"],
+        input_side_packets=["engine"],
+        executors=[ExecutorConfig("inference", 1)],
+        num_threads=4,
+        enable_tracer=enable_tracer,
+    )
+    cfg.add_node(
+        "FlowLimiterCalculator", name="limiter",
+        inputs={"IN": "requests", "FINISHED": "responses_loop"},
+        outputs={"OUT": "admitted"},
+        options={"max_in_flight": max_in_flight,
+                 "queue_size": 0 if drop_on_overload else queue_size},
+        back_edge_inputs=["FINISHED"],
+    )
+    engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens}
+    if eos_id is not None:     # omit from options: None doesn't round-trip
+        engine_opts["eos_id"] = eos_id     # through the text format
+    cfg.add_node(
+        "ContinuousBatchCalculator", name="engine",
+        inputs={"REQUEST": "admitted", "TICK": "tick_loop"},
+        outputs={"TOKEN": "tokens", "RESPONSE": "responses",
+                 "TICK_OUT": "ticks"},
+        input_side_packets={"engine": "engine"},
+        options=engine_opts,
+        executor="inference",
+        back_edge_inputs=["TICK"],
+    )
+    cfg.add_node(
+        "PassThroughCalculator", name="tick_loop",
+        inputs={"ticks": "ticks"},
+        outputs={"ticks": "tick_loop"},
+    )
+    cfg.add_node(
+        "PassThroughCalculator", name="finished_loop",
         inputs={"responses": "responses"},
         outputs={"responses": "responses_loop"},
     )

@@ -1,0 +1,261 @@
+"""GraphServer — multi-request LLM serving on the MediaPipe graph runtime.
+
+The server owns a continuous-batching graph
+(:func:`repro.serving.pipeline.build_continuous_serving_graph`): concurrent
+``submit`` calls feed request packets into the graph input stream, a
+``FlowLimiterCalculator`` admits them under ``max_in_flight``, the
+``ContinuousBatchCalculator`` inserts them into a running slot-based decode
+batch, and generated tokens come back through an ``OutputStreamPoller`` on
+the ``tokens`` stream that a background dispatcher thread routes to
+:class:`RequestHandle`s (the ``responses`` stream feeds the limiter's
+FINISHED loopback).
+
+    engine = LLMEngine(cfg, max_len=128)
+    with GraphServer(engine, num_slots=4) as server:
+        h = server.submit([1, 2, 3], max_new_tokens=8)
+        for tok in h.stream():       # tokens as they are generated
+            ...
+        tokens = h.result()          # the full generation, np.int32 [n]
+
+Determinism: greedy decode through the server is bit-identical to
+``LLMEngine.generate`` one request at a time — prefill batches group only
+equal-length prompts (no padding) and every decode-batch row op is
+row-independent.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from typing import Any, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from ..core.graph import Graph, OutputStreamPoller
+from .engine import LLMEngine
+from .pipeline import build_continuous_serving_graph
+
+
+class RequestHandle:
+    """Client-side handle to one in-flight generation request."""
+
+    _END = object()
+
+    def __init__(self, request_id: Any):
+        self.id = request_id
+        self._events: "queue.Queue" = queue.Queue()
+        self._done = threading.Event()
+        self._tokens: List[int] = []
+        self._result: Optional[np.ndarray] = None
+        self._finish_reason = ""
+        self._error: Optional[BaseException] = None
+
+    # -- fed by the server's dispatcher thread (one thread: the TOKEN
+    # stream is the single source of truth, so tokens and completion can
+    # never be observed out of order) ----------------------------------
+    def _on_token(self, token: int, finished: bool, reason: str) -> None:
+        self._tokens.append(token)
+        self._events.put(token)
+        if finished:
+            self._result = np.asarray(self._tokens, np.int32)
+            self._finish_reason = reason
+            self._events.put(self._END)
+            self._done.set()
+
+    def _on_error(self, err: BaseException) -> None:
+        if not self._done.is_set():
+            self._error = err
+            self._events.put(self._END)
+            self._done.set()
+
+    # -- client API ----------------------------------------------------
+    def stream(self, timeout: Optional[float] = 120.0) -> Iterator[int]:
+        """Yield generated token ids as they arrive, until completion."""
+        while True:
+            ev = self._events.get(timeout=timeout)
+            if ev is self._END:
+                if self._error is not None:
+                    raise RuntimeError(
+                        f"request {self.id!r} failed") from self._error
+                return
+            yield ev
+
+    def result(self, timeout: Optional[float] = 120.0) -> np.ndarray:
+        """Block until finished; returns the generated tokens [n] int32."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.id!r} not finished "
+                               f"after {timeout}s")
+        if self._error is not None:
+            raise RuntimeError(f"request {self.id!r} failed") from self._error
+        return self._result
+
+    @property
+    def finish_reason(self) -> str:
+        return self._finish_reason
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+class GraphServer:
+    """Continuous-batching LLM server over the graph runtime.
+
+    Thread-safe: ``submit`` may be called from any number of client
+    threads.
+
+    Overload behaviour: with ``drop_on_overload=True`` the limiter keeps
+    **no** waiting queue (``queue_size`` is ignored) and sheds every
+    request beyond ``max_in_flight`` upstream of prefill, mirroring the
+    paper's real-time pipelines where stale frames are simply discarded.
+    With the default ``drop_on_overload=False`` requests wait in the
+    limiter's queue, but a burst beyond ``max_in_flight + queue_size``
+    outstanding is still shed.  Either way a shed request's handle stays
+    unresolved until :meth:`close` fails it (poll :meth:`stats` for the
+    drop count).
+    """
+
+    def __init__(self, engine: LLMEngine, *, num_slots: int = 4,
+                 max_in_flight: int = 0, queue_size: int = 1024,
+                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
+                 drop_on_overload: bool = False, enable_tracer: bool = True):
+        self.engine = engine
+        self._default_max_new = max_new_tokens
+        cfg = build_continuous_serving_graph(
+            num_slots=num_slots, max_in_flight=max_in_flight,
+            queue_size=queue_size, max_new_tokens=max_new_tokens,
+            eos_id=eos_id, drop_on_overload=drop_on_overload,
+            enable_tracer=enable_tracer)
+        self.graph = Graph(cfg, side_packets={"engine": engine})
+        self._token_poller = self.graph.add_output_stream_poller("tokens")
+        self._handles: Dict[Any, RequestHandle] = {}
+        self._lock = threading.Lock()
+        self._ts = itertools.count()
+        self._auto_id = itertools.count()
+        self._closed = False
+        self._final_stats: Dict[str, Any] = {}
+        self.graph.start_run()
+        self._threads = [
+            threading.Thread(target=self._pump_tokens, daemon=True,
+                             name="graphserver-tokens"),
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- client API ----------------------------------------------------
+    def submit(self, tokens, max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None,
+               request_id: Any = None) -> RequestHandle:
+        """Enqueue one generation request; returns immediately.
+
+        Invalid requests are rejected here, client-side — an error thrown
+        inside a graph node would terminate the whole run."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        new = self._default_max_new if max_new_tokens is None \
+            else int(max_new_tokens)
+        if tokens.size == 0:
+            raise ValueError("empty prompt")
+        if tokens.size + new > self.engine.max_len:
+            raise ValueError(
+                f"prompt ({tokens.size}) + max_new_tokens ({new}) exceeds "
+                f"engine max_len ({self.engine.max_len})")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("server is closed")
+            if request_id is None:
+                request_id = f"req-{next(self._auto_id)}"
+            if request_id in self._handles:
+                raise ValueError(f"duplicate request id {request_id!r}")
+            handle = RequestHandle(request_id)
+            self._handles[request_id] = handle
+            payload = {"tokens": tokens, "id": request_id}
+            if max_new_tokens is not None:
+                payload["max_new_tokens"] = int(max_new_tokens)
+            if eos_id is not None:
+                payload["eos_id"] = int(eos_id)
+            # feed the graph under the server lock: stream timestamps must
+            # be added in allocation order or a faster thread would trip
+            # the monotonicity check.  (The requests edge is unbounded, so
+            # this never blocks on back-pressure.)
+            self.graph.add_packet_to_input_stream("requests", payload,
+                                                  next(self._ts))
+        return handle
+
+    def generate(self, tokens, max_new_tokens: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 timeout: Optional[float] = 120.0) -> np.ndarray:
+        """Blocking convenience wrapper: submit + result."""
+        return self.submit(tokens, max_new_tokens, eos_id).result(timeout)
+
+    def stats(self) -> Dict[str, Any]:
+        """Limiter + scheduler counters (live)."""
+        out: Dict[str, Any] = {}
+        for node in self.graph.nodes:
+            if node.name == "limiter":
+                limiter = node.calculator
+                out["admitted"] = getattr(limiter, "admitted", 0)
+                out["dropped"] = getattr(limiter, "dropped", 0)
+                out["in_flight"] = getattr(limiter, "in_flight", 0)
+            elif node.name == "engine":
+                sched = getattr(node.calculator, "sched", None)
+                if sched is not None:
+                    out["scheduler"] = dict(sched.stats)
+        return out
+
+    def close(self, timeout: float = 300.0) -> Dict[str, Any]:
+        """Stop accepting requests, drain in-flight work, stop the graph.
+        Returns the final :meth:`stats` snapshot."""
+        with self._lock:
+            if self._closed:
+                return self._final_stats
+            self._closed = True
+        self.graph.close_all_input_streams()
+        try:
+            self.graph.wait_until_done(timeout=timeout)
+        finally:
+            for t in self._threads:
+                t.join(timeout=10.0)
+            self._fail_pending(RuntimeError("server closed"))
+        self._final_stats = self.stats()
+        return self._final_stats
+
+    def __enter__(self) -> "GraphServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- dispatchers ----------------------------------------------------
+    def _handle_of(self, rid: Any) -> Optional[RequestHandle]:
+        with self._lock:
+            return self._handles.get(rid)
+
+    def _pump_tokens(self) -> None:
+        self._pump(self._token_poller, self._dispatch_token)
+
+    def _pump(self, poller: OutputStreamPoller, dispatch) -> None:
+        try:
+            while True:
+                pkt = poller.next(timeout=None)
+                if pkt is None:          # stream closed and drained
+                    return
+                dispatch(pkt.payload)
+        except BaseException as e:       # graph error: fail fast
+            self._fail_pending(e)
+
+    def _dispatch_token(self, payload: Dict[str, Any]) -> None:
+        h = self._handle_of(payload["id"])
+        if h is not None:
+            h._on_token(payload["token"], payload["finished"],
+                        payload.get("finish_reason", ""))
+            if payload["finished"]:
+                # prune: the handle owns its result now; keeping it in the
+                # server map would grow memory forever on a long-lived
+                # server and block the id from ever being reused
+                with self._lock:
+                    self._handles.pop(payload["id"], None)
+
+    def _fail_pending(self, err: BaseException) -> None:
+        with self._lock:
+            handles = list(self._handles.values())
+        for h in handles:
+            h._on_error(err)

@@ -5,6 +5,7 @@ import threading
 import time
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.calculators  # noqa: F401

@@ -3,6 +3,9 @@ default-policy guarantees (as properties over random arrival interleavings),
 and the immediate / sync-set policies."""
 import itertools
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Timestamp, make_packet

@@ -1,5 +1,6 @@
 """Unit tests: timestamps (ordering, bounds), packets, stream queues."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core import Packet, Timestamp, make_packet, ts
