@@ -37,7 +37,7 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def _chain_graph(n_nodes: int, threads: int, delay: float,
                  tracer: bool = False):
     import repro.calculators  # noqa: F401
-    from repro.core import GraphConfig
+    from repro.core import GraphBuilder
     from repro.core import register_calculator, Calculator, contract, AnyType
 
     if not hasattr(_chain_graph, "_registered"):
@@ -61,14 +61,14 @@ def _chain_graph(n_nodes: int, threads: int, delay: float,
 
         _chain_graph._registered = True
 
-    cfg = GraphConfig(input_streams=["s0"],
-                      output_streams=[f"s{n_nodes}"],
-                      num_threads=threads, enable_tracer=tracer)
+    b = GraphBuilder(num_threads=threads, enable_tracer=tracer)
+    s = b.input("s0")
     for i in range(n_nodes):
-        cfg.add_node("BenchSpinCalculator", name=f"n{i}",
-                     inputs={"IN": f"s{i}"}, outputs={"OUT": f"s{i+1}"},
-                     options={"delay": delay})
-    return cfg
+        node = b.add_node("BenchSpinCalculator", name=f"n{i}",
+                          inputs={"IN": s}, options={"delay": delay})
+        s = node.out("OUT", name=f"s{i+1}")
+    b.output(s)
+    return b.build()
 
 
 def _run_chain(cfg, n_packets: int, out_stream: str) -> float:
@@ -103,20 +103,20 @@ def bench_scheduler_pipelining() -> None:
 def bench_sync_policy_overhead() -> None:
     """§4.1.3: cost of the deterministic default join vs a plain chain."""
     import repro.calculators  # noqa: F401
-    from repro.core import Graph, GraphConfig
+    from repro.core import Graph, GraphBuilder
     n = 2000
     # plain 2-node chain
     t_chain = _run_chain(_chain_graph(2, 4, 0.0), n, "s2")
     # fan-out/join with the default policy
-    cfg = GraphConfig(input_streams=["s0"], output_streams=["out"],
-                      num_threads=4)
-    cfg.add_node("BenchSpinCalculator", name="a",
-                 inputs={"IN": "s0"}, outputs={"OUT": "l"})
-    cfg.add_node("BenchSpinCalculator", name="b",
-                 inputs={"IN": "s0"}, outputs={"OUT": "r"})
-    cfg.add_node("PassThroughCalculator", name="join",
-                 inputs={"l": "l", "r": "r"}, outputs={"l": "out"})
-    g = Graph(cfg)
+    b = GraphBuilder(num_threads=4)
+    s0 = b.input("s0")
+    left = b.add_node("BenchSpinCalculator", name="a", inputs={"IN": s0})
+    right = b.add_node("BenchSpinCalculator", name="b", inputs={"IN": s0})
+    join = b.add_node("PassThroughCalculator", name="join",
+                      inputs={"l": left.out("OUT", name="l"),
+                              "r": right.out("OUT", name="r")})
+    b.output(join.out("l", name="out"))
+    g = Graph(b.build())
     done = []
     g.observe_output_stream("out", lambda p: done.append(p))
     g.start_run()
@@ -136,21 +136,22 @@ def bench_flow_limiter() -> None:
     ADMITTED packets near the no-load service time and drops the rest
     upstream."""
     import repro.calculators  # noqa: F401
-    from repro.core import Graph, GraphConfig
+    from repro.core import Graph, GraphBuilder
     service = 0.004
-    cfg = GraphConfig(input_streams=["in"], output_streams=["out"],
-                      num_threads=4)
-    cfg.add_node("FlowLimiterCalculator", name="lim",
-                 inputs={"IN": "in", "FINISHED": "loop"},
-                 outputs={"OUT": "adm"},
-                 options={"max_in_flight": 1},
-                 back_edge_inputs=["FINISHED"])
-    cfg.add_node("BenchSpinCalculator", name="work",
-                 inputs={"IN": "adm"}, outputs={"OUT": "out"},
-                 options={"delay": service})
-    cfg.add_node("PassThroughCalculator", name="loop",
-                 inputs={"out": "out"}, outputs={"out": "loop"})
-    g = Graph(cfg)
+    b = GraphBuilder(num_threads=4)
+    incoming = b.input("in")
+    finished = b.loopback()
+    lim = b.add_node("FlowLimiterCalculator", name="lim",
+                     inputs={"IN": incoming, "FINISHED": finished},
+                     options={"max_in_flight": 1})
+    work = b.add_node("BenchSpinCalculator", name="work",
+                      inputs={"IN": lim.out("OUT", name="adm")},
+                      options={"delay": service})
+    out = b.output(work.out("OUT", name="out"))
+    loop = b.add_node("PassThroughCalculator", name="loop",
+                      inputs={"out": out})
+    finished.tie(loop.out("out", name="loop"))
+    g = Graph(b.build())
     lat = {}
     sub = {}
     g.observe_output_stream("out", lambda p: lat.__setitem__(
@@ -186,25 +187,27 @@ def bench_tracer_overhead() -> None:
 def bench_detection_pipeline() -> None:
     """§6.1 Fig.-1 graph end-to-end."""
     import repro.calculators  # noqa: F401
-    from repro.core import Graph, GraphConfig
-    cfg = GraphConfig(input_streams=["frame"], output_streams=["annotated"],
-                      num_threads=4)
-    cfg.add_node("FrameSelectCalculator", name="select",
-                 inputs={"IN": "frame"}, outputs={"OUT": "sel"},
-                 options={"every": 4})
-    cfg.add_node("ObjectDetectorCalculator", name="detect",
-                 inputs={"FRAME": "sel"}, outputs={"DETECTIONS": "det"},
-                 options={"threshold": 0.5})
-    cfg.add_node("TrackerCalculator", name="track",
-                 inputs={"FRAME": "frame", "RESET": "reset"},
-                 outputs={"TRACKED": "trk"}, back_edge_inputs=["RESET"])
-    cfg.add_node("DetectionMergeCalculator", name="merge",
-                 inputs={"DETECTIONS": "det", "TRACKED": "trk"},
-                 outputs={"MERGED": "merged", "RESET": "reset"})
-    cfg.add_node("AnnotationOverlayCalculator", name="annotate",
-                 inputs={"FRAME": "frame", "DETECTIONS": "merged"},
-                 outputs={"ANNOTATED_FRAME": "annotated"})
-    g = Graph(cfg)
+    from repro.core import Graph, GraphBuilder
+    b = GraphBuilder(num_threads=4)
+    frame = b.input("frame")
+    select = b.add_node("FrameSelectCalculator", name="select",
+                        inputs={"IN": frame}, options={"every": 4})
+    detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                        inputs={"FRAME": select.out("OUT", name="sel")},
+                        options={"threshold": 0.5})
+    reset = b.loopback()
+    track = b.add_node("TrackerCalculator", name="track",
+                       inputs={"FRAME": frame, "RESET": reset})
+    merge = b.add_node("DetectionMergeCalculator", name="merge",
+                       inputs={"DETECTIONS": detect.out("DETECTIONS",
+                                                        name="det"),
+                               "TRACKED": track.out("TRACKED", name="trk")})
+    merged = merge.out("MERGED", name="merged")
+    reset.tie(merge.out("RESET", name="reset"))
+    annotate = b.add_node("AnnotationOverlayCalculator", name="annotate",
+                          inputs={"FRAME": frame, "DETECTIONS": merged})
+    b.output(annotate.out("ANNOTATED_FRAME", name="annotated"))
+    g = Graph(b.build())
     done = []
     g.observe_output_stream("annotated", lambda p: done.append(p))
     g.start_run()

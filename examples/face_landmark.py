@@ -12,34 +12,42 @@ back onto every frame, overlaid in sync (paper §6.2).
 import numpy as np
 
 import repro.calculators  # noqa: F401
-from repro.core import Graph, GraphConfig, visualizer
+from repro.core import Graph, GraphBuilder, visualizer
 
-cfg = GraphConfig(
-    input_streams=["frame"],
-    output_streams=["ANNOTATED_FRAME"],
-    num_threads=4,
-    enable_tracer=True,
-)
-cfg.add_node("DemuxCalculator", name="demux",
-             inputs={"IN": "frame"},
-             outputs={"OUT0": "frames_lm", "OUT1": "frames_seg"})
-cfg.add_node("FaceLandmarkCalculator", name="landmarks",
-             inputs={"FRAME": "frames_lm"},
-             outputs={"LANDMARKS": "lm_sparse"},
-             options={"num_landmarks": 5})
-cfg.add_node("SegmentationCalculator", name="segment",
-             inputs={"FRAME": "frames_seg"},
-             outputs={"MASK": "mask_sparse"})
-cfg.add_node("TemporalInterpolationCalculator", name="lm_interp",
-             inputs={"VALUE": "lm_sparse", "TICK": "frame"},
-             outputs={"OUT": "lm_dense"})
-cfg.add_node("TemporalInterpolationCalculator", name="mask_interp",
-             inputs={"VALUE": "mask_sparse", "TICK": "frame"},
-             outputs={"OUT": "mask_dense"})
-cfg.add_node("AnnotationOverlayCalculator", name="overlay",
-             inputs={"FRAME": "frame", "LANDMARKS": "lm_dense",
-                     "MASK": "mask_dense"},
-             outputs={"ANNOTATED_FRAME": "ANNOTATED_FRAME"})
+b = GraphBuilder(num_threads=4, enable_tracer=True)
+frame = b.input("frame")
+
+
+def interpolated(name, value, tick, out_name):
+    """A 'subgraph' in the builder API is just a Python function taking and
+    returning stream handles (paper §3.6 composition, no expansion pass)."""
+    node = b.add_node("TemporalInterpolationCalculator", name=name,
+                      inputs={"VALUE": value, "TICK": tick})
+    return node.out("OUT", name=out_name)
+
+
+demux = b.add_node("DemuxCalculator", name="demux", inputs={"IN": frame})
+frames_lm = demux.out("OUT0", name="frames_lm")
+frames_seg = demux.out("OUT1", name="frames_seg")
+
+landmarks = b.add_node("FaceLandmarkCalculator", name="landmarks",
+                       inputs={"FRAME": frames_lm},
+                       options={"num_landmarks": 5})
+segment = b.add_node("SegmentationCalculator", name="segment",
+                     inputs={"FRAME": frames_seg})
+
+lm_dense = interpolated("lm_interp",
+                        landmarks.out("LANDMARKS", name="lm_sparse"),
+                        frame, "lm_dense")
+mask_dense = interpolated("mask_interp",
+                          segment.out("MASK", name="mask_sparse"),
+                          frame, "mask_dense")
+
+overlay = b.add_node("AnnotationOverlayCalculator", name="overlay",
+                     inputs={"FRAME": frame, "LANDMARKS": lm_dense,
+                             "MASK": mask_dense})
+b.output(overlay.out("ANNOTATED_FRAME", name="ANNOTATED_FRAME"))
+cfg = b.build()
 
 print(visualizer.topology_ascii(cfg))
 

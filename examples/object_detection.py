@@ -12,6 +12,9 @@ detection branch + fast tracking branch, merged deterministically.
 The detector runs on every 4th frame; the tracker advances boxes on every
 frame; the merge node's DEFAULT INPUT POLICY aligns detections with the
 exact frame they came from (paper §6.1 'effectively hiding model latency').
+The RESET loopback is a ``b.loopback()`` handle: consumed by the tracker
+before its producer exists, tied to the merge output afterwards — the back
+edge is declared automatically.
 
     PYTHONPATH=src python examples/object_detection.py
 """
@@ -20,40 +23,39 @@ import time
 import numpy as np
 
 import repro.calculators  # noqa: F401
-from repro.core import ExecutorConfig, Graph, GraphConfig, visualizer
+from repro.core import Graph, GraphBuilder, visualizer
 
-cfg = GraphConfig(
-    input_streams=["frame"],
-    output_streams=["annotated", "merged"],
-    executors=[ExecutorConfig("detector_executor", 1)],
-    num_threads=4,
-    enable_tracer=True,
-)
-cfg.add_node("FrameSelectCalculator", name="select",
-             inputs={"IN": "frame"}, outputs={"OUT": "selected"},
-             options={"every": 4})
-cfg.add_node("ObjectDetectorCalculator", name="detect",
-             inputs={"FRAME": "selected"},
-             outputs={"DETECTIONS": "detections"},
-             options={"threshold": 0.55},
-             executor="detector_executor")   # paper §3.6 thread locality
-cfg.add_node("TrackerCalculator", name="track",
-             inputs={"FRAME": "frame", "RESET": "reset"},
-             outputs={"TRACKED": "tracked"},
-             back_edge_inputs=["RESET"])
-cfg.add_node("DetectionMergeCalculator", name="merge",
-             inputs={"DETECTIONS": "detections", "TRACKED": "tracked"},
-             outputs={"MERGED": "merged", "RESET": "reset"})
-cfg.add_node("AnnotationOverlayCalculator", name="annotate",
-             inputs={"FRAME": "frame", "DETECTIONS": "merged"},
-             outputs={"ANNOTATED_FRAME": "annotated"})
+b = GraphBuilder(num_threads=4, enable_tracer=True)
+frame = b.input("frame")
+b.executor("detector_executor", 1)
+
+select = b.add_node("FrameSelectCalculator", name="select",
+                    inputs={"IN": frame}, options={"every": 4})
+detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                    inputs={"FRAME": select.out("OUT", name="selected")},
+                    options={"threshold": 0.55},
+                    executor="detector_executor")  # paper §3.6 thread locality
+reset = b.loopback()
+track = b.add_node("TrackerCalculator", name="track",
+                   inputs={"FRAME": frame, "RESET": reset})
+merge = b.add_node("DetectionMergeCalculator", name="merge",
+                   inputs={"DETECTIONS": detect.out("DETECTIONS",
+                                                    name="detections"),
+                           "TRACKED": track.out("TRACKED", name="tracked")})
+merged = merge.out("MERGED", name="merged")
+reset.tie(merge.out("RESET", name="reset"))
+annotate = b.add_node("AnnotationOverlayCalculator", name="annotate",
+                      inputs={"FRAME": frame, "DETECTIONS": merged})
+b.output(annotate.out("ANNOTATED_FRAME", name="annotated"))
+b.output(merged)
+cfg = b.build()
 
 print(visualizer.topology_ascii(cfg))
 
 g = Graph(cfg)
-annotated, merged = [], []
+annotated, merged_out = [], []
 g.observe_output_stream("annotated", lambda p: annotated.append(p))
-g.observe_output_stream("merged", lambda p: merged.append(
+g.observe_output_stream("merged", lambda p: merged_out.append(
     (p.timestamp.value, len(p.payload))))
 g.start_run()
 
@@ -73,7 +75,7 @@ g.wait_until_done()
 # every frame got an annotated output, perfectly aligned
 stamps = [p.timestamp.value for p in annotated]
 assert stamps == list(range(N)), stamps
-det_counts = dict(merged)
+det_counts = dict(merged_out)
 print(f"\n{N} frames annotated; detections per frame: "
       f"{[det_counts.get(t, 0) for t in range(N)]}")
 assert any(c > 0 for c in det_counts.values()), "object never detected"

@@ -7,23 +7,26 @@ trace — the 60-second tour of the framework (paper §3).
 import numpy as np
 
 import repro.calculators  # noqa: F401 — registers the calculator library
-from repro.core import Graph, GraphConfig, visualizer
+from repro.core import Graph, GraphBuilder, visualizer
 
 # 1. Declare the pipeline: frames -> detector -> annotator -> out.
-cfg = GraphConfig(
-    input_streams=["frame"],
-    output_streams=["annotated"],
-    enable_tracer=True,
-)
-cfg.add_node("ObjectDetectorCalculator", name="detect",
-             inputs={"FRAME": "frame"},
-             outputs={"DETECTIONS": "detections"},
-             options={"threshold": 0.4},
-             input_side_packets={"labels": "labels"})
-cfg.add_node("AnnotationOverlayCalculator", name="annotate",
-             inputs={"FRAME": "frame", "DETECTIONS": "detections"},
-             outputs={"ANNOTATED_FRAME": "annotated"})
-cfg.input_side_packets.append("labels")
+#    The builder checks every port against the calculator contracts as the
+#    graph is written — a typo like detect["FRMAE"] fails on that line.
+b = GraphBuilder(enable_tracer=True)
+frame = b.input("frame")
+labels = b.side_input("labels")
+
+detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                    options={"threshold": 0.4},
+                    side_inputs={"labels": labels})
+detect["FRAME"] = frame
+detections = detect.out("DETECTIONS", name="detections")
+
+annotate = b.add_node("AnnotationOverlayCalculator", name="annotate",
+                      inputs={"FRAME": frame, "DETECTIONS": detections})
+b.output(annotate.out("ANNOTATED_FRAME", name="annotated"))
+
+cfg = b.build()      # a plain GraphConfig — runtime/text format unchanged
 
 print(visualizer.topology_ascii(cfg))
 print()

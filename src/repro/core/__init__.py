@@ -4,7 +4,8 @@ Public API surface:
     Timestamp, Packet, make_packet
     Calculator, SourceCalculator, CalculatorContract, contract
     register_calculator, register_subgraph
-    GraphConfig, NodeConfig, ExecutorConfig
+    GraphBuilder, Stream, SidePacket (typed fluent authoring)
+    GraphConfig, NodeConfig, ExecutorConfig (low-level / serialization)
     Graph, OutputStreamPoller
     Tracer / visualizer helpers
 """
@@ -17,6 +18,8 @@ from .registry import (register_calculator, get_calculator, is_registered,
                        registered_calculators)
 from .graph_config import (ExecutorConfig, GraphConfig, NodeConfig,
                            expand_subgraphs, register_subgraph)
+from .builder import (BuilderError, GraphBuilder, LoopbackStream, NodeHandle,
+                      SidePacket, Stream)
 from .input_policy import (DefaultInputPolicy, ImmediateInputPolicy,
                            SyncSetInputPolicy, make_input_policy)
 from .validation import GraphValidationError, validate
@@ -35,6 +38,8 @@ __all__ = [
     "registered_calculators",
     "ExecutorConfig", "GraphConfig", "NodeConfig", "expand_subgraphs",
     "register_subgraph",
+    "BuilderError", "GraphBuilder", "LoopbackStream", "NodeHandle",
+    "SidePacket", "Stream",
     "DefaultInputPolicy", "ImmediateInputPolicy", "SyncSetInputPolicy",
     "make_input_policy",
     "GraphValidationError", "validate",

@@ -39,8 +39,49 @@ class NodeConfig:
     # per-input-stream queue limit; -1 inherits graph default
     max_queue_size: int = -1
 
+    def __post_init__(self) -> None:
+        for field in ("inputs", "outputs", "input_side_packets",
+                      "output_side_packets"):
+            value = getattr(self, field)
+            if isinstance(value, (list, tuple)):
+                setattr(self, field, self._map_positional(field, list(value)))
+
+    def _map_positional(self, field: str, streams: List[str]) -> Dict[str, str]:
+        ports = _declared_port_order(self.calculator, field)
+        if ports is None:
+            raise ValueError(
+                f"node {self.calculator!r}: positional {field} need a "
+                f"declared contract port order; this calculator has a "
+                f"variable (DYNAMIC) port set — use an explicit "
+                f"{{port: stream}} dict")
+        if len(streams) > len(ports):
+            raise ValueError(
+                f"node {self.calculator!r}: {len(streams)} positional "
+                f"{field} but the contract declares only {len(ports)} "
+                f"ports ({ports})")
+        return {port: stream for port, stream in zip(ports, streams)}
+
     def display_name(self, index: int) -> str:
         return self.name or f"{self.calculator}_{index}"
+
+
+def _declared_port_order(calculator: str, field: str) -> Optional[List[str]]:
+    """Contract (or subgraph-interface) port order for positional mapping;
+    None when the calculator's port set is variable (DYNAMIC)."""
+    sub = registry.get_subgraph(calculator)
+    if sub is not None:
+        return {"inputs": list(sub.input_streams),
+                "outputs": list(sub.output_streams),
+                "input_side_packets": list(sub.input_side_packets),
+                "output_side_packets": list(sub.output_side_packets)}[field]
+    cls = registry.get_calculator(calculator)
+    if getattr(cls, "DYNAMIC", False):
+        return None
+    c = cls.get_contract()
+    return {"inputs": list(c.inputs),
+            "outputs": list(c.outputs),
+            "input_side_packets": list(c.input_side_packets),
+            "output_side_packets": list(c.output_side_packets)}[field]
 
 
 @dataclasses.dataclass

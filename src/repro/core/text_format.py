@@ -35,6 +35,26 @@ class TextFormatError(ValueError):
     pass
 
 
+class _NullToken:
+    """Marks an unquoted ``null``/``none`` scalar.  Only option values may
+    be null (they round-trip Python ``None``); everywhere else the token is
+    rejected so a stream/field is never silently renamed to 'None'."""
+
+    def __repr__(self) -> str:
+        return "null"
+
+
+_NULL = _NullToken()
+
+
+def _scalar(value: Any, key: str) -> Any:
+    if value is _NULL:
+        raise TextFormatError(
+            f"field {key!r}: bare null is only valid as an option value "
+            f"(quote it for a literal string)")
+    return value
+
+
 _TOKEN_RE = re.compile(r'"[^"]*"|\{|\}|[^\s{}]+')
 
 
@@ -59,6 +79,8 @@ def _coerce(tok: str) -> Any:
     low = t.lower()
     if low in ("true", "false"):
         return low == "true"
+    if low in ("null", "none"):     # unset option values (quoted stays str)
+        return _NULL
     try:
         return int(t)
     except ValueError:
@@ -125,6 +147,8 @@ class _Parser:
 def _node_from_fields(fields: List[Tuple[str, Any]]) -> NodeConfig:
     node = NodeConfig(calculator="")
     for key, value in fields:
+        if key != "options":
+            value = _scalar(value, key)
         if key == "calculator":
             node.calculator = str(value)
         elif key == "name":
@@ -152,7 +176,8 @@ def _node_from_fields(fields: List[Tuple[str, Any]]) -> NodeConfig:
         elif key == "back_edge_input":
             node.back_edge_inputs.append(str(value))
         elif key == "options":
-            node.options.update({k: v for k, v in value})
+            node.options.update({k: (None if v is _NULL else v)
+                                 for k, v in value})
         else:
             raise TextFormatError(f"unknown node field {key!r}")
     if not node.calculator:
@@ -167,6 +192,8 @@ def parse_graph_config(text: str) -> GraphConfig:
         raise TextFormatError(f"trailing tokens at {parser.peek()!r}")
     cfg = GraphConfig()
     for key, value in fields:
+        if key not in ("executor", "node"):
+            value = _scalar(value, key)
         if key == "input_stream":
             cfg.input_streams.append(str(value))
         elif key == "output_stream":
@@ -184,7 +211,7 @@ def parse_graph_config(text: str) -> GraphConfig:
         elif key == "trace_buffer_size":
             cfg.trace_buffer_size = int(value)
         elif key == "executor":
-            kw = {k: v for k, v in value}
+            kw = {k: _scalar(v, f"executor.{k}") for k, v in value}
             cfg.executors.append(ExecutorConfig(
                 name=str(kw.get("name", "default")),
                 num_threads=int(kw.get("num_threads", 1))))
@@ -245,6 +272,7 @@ def serialize_graph_config(cfg: GraphConfig) -> str:
         if n.options:
             opts = " ".join(
                 f'{k}: "{v}"' if isinstance(v, str) else
+                f"{k}: null" if v is None else
                 f"{k}: {str(v).lower() if isinstance(v, bool) else v}"
                 for k, v in n.options.items())
             lines.append(f"  options {{ {opts} }}")

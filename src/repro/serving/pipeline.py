@@ -21,6 +21,12 @@ thread-locality advice).  In the continuous graph the decode loop itself is
 a loopback stream: every decode step is one scheduler dispatch, so
 admission, back-pressure and the tracer all see the loop at step
 granularity.
+
+Both graphs are authored with :class:`~repro.core.builder.GraphBuilder`:
+ports are contract-checked as the graph is written, and the FINISHED/TICK
+back edges are declared by ``b.loopback()`` handles instead of manual
+``back_edge_inputs`` bookkeeping.  ``build()`` returns a plain
+``GraphConfig`` for the runtime.
 """
 from __future__ import annotations
 
@@ -28,52 +34,42 @@ from typing import Optional
 
 from .. import calculators as _basic_calculators  # noqa: F401 (registers
 #     PassThroughCalculator & co. for the loopback nodes)
-from ..core.graph_config import ExecutorConfig, GraphConfig
+from ..core.builder import GraphBuilder
+from ..core.graph_config import GraphConfig
 
 
 def build_serving_graph(*, batch_size: int = 4, max_in_flight: int = 2,
                         queue_size: int = 256,
                         drop_on_overload: bool = False) -> GraphConfig:
-    cfg = GraphConfig(
-        input_streams=["requests"],
-        output_streams=["responses"],
-        input_side_packets=["engine"],
-        executors=[ExecutorConfig("inference", 1)],
-        num_threads=4,
-        enable_tracer=True,
-    )
-    cfg.add_node(
+    b = GraphBuilder(num_threads=4, enable_tracer=True)
+    requests = b.input("requests")
+    engine_sp = b.side_input("engine")
+    b.executor("inference", 1)
+
+    finished = b.loopback()
+    limiter = b.add_node(
         "FlowLimiterCalculator", name="limiter",
-        inputs={"IN": "requests", "FINISHED": "responses_loop"},
-        outputs={"OUT": "admitted"},
+        inputs={"IN": requests, "FINISHED": finished},
         options={"max_in_flight": max_in_flight * batch_size,
-                 "queue_size": 0 if drop_on_overload else queue_size},
-        back_edge_inputs=["FINISHED"],
-    )
-    cfg.add_node(
+                 "queue_size": 0 if drop_on_overload else queue_size})
+    batcher = b.add_node(
         "BatcherCalculator", name="batcher",
-        inputs={"REQUEST": "admitted"},
-        outputs={"BATCH": "batches"},
-        options={"batch_size": batch_size},
-    )
-    cfg.add_node(
+        inputs={"REQUEST": limiter.out("OUT", name="admitted")},
+        options={"batch_size": batch_size})
+    engine = b.add_node(
         "LLMPrefillCalculator", name="engine",
-        inputs={"BATCH": "batches"},
-        outputs={"BATCH_RESULT": "batch_results"},
-        input_side_packets={"engine": "engine"},
-        executor="inference",
-    )
-    cfg.add_node(
+        inputs={"BATCH": batcher.out("BATCH", name="batches")},
+        side_inputs={"engine": engine_sp},
+        executor="inference")
+    unbatch = b.add_node(
         "UnbatchCalculator", name="unbatch",
-        inputs={"BATCH_RESULT": "batch_results"},
-        outputs={"RESPONSE": "responses"},
-    )
-    cfg.add_node(
-        "PassThroughCalculator", name="loop",
-        inputs={"responses": "responses"},
-        outputs={"responses": "responses_loop"},
-    )
-    return cfg
+        inputs={"BATCH_RESULT": engine.out("BATCH_RESULT",
+                                           name="batch_results")})
+    responses = b.output(unbatch.out("RESPONSE", name="responses"))
+    loop = b.add_node("PassThroughCalculator", name="loop",
+                      inputs={"responses": responses})
+    finished.tie(loop.out("responses", name="responses_loop"))
+    return b.build()
 
 
 def build_continuous_serving_graph(*, num_slots: int = 4,
@@ -94,43 +90,35 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     """
     if max_in_flight <= 0:
         max_in_flight = 2 * num_slots
-    cfg = GraphConfig(
-        input_streams=["requests"],
-        output_streams=["responses", "tokens"],
-        input_side_packets=["engine"],
-        executors=[ExecutorConfig("inference", 1)],
-        num_threads=4,
-        enable_tracer=enable_tracer,
-    )
-    cfg.add_node(
+    b = GraphBuilder(num_threads=4, enable_tracer=enable_tracer)
+    requests = b.input("requests")
+    engine_sp = b.side_input("engine")
+    b.executor("inference", 1)
+
+    finished = b.loopback()
+    tick = b.loopback()
+    limiter = b.add_node(
         "FlowLimiterCalculator", name="limiter",
-        inputs={"IN": "requests", "FINISHED": "responses_loop"},
-        outputs={"OUT": "admitted"},
+        inputs={"IN": requests, "FINISHED": finished},
         options={"max_in_flight": max_in_flight,
-                 "queue_size": 0 if drop_on_overload else queue_size},
-        back_edge_inputs=["FINISHED"],
-    )
-    engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens}
-    if eos_id is not None:     # omit from options: None doesn't round-trip
-        engine_opts["eos_id"] = eos_id     # through the text format
-    cfg.add_node(
+                 "queue_size": 0 if drop_on_overload else queue_size})
+    engine = b.add_node(
         "ContinuousBatchCalculator", name="engine",
-        inputs={"REQUEST": "admitted", "TICK": "tick_loop"},
-        outputs={"TOKEN": "tokens", "RESPONSE": "responses",
-                 "TICK_OUT": "ticks"},
-        input_side_packets={"engine": "engine"},
-        options=engine_opts,
-        executor="inference",
-        back_edge_inputs=["TICK"],
-    )
-    cfg.add_node(
-        "PassThroughCalculator", name="tick_loop",
-        inputs={"ticks": "ticks"},
-        outputs={"ticks": "tick_loop"},
-    )
-    cfg.add_node(
-        "PassThroughCalculator", name="finished_loop",
-        inputs={"responses": "responses"},
-        outputs={"responses": "responses_loop"},
-    )
-    return cfg
+        inputs={"REQUEST": limiter.out("OUT", name="admitted"),
+                "TICK": tick},
+        side_inputs={"engine": engine_sp},
+        options={"num_slots": num_slots, "max_new_tokens": max_new_tokens,
+                 "eos_id": eos_id},
+        executor="inference")
+    tokens = engine.out("TOKEN", name="tokens")
+    responses = engine.out("RESPONSE", name="responses")
+    ticks = engine.out("TICK_OUT", name="ticks")
+    b.output(responses)
+    b.output(tokens)
+    tick_loop = b.add_node("PassThroughCalculator", name="tick_loop",
+                           inputs={"ticks": ticks})
+    tick.tie(tick_loop.out("ticks", name="tick_loop"))
+    finished_loop = b.add_node("PassThroughCalculator", name="finished_loop",
+                               inputs={"responses": responses})
+    finished.tie(finished_loop.out("responses", name="responses_loop"))
+    return b.build()

@@ -1,0 +1,502 @@
+"""GraphBuilder: build-time contract checking, loopback back edges, and
+builder <-> GraphConfig equivalence (the authoring layer must emit configs
+that run identically to hand-written ones and round-trip the text format).
+"""
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401 — registers the calculator library
+from repro.core import (AnyType, BuilderError, Calculator, Graph,
+                        GraphBuilder, GraphConfig, ExecutorConfig,
+                        contract, register_calculator, register_subgraph,
+                        validate)
+from repro.core.text_format import parse_graph_config, serialize_graph_config
+from repro.serving.pipeline import (build_continuous_serving_graph,
+                                    build_serving_graph)
+
+
+@register_calculator(name="BuilderTestIntProducer")
+class _IntProducer(Calculator):
+    CONTRACT = contract().add_input("IN", AnyType).add_output("OUT", int)
+
+    def process(self, ctx):
+        pass
+
+
+@register_calculator(name="BuilderTestStrConsumer")
+class _StrConsumer(Calculator):
+    CONTRACT = contract().add_input("IN", str).add_output("OUT", str)
+
+    def process(self, ctx):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# build-time contract checking (all errors BEFORE Graph construction)
+# ---------------------------------------------------------------------------
+
+def test_misspelled_input_port_raises_at_connection():
+    b = GraphBuilder()
+    frame = b.input("frame")
+    detect = b.add_node("ObjectDetectorCalculator", name="detect")
+    with pytest.raises(BuilderError) as e:
+        detect["FRMAE"] = frame
+    msg = str(e.value)
+    assert "detect" in msg and "FRMAE" in msg
+    assert "FRAME" in msg          # valid alternative + did-you-mean
+    assert "did you mean" in msg
+
+
+def test_misspelled_output_port_raises():
+    b = GraphBuilder()
+    frame = b.input("frame")
+    detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                        inputs={"FRAME": frame})
+    with pytest.raises(BuilderError) as e:
+        detect.out("DETECTION")
+    assert "detect" in str(e.value) and "DETECTIONS" in str(e.value)
+
+
+def test_misspelled_side_packet_port_raises():
+    b = GraphBuilder()
+    labels = b.side_input("labels")
+    detect = b.add_node("ObjectDetectorCalculator", name="detect")
+    with pytest.raises(BuilderError) as e:
+        detect["lables"] = labels
+    assert "lables" in str(e.value) and "labels" in str(e.value)
+
+
+def test_unconnected_required_input_raises_at_build():
+    b = GraphBuilder()
+    b.input("frame")
+    detect = b.add_node("ObjectDetectorCalculator", name="detect")
+    b.output(detect.out("DETECTIONS"))
+    with pytest.raises(BuilderError) as e:
+        b.build()
+    msg = str(e.value)
+    assert "detect" in msg and "'FRAME'" in msg and "not connected" in msg
+
+
+def test_unconnected_required_side_packet_raises_at_build():
+    b = GraphBuilder()
+    batch = b.input("batches")
+    engine = b.add_node("LLMPrefillCalculator", name="engine",
+                        inputs={"BATCH": batch})
+    b.output(engine.out("BATCH_RESULT"))
+    with pytest.raises(BuilderError) as e:
+        b.build()
+    assert "engine" in str(e.value) and "side packet" in str(e.value)
+
+
+def test_undeclared_back_edge_cycle_raises_at_build():
+    # merge <-> track cycle with NO loopback declared anywhere
+    b = GraphBuilder()
+    frame = b.input("frame")
+    track = b.add_node("TrackerCalculator", name="track")
+    merge = b.add_node("DetectionMergeCalculator", name="merge")
+    track["FRAME"] = frame
+    track["RESET"] = merge.out("RESET")           # forward edge: cycle!
+    merge["DETECTIONS"] = track.out("TRACKED")
+    b.output(merge.out("MERGED"))
+    with pytest.raises(BuilderError) as e:
+        b.build()
+    msg = str(e.value)
+    assert "cycle" in msg and "back edge" in msg
+    assert "track" in msg and "RESET" in msg      # offending node and port
+
+
+def test_untied_loopback_raises_at_build():
+    b = GraphBuilder()
+    reqs = b.input("requests")
+    fin = b.loopback()
+    lim = b.add_node("FlowLimiterCalculator", name="limiter",
+                     inputs={"IN": reqs, "FINISHED": fin})
+    b.output(lim.out("OUT"))
+    with pytest.raises(BuilderError) as e:
+        b.build()
+    assert "limiter" in str(e.value) and "FINISHED" in str(e.value)
+    assert "tie" in str(e.value)
+
+
+def test_loopback_auto_populates_back_edges():
+    b = GraphBuilder()
+    reqs = b.input("requests")
+    fin = b.loopback()
+    lim = b.add_node("FlowLimiterCalculator", name="limiter",
+                     inputs={"IN": reqs, "FINISHED": fin})
+    out = b.output(lim.out("OUT", name="admitted"))
+    fin.tie(out)
+    cfg = b.build()
+    assert cfg.nodes[0].back_edge_inputs == ["FINISHED"]
+    assert cfg.nodes[0].inputs["FINISHED"] == "admitted"
+    validate(cfg)
+
+
+def test_type_mismatch_raises_at_connection():
+    b = GraphBuilder()
+    s = b.input("s")
+    prod = b.add_node("BuilderTestIntProducer", name="prod",
+                      inputs={"IN": s})
+    cons = b.add_node("BuilderTestStrConsumer", name="cons")
+    with pytest.raises(BuilderError) as e:
+        cons["IN"] = prod.out("OUT")
+    assert "type mismatch" in str(e.value)
+    assert "int" in str(e.value) and "str" in str(e.value)
+
+
+def test_type_mismatch_caught_when_loopback_is_tied():
+    b = GraphBuilder()
+    s = b.input("s")
+    lb = b.loopback()
+    cons = b.add_node("BuilderTestStrConsumer", name="cons",
+                      inputs={"IN": lb})       # spec unknown yet: allowed
+    cons.out("OUT")
+    prod = b.add_node("BuilderTestIntProducer", name="prod",
+                      inputs={"IN": s})
+    with pytest.raises(BuilderError) as e:
+        lb.tie(prod.out("OUT"))               # int into a str port
+    assert "type mismatch" in str(e.value) and "cons" in str(e.value)
+
+
+def test_add_node_is_atomic_on_connection_error():
+    b = GraphBuilder()
+    frame = b.input("frame")
+    with pytest.raises(BuilderError):
+        b.add_node("ObjectDetectorCalculator", name="detect",
+                   inputs={"FRMAE": frame})
+    # the failed node was not registered: name is free, build is clean
+    detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                        inputs={"FRAME": frame})
+    b.output(detect.out("DETECTIONS"))
+    cfg = b.build()
+    assert [n.name for n in cfg.nodes] == ["detect"]
+
+
+def test_side_out_rename_rejected():
+    b = GraphBuilder()
+    frame = b.input("frame")
+    # DYNAMIC node: side-out ports declared by use
+    node = b.add_node("PassThroughCalculator", name="p",
+                      inputs={"x": frame})
+    node.side_out("SP", name="a")
+    assert node.side_out("SP").name == "a"
+    with pytest.raises(BuilderError) as e:
+        node.side_out("SP", name="b")
+    assert "already named" in str(e.value)
+
+
+def test_unknown_calculator_raises_at_add_node():
+    b = GraphBuilder()
+    with pytest.raises(BuilderError) as e:
+        b.add_node("NoSuchCalculator")
+    assert "not registered" in str(e.value)
+
+
+def test_cross_builder_handle_rejected():
+    b1, b2 = GraphBuilder(), GraphBuilder()
+    s = b1.input("s")
+    node = b2.add_node("PassThroughCalculator", name="p")
+    with pytest.raises(BuilderError):
+        node["s"] = s
+
+
+def test_raw_string_rejected_as_connection():
+    b = GraphBuilder()
+    node = b.add_node("ObjectDetectorCalculator", name="detect")
+    with pytest.raises(BuilderError) as e:
+        node["FRAME"] = "frame"
+    assert "handle" in str(e.value)
+
+
+def test_duplicate_stream_name_rejected():
+    b = GraphBuilder()
+    s = b.input("frame")
+    n1 = b.add_node("FrameSelectCalculator", name="a", inputs={"IN": s})
+    n1.out("OUT", name="sel")
+    n2 = b.add_node("FrameSelectCalculator", name="b", inputs={"IN": s})
+    with pytest.raises(BuilderError) as e:
+        n2.out("OUT", name="sel")
+    assert "exactly one producer" in str(e.value)
+
+
+def test_double_connection_rejected():
+    b = GraphBuilder()
+    s = b.input("frame")
+    node = b.add_node("ObjectDetectorCalculator", name="d",
+                      inputs={"FRAME": s})
+    with pytest.raises(BuilderError):
+        node["FRAME"] = s
+
+
+def test_auto_stream_names_are_deterministic():
+    def make():
+        b = GraphBuilder()
+        frame = b.input("frame")
+        d = b.add_node("ObjectDetectorCalculator", inputs={"FRAME": frame})
+        a = b.add_node("AnnotationOverlayCalculator",
+                       inputs={"FRAME": frame,
+                               "DETECTIONS": d.out("DETECTIONS")})
+        b.output(a.out("ANNOTATED_FRAME"))
+        return b.build()
+    cfg1, cfg2 = make(), make()
+    assert cfg1 == cfg2
+    assert cfg1.nodes[0].outputs == {
+        "DETECTIONS": "ObjectDetectorCalculator_0__detections"}
+
+
+def test_positional_builder_inputs_map_to_contract_order():
+    b = GraphBuilder()
+    v = b.input("value")
+    t = b.input("tick")
+    node = b.add_node("TemporalInterpolationCalculator", name="interp",
+                      inputs=[v, t])     # VALUE, TICK in contract order
+    b.output(node.out("OUT"))
+    cfg = b.build()
+    assert cfg.nodes[0].inputs == {"VALUE": "value", "TICK": "tick"}
+
+
+# ---------------------------------------------------------------------------
+# registered subgraphs + function-style composition
+# ---------------------------------------------------------------------------
+
+def test_builder_checks_registered_subgraph_interface():
+    sub = GraphConfig(input_streams=["sub_in"], output_streams=["sub_out"])
+    sub.add_node("FrameSelectCalculator",
+                 inputs={"IN": "sub_in"}, outputs={"OUT": "sub_out"},
+                 options={"every": 2})
+    register_subgraph("BuilderTestSelectSub", sub)
+
+    b = GraphBuilder()
+    frame = b.input("frame")
+    node = b.add_node("BuilderTestSelectSub", name="sel")
+    with pytest.raises(BuilderError) as e:
+        node["bogus_in"] = frame
+    assert "sub_in" in str(e.value)
+    node["sub_in"] = frame
+    b.output(node.out("sub_out", name="selected"))
+    cfg = b.build()
+    g = Graph(cfg)
+    got = []
+    g.observe_output_stream("selected", lambda p: got.append(p.timestamp.value))
+    g.start_run()
+    for t in range(4):
+        g.add_packet_to_input_stream("frame", t, t)
+    g.close_all_input_streams()
+    g.wait_until_done()
+    assert got == [0, 2]
+
+
+def test_function_style_subgraph_composition():
+    def select_then_detect(b, frames, every, tag):
+        sel = b.add_node("FrameSelectCalculator", name=f"{tag}_sel",
+                         inputs={"IN": frames}, options={"every": every})
+        det = b.add_node("ObjectDetectorCalculator", name=f"{tag}_det",
+                         inputs={"FRAME": sel.out("OUT")})
+        return det.out("DETECTIONS")
+
+    b = GraphBuilder()
+    frame = b.input("frame")
+    dets = select_then_detect(b, frame, 2, "branch")
+    b.output(dets)
+    cfg = b.build()
+    validate(cfg)
+    assert [n.display_name(i) for i, n in enumerate(cfg.nodes)] == \
+        ["branch_sel", "branch_det"]
+
+
+# ---------------------------------------------------------------------------
+# builder <-> config equivalence
+# ---------------------------------------------------------------------------
+
+def _handwritten_quickstart():
+    cfg = GraphConfig(input_streams=["frame"], output_streams=["annotated"],
+                      enable_tracer=True)
+    cfg.add_node("ObjectDetectorCalculator", name="detect",
+                 inputs={"FRAME": "frame"},
+                 outputs={"DETECTIONS": "detections"},
+                 options={"threshold": 0.4},
+                 input_side_packets={"labels": "labels"})
+    cfg.add_node("AnnotationOverlayCalculator", name="annotate",
+                 inputs={"FRAME": "frame", "DETECTIONS": "detections"},
+                 outputs={"ANNOTATED_FRAME": "annotated"})
+    cfg.input_side_packets.append("labels")
+    return cfg
+
+
+def _builder_quickstart():
+    b = GraphBuilder(enable_tracer=True)
+    frame = b.input("frame")
+    labels = b.side_input("labels")
+    detect = b.add_node("ObjectDetectorCalculator", name="detect",
+                        inputs={"FRAME": frame},
+                        side_inputs={"labels": labels},
+                        options={"threshold": 0.4})
+    annotate = b.add_node(
+        "AnnotationOverlayCalculator", name="annotate",
+        inputs={"FRAME": frame,
+                "DETECTIONS": detect.out("DETECTIONS", name="detections")})
+    b.output(annotate.out("ANNOTATED_FRAME", name="annotated"))
+    return b.build()
+
+
+def _run_quickstart(cfg):
+    g = Graph(cfg, side_packets={"labels": ["cat", "dog"]})
+    frames_out = []
+    g.observe_output_stream("annotated", lambda p: frames_out.append(p))
+    g.start_run()
+    rng = np.random.RandomState(0)
+    for t in range(6):
+        g.add_packet_to_input_stream(
+            "frame", (rng.rand(32, 32) * 255).astype(np.float32), t)
+    g.close_all_input_streams()
+    g.wait_until_done()
+    return frames_out
+
+
+def test_quickstart_builder_equals_handwritten_and_runs_identically():
+    hand, built = _handwritten_quickstart(), _builder_quickstart()
+    assert built == hand
+    out_hand = _run_quickstart(hand)
+    out_built = _run_quickstart(built)
+    assert [p.timestamp.value for p in out_hand] == \
+        [p.timestamp.value for p in out_built]
+    for a, b_ in zip(out_hand, out_built):
+        assert np.array_equal(a.payload, b_.payload)
+
+
+def test_quickstart_round_trips_through_text_format():
+    cfg = _builder_quickstart()
+    assert parse_graph_config(serialize_graph_config(cfg)) == cfg
+
+
+def _handwritten_serving(batch_size=4, max_in_flight=2, queue_size=256,
+                         drop_on_overload=False):
+    # verbatim from the pre-builder serving/pipeline.py
+    cfg = GraphConfig(input_streams=["requests"],
+                      output_streams=["responses"],
+                      input_side_packets=["engine"],
+                      executors=[ExecutorConfig("inference", 1)],
+                      num_threads=4, enable_tracer=True)
+    cfg.add_node("FlowLimiterCalculator", name="limiter",
+                 inputs={"IN": "requests", "FINISHED": "responses_loop"},
+                 outputs={"OUT": "admitted"},
+                 options={"max_in_flight": max_in_flight * batch_size,
+                          "queue_size": 0 if drop_on_overload else queue_size},
+                 back_edge_inputs=["FINISHED"])
+    cfg.add_node("BatcherCalculator", name="batcher",
+                 inputs={"REQUEST": "admitted"},
+                 outputs={"BATCH": "batches"},
+                 options={"batch_size": batch_size})
+    cfg.add_node("LLMPrefillCalculator", name="engine",
+                 inputs={"BATCH": "batches"},
+                 outputs={"BATCH_RESULT": "batch_results"},
+                 input_side_packets={"engine": "engine"},
+                 executor="inference")
+    cfg.add_node("UnbatchCalculator", name="unbatch",
+                 inputs={"BATCH_RESULT": "batch_results"},
+                 outputs={"RESPONSE": "responses"})
+    cfg.add_node("PassThroughCalculator", name="loop",
+                 inputs={"responses": "responses"},
+                 outputs={"responses": "responses_loop"})
+    return cfg
+
+
+def test_serving_graph_builder_equals_handwritten():
+    assert build_serving_graph() == _handwritten_serving()
+    assert build_serving_graph(batch_size=2, max_in_flight=1,
+                               drop_on_overload=True) == \
+        _handwritten_serving(batch_size=2, max_in_flight=1,
+                             drop_on_overload=True)
+
+
+def test_serving_graphs_validate_and_round_trip():
+    for cfg in (build_serving_graph(),
+                build_continuous_serving_graph(),
+                build_continuous_serving_graph(num_slots=2, eos_id=5,
+                                               drop_on_overload=True)):
+        validate(cfg)
+        assert parse_graph_config(serialize_graph_config(cfg)) == cfg
+
+
+def test_continuous_graph_shape():
+    cfg = build_continuous_serving_graph(num_slots=3, eos_id=None)
+    names = [n.name for n in cfg.nodes]
+    assert names == ["limiter", "engine", "tick_loop", "finished_loop"]
+    engine = cfg.nodes[1]
+    assert engine.back_edge_inputs == ["TICK"]
+    assert engine.options["eos_id"] is None     # no workaround needed
+    assert cfg.nodes[0].back_edge_inputs == ["FINISHED"]
+
+
+# ---------------------------------------------------------------------------
+# NodeConfig positional-list convenience (low-level layer)
+# ---------------------------------------------------------------------------
+
+def test_nodeconfig_positional_lists_map_to_contract_order():
+    cfg = GraphConfig(input_streams=["frame"], output_streams=["sel"])
+    cfg.add_node("FrameSelectCalculator", name="sel",
+                 inputs=["frame"], outputs=["sel"], options={"every": 2})
+    assert cfg.nodes[0].inputs == {"IN": "frame"}
+    assert cfg.nodes[0].outputs == {"OUT": "sel"}
+    g = Graph(cfg)
+    got = []
+    g.observe_output_stream("sel", lambda p: got.append(p.timestamp.value))
+    g.start_run()
+    for t in range(4):
+        g.add_packet_to_input_stream("frame", t, t)
+    g.close_all_input_streams()
+    g.wait_until_done()
+    assert got == [0, 2]
+
+
+def test_nodeconfig_positional_multi_port_and_side_packets():
+    cfg = GraphConfig(input_streams=["value", "tick"], output_streams=["out"])
+    cfg.add_node("TemporalInterpolationCalculator",
+                 inputs=["value", "tick"], outputs=["out"])
+    assert cfg.nodes[0].inputs == {"VALUE": "value", "TICK": "tick"}
+    node = GraphConfig().add_node(
+        "ObjectDetectorCalculator", inputs=["f"], outputs=["d"],
+        input_side_packets=["labels"]).nodes[0]
+    assert node.input_side_packets == {"labels": "labels"}
+
+
+def test_nodeconfig_positional_rejects_dynamic_and_overflow():
+    with pytest.raises(ValueError, match="DYNAMIC"):
+        GraphConfig().add_node("PassThroughCalculator", inputs=["a"])
+    with pytest.raises(ValueError, match="positional"):
+        GraphConfig().add_node("FrameSelectCalculator",
+                               inputs=["a", "b"])
+
+
+# ---------------------------------------------------------------------------
+# None option values round-trip (text format)
+# ---------------------------------------------------------------------------
+
+def test_none_option_round_trips_text_format():
+    cfg = GraphConfig(input_streams=["s"], output_streams=["o"])
+    cfg.add_node("FrameSelectCalculator", name="n",
+                 inputs={"IN": "s"}, outputs={"OUT": "o"},
+                 options={"every": 1, "eos_id": None, "tag": "x",
+                          "flag": True})
+    text = serialize_graph_config(cfg)
+    assert "eos_id: null" in text
+    rt = parse_graph_config(text)
+    assert rt == cfg
+    assert rt.nodes[0].options["eos_id"] is None
+    # quoted "null" stays a string
+    rt2 = parse_graph_config(text.replace("eos_id: null",
+                                          'eos_id: "null"'))
+    assert rt2.nodes[0].options["eos_id"] == "null"
+
+
+def test_bare_null_rejected_outside_options():
+    from repro.core.text_format import TextFormatError
+    with pytest.raises(TextFormatError, match="null"):
+        parse_graph_config('input_stream: none')
+    with pytest.raises(TextFormatError, match="null"):
+        parse_graph_config(
+            'node { calculator: "FrameSelectCalculator" '
+            'input_stream: null }')
+    # quoted, it is just a name
+    cfg = parse_graph_config('input_stream: "none"')
+    assert cfg.input_streams == ["none"]
