@@ -1,25 +1,32 @@
 #!/usr/bin/env python
-"""Serving benchmark: continuous-batching GraphServer vs the sequential
-one-request-at-a-time baseline.
+"""Serving benchmark: continuous batching (slot + paged KV cache) vs the
+sequential one-request-at-a-time baseline, plus the two paged-cache
+acceptance measurements:
 
-Both sides run the SAME engine and greedy decode, so generated tokens are
-bit-identical; the delta is pure scheduling: the baseline prefills and
-decodes each request to completion before starting the next, while the
-GraphServer keeps a slot-based decode batch full (requests join mid-flight
-as slots free up) and amortizes the per-step weight reads across all
-active slots.
+* **shared-prefix** — requests sharing a long prompt prefix reuse its KV
+  blocks (ref-counted prefix sharing), so the prefill tokens actually
+  computed drop versus the sharing-disabled run;
+* **capacity** — at a FIXED arena size (same KV bytes), the paged server
+  sustains more concurrent requests than the contiguous slot cache,
+  whose capacity is bounded by worst-case (max_len) rows.
+
+All modes run the SAME engine and greedy decode, so generated tokens are
+bit-identical everywhere; the deltas are pure scheduling and memory
+layout.  Results land in ``BENCH_serve.json`` (``--out``) to seed the
+perf trajectory; ``--smoke`` shrinks everything for the CI smoke job.
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
         --requests 8 --num-slots 4 --max-new-tokens 32
 
-Reports tokens/sec and p50/p95 request latency for both modes and exits
-non-zero unless the server's throughput strictly beats the baseline
-(acceptance gate for the continuous-batching subsystem).
+Exits non-zero unless (a) the slot server beats sequential throughput,
+(b) prefix sharing reduces computed prefill tokens, and (c) the paged
+server's concurrency at fixed memory exceeds the contiguous equivalent.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
 import time
 
@@ -51,11 +58,11 @@ def run_sequential(engine, prompts, max_new):
     return results, toks / wall, lat, wall
 
 
-def run_server(engine, prompts, max_new, num_slots):
+def run_server(engine, prompts, max_new, num_slots, **server_kw):
     results = [None] * len(prompts)
     lat = [0.0] * len(prompts)
     with GraphServer(engine, num_slots=num_slots,
-                     max_new_tokens=max_new) as srv:
+                     max_new_tokens=max_new, **server_kw) as srv:
         t0 = time.perf_counter()
         handles = [srv.submit(p) for p in prompts]
         for i, h in enumerate(handles):
@@ -67,6 +74,88 @@ def run_server(engine, prompts, max_new, num_slots):
     return results, toks / wall, lat, wall, stats
 
 
+def bench_shared_prefix(engine, args, report):
+    """Same workload twice — prefix sharing on vs off — and compare the
+    prefill tokens the engine actually computed."""
+    rng = np.random.RandomState(args.seed + 1)
+    # longest prefix that still leaves room for suffix + generation
+    prefix_len = (engine.max_len - args.max_new_tokens - 8) \
+        // args.block_size * args.block_size
+    assert prefix_len >= args.block_size, "max_len too small for prefix"
+    prefix = rng.randint(0, 512, size=prefix_len).astype(np.int32)
+    prompts = [np.concatenate(
+        [prefix, rng.randint(0, 512, size=4 + (i % 3)).astype(np.int32)])
+        for i in range(args.requests)]
+    out = {}
+    for label, sharing in (("cold", False), ("shared", True)):
+        # warm pass: compiles this variant's prefill / prefill_extend
+        # shapes (one per distinct suffix length) outside the timing
+        run_server(engine, prompts, args.max_new_tokens, args.num_slots,
+                   paged=True, block_size=args.block_size,
+                   prefix_sharing=sharing)
+        res, tps, _, wall, stats = run_server(
+            engine, prompts, args.max_new_tokens, args.num_slots,
+            paged=True, block_size=args.block_size,
+            prefix_sharing=sharing)
+        sched = stats["scheduler"]
+        out[label] = {
+            "prefill_tokens_computed": sched["prefill_tokens"],
+            "prefill_tokens_saved": sched["prefill_tokens_saved"],
+            "shared_block_hits": sched["shared_block_hits"],
+            "tok_per_s": round(tps, 1), "wall_s": round(wall, 2),
+        }
+        out.setdefault("results", []).append(res)
+    a, b = out.pop("results")
+    exact = all(np.array_equal(x, y) for x, y in zip(a, b))
+    saved = 1 - (out["shared"]["prefill_tokens_computed"]
+                 / max(1, out["cold"]["prefill_tokens_computed"]))
+    report["shared_prefix"] = {
+        "prefix_len": prefix_len, **out,
+        "prefill_compute_saved_frac": round(saved, 3),
+        "outputs_identical": exact,
+    }
+    print(f"shared-prefix: prefill tokens {out['cold']['prefill_tokens_computed']}"
+          f" (cold) -> {out['shared']['prefill_tokens_computed']} (shared), "
+          f"{saved:.0%} saved, outputs identical: {exact}")
+    return exact and out["shared"]["prefill_tokens_computed"] < \
+        out["cold"]["prefill_tokens_computed"]
+
+
+def bench_capacity(engine, args, report):
+    """Fixed KV memory: arena of ``cap_rows`` worst-case rows.  The slot
+    server gets that many contiguous rows; the paged server gets the same
+    tokens as blocks.  Measure peak concurrent requests on a
+    short-request workload (requests far below ``max_len`` — the regime
+    where worst-case row allocation wastes the cache)."""
+    rng = np.random.RandomState(args.seed + 2)
+    cap_rows = 2
+    cap_new = min(4, args.max_new_tokens)
+    arena_tokens = cap_rows * engine.max_len
+    n = args.requests
+    prompts = [rng.randint(0, 512, size=6 + (i % 2)).astype(np.int32)
+               for i in range(n)]
+    _, slot_tps, _, _, slot_stats = run_server(
+        engine, prompts, cap_new, cap_rows)
+    _, paged_tps, _, _, paged_stats = run_server(
+        engine, prompts, cap_new, n, paged=True,
+        block_size=args.block_size,
+        num_blocks=1 + arena_tokens // args.block_size)
+    slot_cc = slot_stats["scheduler"]["max_active_slots"]
+    paged_cc = paged_stats["scheduler"]["max_active_slots"]
+    report["capacity"] = {
+        "arena_tokens": arena_tokens,
+        "contiguous_rows": cap_rows,
+        "contiguous_concurrent": slot_cc,
+        "paged_concurrent": paged_cc,
+        "paged_blocks_peak": paged_stats["scheduler"]["blocks_peak"],
+        "contiguous_tok_per_s": round(slot_tps, 1),
+        "paged_tok_per_s": round(paged_tps, 1),
+    }
+    print(f"capacity at {arena_tokens} cache tokens: contiguous holds "
+          f"{slot_cc} concurrent, paged holds {paged_cc}")
+    return paged_cc > slot_cc
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm_2b")
@@ -75,16 +164,29 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--num-layers", type=int, default=2)
     ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for the CI smoke job")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = min(args.requests, 6)
+        args.max_new_tokens = min(args.max_new_tokens, 8)
+        args.num_layers = 1
+        args.d_model = 64
     if args.requests < 4:
         ap.error("--requests must be >= 4 (concurrency acceptance gate)")
 
     cfg = get_config(args.arch).reduced()
     cfg = dataclasses.replace(cfg, num_layers=args.num_layers,
                               d_model=args.d_model, vocab_size=512)
-    engine = LLMEngine(cfg, max_len=args.max_new_tokens + 24,
-                       seed=args.seed)
+    max_len = -(-(args.max_new_tokens + 24) // args.block_size) \
+        * args.block_size
+    engine = LLMEngine(cfg, max_len=max_len, seed=args.seed)
+    # throughput / shared-prefix runs leave num_blocks unset so
+    # GraphServer derives its default paged arena (same memory as the
+    # slot cache); the effective size is read back from stats below
 
     rng = np.random.RandomState(args.seed)
     lengths = [int(rng.choice([6, 10, 14]))
@@ -93,9 +195,6 @@ def main(argv=None) -> int:
                for L in lengths]
 
     # warm-up: compile everything either mode can hit, outside timing.
-    # Prefill group widths are power-of-two buckets up to num_slots, so the
-    # compile universe is (bucket width x unique length) + the two decode
-    # steps — all deterministic.
     widths = [1]
     while widths[-1] < args.num_slots:
         widths.append(widths[-1] * 2)
@@ -106,37 +205,81 @@ def main(argv=None) -> int:
         for w in widths if i == 0 else widths[1:]:
             _, rows = engine.prefill(np.tile(p[None], (w, 1)))  # prefill[w]
             engine.insert_slot(slot_cache, rows, 0, 0)          # insert[w]
-    _ = run_server(engine, prompts[:args.num_slots], 2,
-                   args.num_slots)                         # slot decode
+    run_server(engine, prompts[:args.num_slots], 2, args.num_slots)
+    run_server(engine, prompts[:args.num_slots], 2, args.num_slots,
+               paged=True, block_size=args.block_size)
 
+    report = {"config": {
+        "arch": cfg.name, "requests": args.requests,
+        "num_slots": args.num_slots, "max_new_tokens": args.max_new_tokens,
+        "max_len": max_len, "block_size": args.block_size,
+        "smoke": args.smoke,
+    }}
+
+    # ---- throughput: sequential vs slot vs paged ----------------------
     seq_res, seq_tps, seq_lat, seq_wall = run_sequential(
         engine, prompts, args.max_new_tokens)
-    srv_res, srv_tps, srv_lat, srv_wall, stats = run_server(
+    srv_res, srv_tps, srv_lat, srv_wall, _ = run_server(
         engine, prompts, args.max_new_tokens, args.num_slots)
+    pg_res, pg_tps, pg_lat, pg_wall, pg_stats = run_server(
+        engine, prompts, args.max_new_tokens, args.num_slots, paged=True,
+        block_size=args.block_size)
+    report["config"]["arena_blocks"] = \
+        pg_stats["block_pool"]["num_blocks"]
 
-    for a, b in zip(seq_res, srv_res):
-        assert np.array_equal(a, b), "server output diverged from baseline"
+    for a, b, c in zip(seq_res, srv_res, pg_res):
+        assert np.array_equal(a, b), "slot server diverged from baseline"
+        assert np.array_equal(a, c), "paged server diverged from baseline"
 
     print(f"requests={args.requests} num_slots={args.num_slots} "
-          f"max_new_tokens={args.max_new_tokens} "
-          f"arch={cfg.name} (reduced)")
-    for name, tps, lat, wall in (
-            ("sequential", seq_tps, seq_lat, seq_wall),
-            ("graphserver", srv_tps, srv_lat, srv_wall)):
+          f"max_new_tokens={args.max_new_tokens} arch={cfg.name} (reduced)")
+    rows = (("sequential", seq_tps, seq_lat, seq_wall),
+            ("graphserver", srv_tps, srv_lat, srv_wall),
+            ("paged", pg_tps, pg_lat, pg_wall))
+    for name, tps, lat, wall in rows:
         print(f"{name:12s} {tps:8.1f} tok/s  wall={wall:6.2f}s  "
               f"p50={percentile(lat, 0.50)*1e3:7.0f}ms  "
               f"p95={percentile(lat, 0.95)*1e3:7.0f}ms")
     speedup = srv_tps / seq_tps
-    sched = stats.get("scheduler", {})
-    print(f"speedup      {speedup:8.2f}x  "
-          f"(decode_steps={sched.get('decode_steps')}, "
-          f"prefill_calls={sched.get('prefill_calls')}, "
-          f"max_active_slots={sched.get('max_active_slots')})")
-    print(f"serve_bench,{srv_tps:.1f},speedup={speedup:.2f}x")
+    report["throughput"] = {
+        "sequential_tok_per_s": round(seq_tps, 1),
+        "slot_tok_per_s": round(srv_tps, 1),
+        "paged_tok_per_s": round(pg_tps, 1),
+        "slot_speedup": round(speedup, 2),
+        "paged_speedup": round(pg_tps / seq_tps, 2),
+        "paged_blocks_peak": pg_stats["scheduler"]["blocks_peak"],
+    }
+    print(f"speedup      {speedup:8.2f}x (slot), "
+          f"{pg_tps / seq_tps:.2f}x (paged)")
+
+    # ---- paged acceptance: shared prefix + capacity -------------------
+    prefix_ok = bench_shared_prefix(engine, args, report)
+    capacity_ok = bench_capacity(engine, args, report)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"serve_bench,{srv_tps:.1f},speedup={speedup:.2f}x "
+          f"-> {args.out}")
+
+    ok = True
     if speedup <= 1.0:
-        print("FAIL: GraphServer not faster than sequential baseline")
-        return 1
-    return 0
+        if args.smoke:
+            # smoke shapes are overhead-bound by design; the throughput
+            # gate is enforced by the full-size CI run
+            print("note: smoke run is overhead-bound; throughput gate "
+                  "not enforced")
+        else:
+            print("FAIL: GraphServer not faster than sequential baseline")
+            ok = False
+    if not prefix_ok:
+        print("FAIL: prefix sharing did not reduce prefill compute")
+        ok = False
+    if not capacity_ok:
+        print("FAIL: paged concurrency did not exceed contiguous at "
+              "fixed memory")
+        ok = False
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ running decode batch as slots free up; tokens stream back per step).
     PYTHONPATH=src python examples/serve_llm.py
 
 Pass ``--fixed-batch`` to run the original batch-and-drain pipeline
-instead, for comparison.
+instead, for comparison, or ``--paged`` to serve over the paged KV
+cache with ref-counted prefix sharing (docs/KV_CACHE.md).
 """
 import sys
 

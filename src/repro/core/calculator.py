@@ -119,6 +119,15 @@ class CalculatorContext:
     def node_name(self) -> str:
         return self._node.name
 
+    # -- tracing -------------------------------------------------------
+    def trace_gauge(self, name: str, value: int) -> None:
+        """Record a named gauge sample (e.g. KV-block-pool occupancy) into
+        the graph's tracer; exported as a chrome://tracing counter track
+        by :meth:`repro.core.tracer.Tracer.export_chrome_trace`."""
+        from . import tracer as trace_mod
+        self._node.graph.tracer.record(trace_mod.GAUGE, self._node.index,
+                                       name, 0, int(value))
+
 
 class Calculator:
     """Base class for all calculators."""

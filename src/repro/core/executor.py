@@ -15,13 +15,22 @@ from typing import Callable, List, Optional, Tuple
 
 
 class Executor:
-    """A scheduler queue + its thread pool."""
+    """A scheduler queue + its thread pool.
+
+    ``on_error`` receives exceptions that escape ``run_task`` itself
+    (scheduler/policy bugs, not calculator code — calculators' errors are
+    caught inside the graph's task runner).  The graph wires this to its
+    error path so a failed task terminates the run visibly instead of
+    silently killing the worker loop's iteration and hanging
+    ``wait_until_done``."""
 
     def __init__(self, name: str, num_threads: int,
-                 run_task: Callable[[object], None]):
+                 run_task: Callable[[object], None],
+                 on_error: Optional[Callable[[BaseException], None]] = None):
         self.name = name
         self.num_threads = max(1, num_threads)
         self._run_task = run_task
+        self._on_error = on_error
         self._heap: List[Tuple[int, int, object]] = []
         self._seq = itertools.count()
         self._cv = threading.Condition()
@@ -52,9 +61,16 @@ class Executor:
                 _, _, task = heapq.heappop(self._heap)
             try:
                 self._run_task(task)
-            except Exception:  # pragma: no cover - run_task must not raise
-                import traceback
-                traceback.print_exc()
+            except BaseException as e:  # noqa: BLE001 - surface, don't die
+                if self._on_error is not None:
+                    try:
+                        self._on_error(e)
+                    except Exception:  # pragma: no cover - last resort
+                        import traceback
+                        traceback.print_exc()
+                else:  # pragma: no cover - graphs always pass on_error
+                    import traceback
+                    traceback.print_exc()
 
     def stop(self, join: bool = True) -> None:
         with self._cv:

@@ -213,11 +213,13 @@ class Graph:
         # ---- executors -----------------------------------------------------
         self._executors: Dict[str, Executor] = {}
         self._executors["default"] = Executor(
-            "default", config.num_threads, self._run_task)
+            "default", config.num_threads, self._run_task,
+            on_error=self._executor_error)
         for e in config.executors:
             if e.name != "default":
                 self._executors[e.name] = Executor(
-                    e.name, e.num_threads, self._run_task)
+                    e.name, e.num_threads, self._run_task,
+                    on_error=self._executor_error)
         for node in self.nodes:
             if node.executor_name not in self._executors:
                 raise GraphError(f"node {node.name!r} assigned to unknown "
@@ -579,6 +581,17 @@ class Graph:
         if self._active == 0:
             self._relax_if_stalled()
         self._cv.notify_all()
+
+    def _executor_error(self, err: BaseException) -> None:
+        """An exception escaped the task runner itself (scheduler state,
+        input-policy code) — not calculator code, which _run_task already
+        confines.  Record it as the run's error so wait_until_done raises
+        instead of hanging on a silently-lost task."""
+        with self._lock:
+            self._fail_locked(err, "<executor>")
+            # the failed task never reached _task_finished
+            self._active = max(0, self._active - 1)
+            self._cv.notify_all()
 
     def _finish_close(self, node: _NodeRuntime) -> None:
         if node.state == node.CLOSED:

@@ -29,6 +29,9 @@ PACKET_DROPPED = "PACKET_DROPPED"
 OPEN = "OPEN"
 CLOSE = "CLOSE"
 THROTTLE = "THROTTLE"
+# Named gauge sample (stream_id = gauge name, packet_data_id = value);
+# e.g. KV-block-pool occupancy from the paged serving scheduler.
+GAUGE = "GAUGE"
 
 # Module-level switch mirroring the paper's "omit the tracer module code
 # using a compiler flag".
@@ -50,6 +53,7 @@ class Tracer:
         self.capacity = capacity
         self._buf: List[Optional[TraceEvent]] = [None] * capacity
         self._next = itertools.count()
+        self._recorded = 0       # high-water mark, read by events()
         self._t0 = time.perf_counter_ns()
 
     # Hot path: no locks.  itertools.count.__next__ is atomic in CPython.
@@ -59,10 +63,16 @@ class Tracer:
         self._buf[i % self.capacity] = TraceEvent(
             time.perf_counter_ns() - self._t0, event_type, node_id,
             stream_id, packet_timestamp, packet_data_id, 0)
+        if i >= self._recorded:  # benign race: analysis-time snapshot only
+            self._recorded = i + 1
 
     # -- analysis (cold path) ---------------------------------------------
     def events(self) -> List[TraceEvent]:
-        n = next(self._next)  # consumes one slot id; fine for analysis time
+        # Read the high-water mark WITHOUT claiming a slot id from
+        # self._next: consuming one here would make every analysis call
+        # shift the ring's wraparound cut by one, skewing which events
+        # later reads consider oldest.
+        n = self._recorded
         if n <= self.capacity:
             evs = self._buf[:n]
         else:
@@ -152,8 +162,55 @@ class Tracer:
                 e = TraceEvent(*json.loads(line))
                 i = next(t._next)
                 t._buf[i % t.capacity] = e
+                t._recorded = i + 1
         names = {int(k): v for k, v in header.get("node_names", {}).items()}
         return t, names
+
+    def export_chrome_trace(self, path: str, node_names=None) -> None:
+        """Write the ring buffer as chrome://tracing / Perfetto JSON
+        (paper §5.2: the visualizer loads pre-recorded trace files).
+
+        Calculator RUN intervals become complete ("X") events on one
+        track per node, packet events become instants ("i"), and GAUGE
+        samples become counter ("C") tracks — so KV-block-pool occupancy
+        plots as a pressure curve over the decode timeline."""
+        import json
+        names = node_names or {}
+        out = []
+        for nid, name in sorted(names.items()):
+            out.append({"ph": "M", "name": "thread_name", "pid": 0,
+                        "tid": int(nid), "args": {"name": str(name)}})
+        starts: Dict[tuple, int] = {}
+        for e in self.events():
+            ts_us = e.event_time / 1e3
+            key = (e.node_id, e.packet_timestamp)
+            if e.event_type == RUN_START:
+                starts[key] = e.event_time
+            elif e.event_type == RUN_END:
+                t0 = starts.pop(key, None)
+                if t0 is None:
+                    continue         # start fell off the ring buffer
+                out.append({
+                    "ph": "X", "pid": 0, "tid": e.node_id,
+                    "name": str(names.get(e.node_id, e.node_id)),
+                    "cat": "run", "ts": t0 / 1e3,
+                    "dur": (e.event_time - t0) / 1e3,
+                    "args": {"packet_timestamp": e.packet_timestamp}})
+            elif e.event_type == GAUGE:
+                out.append({
+                    "ph": "C", "pid": 0, "ts": ts_us,
+                    "name": e.stream_id,
+                    "args": {"value": e.packet_data_id}})
+            elif e.event_type in (PACKET_EMIT, PACKET_QUEUED,
+                                  PACKET_DROPPED):
+                out.append({
+                    "ph": "i", "s": "t", "pid": 0, "tid": e.node_id,
+                    "name": f"{e.event_type} {e.stream_id}",
+                    "cat": "packet", "ts": ts_us,
+                    "args": {"packet_timestamp": e.packet_timestamp,
+                             "packet_data_id": e.packet_data_id}})
+        with open(path, "w") as f:
+            json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f)
 
 
 class NullTracer(Tracer):

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel
+from .paged_attention import paged_attention_kernel
 from .rmsnorm import rmsnorm_kernel
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -29,3 +30,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 @partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5) -> jax.Array:
     return rmsnorm_kernel(x, scale, eps=eps, interpret=INTERPRET)
+
+
+@jax.jit
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    """Paged decode attention through block tables (see
+    repro.kernels.paged_attention)."""
+    return paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                  positions, interpret=INTERPRET)

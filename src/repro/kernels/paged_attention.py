@@ -1,0 +1,116 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+Decode-time attention where K/V live in a paged arena
+(``[num_blocks, block_size, KV, hd]``) and each sequence's pages are
+named by a block table, vLLM-style.  The kernel *gathers through the
+block table* with zero host-side reshuffling:
+
+* ``PrefetchScalarGridSpec`` prefetches the block tables and positions
+  so the K/V ``index_map`` can resolve ``tables[b, p]`` before the body
+  runs — each grid step DMAs exactly one arena page into VMEM;
+* grid = (batch, pages); the page axis iterates innermost and
+  sequentially on TPU, accumulating the sequence's pages into VMEM
+  scratch (``[P·bs, KV, hd]``);
+* on the last page the whole (small) decode attention for that sequence
+  runs in one shot: grouped-query scores via a KV-batched
+  ``dot_general``, explicit fp32 max/exp/sum softmax, weighted sum.
+
+Computing the softmax over the fully-gathered row (rather than the
+online-softmax recurrence) keeps the kernel **bit-exact** against
+``repro.kernels.ref.paged_attention_ref`` — the correctness contract the
+paged serving path is pinned to.  Decode rows are short (max_len), so
+the scratch footprint is T·KV·hd·8 bytes — a few hundred KiB of VMEM at
+typical serving shapes.
+
+Masking: keys at index <= positions[b] are valid.  Block-table padding
+uses page id 0 (the allocator's trash block); those positions are
+masked like any other out-of-range index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  k_scr, v_scr, *, block_size: int, kv_heads: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    num_pages = pl.num_programs(1)
+
+    # stage this sequence's page p into the gather scratch
+    k_scr[pl.ds(p * block_size, block_size)] = k_ref[0]
+    v_scr[pl.ds(p * block_size, block_size)] = v_ref[0]
+
+    @pl.when(p == num_pages - 1)
+    def _attend():
+        T = num_pages * block_size
+        H, hd = q_ref.shape[1], q_ref.shape[2]
+        G = H // kv_heads
+        qg = q_ref[0].reshape(kv_heads, G, hd).astype(jnp.float32)
+        k = k_scr[...].astype(jnp.float32)            # [T, KV, hd]
+        v = v_scr[...].astype(jnp.float32)
+        # [KV, G, T]: batch over KV heads, contract head_dim — the same
+        # contraction AND the same f32 scale expression as the ref
+        # oracle (bit-exactness contract: float(hd)**-0.5 rounds from
+        # float64 and is 1 ulp off for non-power-of-two head dims)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, 1, T), 2)
+        s = jnp.where(idx <= pos_ref[b], s, NEG_INF)
+        m = s.max(axis=-1)
+        prob = jnp.exp(s - m[..., None])
+        l = prob.sum(axis=-1)
+        o = jax.lax.dot_general(
+            prob, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        o = o / l[..., None]
+        o_ref[0] = o.reshape(H, hd).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           positions: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B, H, hd]; k_pages/v_pages: [NB, bs, KV, hd];
+    block_tables: [B, P] int32; positions: [B] int32.  Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    bs, KV = k_pages.shape[1], k_pages.shape[2]
+    P = block_tables.shape[1]
+    T = P * bs
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, positions
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, pos: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, p, tbl, pos: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, p, tbl, pos: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, p, tbl, pos: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, KV, hd), k_pages.dtype),
+            pltpu.VMEM((T, KV, hd), v_pages.dtype),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kernel, block_size=bs, kv_heads=KV)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(positions, jnp.int32), q, k_pages, v_pages)

@@ -37,3 +37,50 @@ def rmsnorm_ref(x: jax.Array, scale: jax.Array,
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_tables: jax.Array, positions: jax.Array
+                        ) -> jax.Array:
+    """Paged single-token decode attention, pure JAX.
+
+    q: [B, H, hd] — one query per sequence (decode step).
+    k_pages/v_pages: [num_blocks, block_size, KV, hd] — the paged arena.
+    block_tables: [B, P] int32 — per-sequence page ids (0-padded; block 0
+        is the trash block, always masked).
+    positions: [B] int32 — current cache position; keys at index <= pos
+        are attended (the position being written included).
+
+    This is the bit-exactness oracle for the Pallas kernel: per-batch-row
+    math uses the SAME op sequence (dot_general with KV batch dims,
+    explicit max/exp/sum softmax in fp32), so in interpret mode the
+    kernel must match bitwise, not just allclose.
+    """
+    B, H, hd = q.shape
+    bs, KV = k_pages.shape[1], k_pages.shape[2]
+    P = block_tables.shape[1]
+    G = H // KV
+    T = P * bs
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    def one(args):
+        q_b, tbl, pos = args
+        k = k_pages[tbl].reshape(T, KV, hd).astype(jnp.float32)
+        v = v_pages[tbl].reshape(T, KV, hd).astype(jnp.float32)
+        qg = q_b.reshape(KV, G, hd).astype(jnp.float32)
+        # [KV, G, T]: batch over KV heads, contract head_dim
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        valid = jnp.arange(T) <= pos
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m = s.max(axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(axis=-1)
+        o = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        return (o / l[..., None]).reshape(H, hd)
+
+    out = jax.lax.map(one, (q, block_tables, positions))
+    return out.astype(q.dtype)

@@ -36,7 +36,9 @@ def run_continuous(args, cfg, engine) -> int:
 
     with GraphServer(engine, num_slots=args.num_slots,
                      max_in_flight=args.max_in_flight,
-                     max_new_tokens=args.max_new_tokens) as srv:
+                     max_new_tokens=args.max_new_tokens,
+                     paged=args.paged, num_blocks=args.num_blocks,
+                     block_size=args.block_size) as srv:
         t0 = time.time()
 
         def client(worker: int) -> None:
@@ -67,6 +69,12 @@ def run_continuous(args, cfg, engine) -> int:
           f"decode_steps={sched.get('decode_steps')} "
           f"prefill_calls={sched.get('prefill_calls')} "
           f"max_active_slots={sched.get('max_active_slots')}")
+    if "block_pool" in stats:
+        bp = stats["block_pool"]
+        print(f"block pool: {bp['num_blocks']}x{bp['block_size']} tokens, "
+              f"peak_in_use={bp['peak_in_use']} "
+              f"prefill_tokens_saved="
+              f"{sched.get('prefill_tokens_saved', 0)}")
     return 0 if done == args.requests else 1
 
 
@@ -123,6 +131,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-in-flight", type=int, default=0)
     ap.add_argument("--fixed-batch", action="store_true",
                     help="use the original batch-and-drain pipeline")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with ref-counted prefix sharing "
+                         "(see docs/KV_CACHE.md)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged arena size in blocks (0 = num_slots "
+                         "worst-case rows)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

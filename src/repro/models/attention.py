@@ -46,6 +46,15 @@ def abstract_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
             "v": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))}
 
 
+def abstract_paged_kv_cache(cfg: ArchConfig, num_blocks: int,
+                            block_size: int, dtype):
+    """Paged arena: the slot/sequence axis is replaced by a pool of
+    fixed-size token blocks shared by all sequences (block 0 = trash)."""
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)),
+            "v": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))}
+
+
 def _qkv(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
@@ -107,7 +116,8 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
                     positions: jax.Array,
                     cache: Optional[Dict[str, jax.Array]] = None,
                     cache_pos: Optional[jax.Array] = None,
-                    impl: str = "chunked", flags=None
+                    impl: str = "chunked", flags=None,
+                    block_tables: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Full-sequence (cache=None) or single-token decode (cache given).
 
@@ -115,12 +125,20 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
     cache_pos: [] scalar — number of tokens already in the cache — or a
         [B] vector of per-row positions (continuous batching: each slot of
         the decode batch is an independent request at its own offset).
+    block_tables: [B, P] int32 — paged decode: ``cache`` is a block-pool
+        arena (``abstract_paged_kv_cache`` layout) and each row's K/V is
+        reached through its block table instead of a contiguous row.
     """
     q, k, v = _qkv(params, cfg, x, positions)
     if cache is None:
         out = _seq_attention(q, k, v, cfg, impl, flags)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
         return y, None
+
+    if block_tables is not None:
+        assert x.shape[1] == 1, "paged decode processes one new token"
+        return _paged_decode(params, cfg, q, k, v, cache, cache_pos,
+                             block_tables, flags)
 
     # ---- decode: append one token, attend to cache -------------------
     B, S, KV, hd = cache["k"].shape
@@ -184,6 +202,85 @@ def prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
         k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return y, {"k": k_c, "v": v_c}
+
+
+def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
+                  block_tables, flags):
+    """Single-token decode against a paged arena.
+
+    The new token's K/V is scattered into the sequence's current tail
+    block (``table[b, pos // bs]`` at offset ``pos % bs``); rows whose
+    table entry is the trash block 0 (inactive slots, padding) write
+    harmlessly there.  Attention then either gathers pages back into
+    position order — which reconstructs exactly the contiguous cache row,
+    keeping greedy decode bit-identical to the ``cache_pos`` path — or
+    runs the Pallas paged-attention kernel (``flags.use_paged_kernel``)
+    that reads through the block table directly.
+    """
+    NB, bs, KV, hd = cache["k"].shape
+    B = q.shape[0]
+    pos = jnp.asarray(cache_pos, jnp.int32)          # [B] per-row positions
+    rows = jnp.arange(B)
+    blk = block_tables[rows, pos // bs]              # [B] tail block ids
+    off = pos % bs
+    k_new = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+    v_new = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+    if flags is not None and getattr(flags, "use_paged_kernel", False):
+        from ..kernels.ops import paged_attention
+        out = paged_attention(q[:, 0], k_new, v_new, block_tables,
+                              pos)[:, None]
+    else:
+        P = block_tables.shape[1]
+        k_seq = k_new[block_tables].reshape(B, P * bs, KV, hd)
+        v_seq = v_new[block_tables].reshape(B, P * bs, KV, hd)
+        valid = jnp.arange(P * bs)[None, :] <= pos[:, None]
+        mask = valid[:, None, None, None, :]         # [B,1,1,1,T]
+        out = _grouped_attention(q, k_seq, v_seq, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_new, "v": v_new}
+
+
+def prefill_extend_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                              positions: jax.Array, prefix_kv: Dict,
+                              prefix_len: int, max_len: int,
+                              impl: str = "chunked", flags=None):
+    """Prefill only the prompt *suffix*, attending over cached prefix K/V.
+
+    x: [B, S'] suffix hidden states at global positions
+    ``prefix_len .. prefix_len + S' - 1``; prefix_kv: k/v gathered from
+    the paged arena for positions ``0 .. prefix_len - 1``.  Because each
+    query row's attention is row-independent and the key sequence
+    (prefix ++ suffix) is identical to the full-prompt prefill's, suffix
+    activations — and therefore the first generated token — are
+    bit-identical to a cold prefill of the whole prompt.
+    """
+    q, k, v = _qkv(params, cfg, x, positions)
+    k_full = jnp.concatenate([prefix_kv["k"].astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([prefix_kv["v"].astype(v.dtype), v], axis=1)
+    if impl == "chunked":
+        out = chunked_attention_rect(q, k_full, v_full, prefix_len, cfg)
+    elif impl == "naive":
+        S_, T = q.shape[1], k_full.shape[1]
+        i = prefix_len + jnp.arange(S_)[:, None]
+        m = (jnp.arange(T)[None, :] <= i)[None, None, None]
+        out = _grouped_attention(q, k_full, v_full, m)
+    else:
+        raise ValueError(f"prefix-extend prefill supports impl "
+                         f"'chunked'|'naive', got {impl!r}")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    S_in = x.shape[1]
+    pad = max_len - S_in
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, {"k": k_c, "v": v_c}
+
+
+def chunked_attention_rect(q, k, v, q_offset: int, cfg: ArchConfig):
+    """Causal chunked attention for queries starting at ``q_offset``."""
+    from .chunked_attention import chunked_attention
+    return chunked_attention(q, k, v, causal=True,
+                             window=cfg.sliding_window,
+                             q_offset=jnp.asarray(q_offset, jnp.int32))
 
 
 def _decode_attention_hd_sharded(q, k, v, valid, flags):

@@ -62,6 +62,16 @@ def abstract_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
                 (batch, S, cfg.qk_rope_head_dim), dt)}
 
 
+def abstract_paged_mla_cache(cfg: ArchConfig, num_blocks: int,
+                             block_size: int, dtype):
+    """Paged MLA arena: latent + rope-key blocks (block 0 = trash)."""
+    dt = jnp.dtype(dtype)
+    return {"c_kv": jax.ShapeDtypeStruct(
+                (num_blocks, block_size, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct(
+                (num_blocks, block_size, cfg.qk_rope_head_dim), dt)}
+
+
 def _project_q(params, cfg: ArchConfig, x, positions):
     cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
     cq = rms_norm(params["q_a_norm"], cq, cfg.norm_eps)
@@ -85,7 +95,8 @@ def _project_kv_latent(params, cfg: ArchConfig, x, positions):
 
 def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
               cache: Optional[Dict[str, jax.Array]] = None,
-              cache_pos: Optional[jax.Array] = None, flags=None
+              cache_pos: Optional[jax.Array] = None, flags=None,
+              block_tables: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     scale = 1.0 / jnp.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
     if cache is None:
@@ -112,6 +123,10 @@ def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
                                     window=cfg.sliding_window)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
         return y, None
+
+    if block_tables is not None:
+        return _mla_paged_decode(params, cfg, x, positions, cache,
+                                 cache_pos, block_tables, scale)
 
     # ---- decode with weight absorption --------------------------------
     B, S, R = cache["c_kv"].shape
@@ -148,6 +163,72 @@ def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
     out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def _mla_paged_decode(params, cfg: ArchConfig, x, positions, cache,
+                      cache_pos, block_tables, scale):
+    """Weight-absorbed MLA decode against a paged latent arena.  Pages are
+    gathered back into position order, so the score/softmax math is
+    bit-identical to the contiguous per-row path."""
+    NB, bs, R = cache["c_kv"].shape
+    B = x.shape[0]
+    P = block_tables.shape[1]
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    rows = jnp.arange(B)
+    blk = block_tables[rows, pos // bs]
+    off = pos % bs
+    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
+    c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
+    c_kv = cache["c_kv"].at[blk, off].set(
+        c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[blk, off].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    c_seq = c_kv[block_tables].reshape(B, P * bs, R)
+    kr_seq = k_rope[block_tables].reshape(B, P * bs, -1)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_seq) +
+              jnp.einsum("bshk,btk->bhst", q_rope, kr_seq))
+    scores = scores.astype(jnp.float32) * scale
+    valid = jnp.arange(P * bs)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_seq)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_prefill_extend(params, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array, prefix_kv: Dict,
+                       prefix_len: int, max_len: int, flags=None):
+    """Prefill the prompt suffix attending over cached prefix *latents*.
+
+    Per-head K/V are re-materialized from the concatenated latents with
+    the same einsums as a cold prefill — each position's materialization
+    is position-independent, so suffix activations stay bit-identical."""
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    c_suf, kr_suf = _project_kv_latent(params, cfg, x, positions)
+    c_full = jnp.concatenate(
+        [prefix_kv["c_kv"].astype(c_suf.dtype), c_suf], axis=1)
+    kr_full = jnp.concatenate(
+        [prefix_kv["k_rope"].astype(kr_suf.dtype), kr_suf], axis=1)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_full, params["wk_b"])
+    v = jnp.einsum("btr,rhk->bthk", c_full, params["wv_b"])
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kh = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_full[:, :, None, :],
+                                  k_nope.shape[:3] + kr_full.shape[-1:])],
+        axis=-1)
+    from .chunked_attention import chunked_attention
+    out = chunked_attention(qh, kh, v, causal=True,
+                            window=cfg.sliding_window,
+                            q_offset=jnp.asarray(prefix_len, jnp.int32))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    S_in = x.shape[1]
+    pad = max_len - S_in
+    c_c = jnp.pad(c_suf, ((0, 0), (0, pad), (0, 0)))
+    kr_c = jnp.pad(kr_suf, ((0, 0), (0, pad), (0, 0)))
+    return y, {"c_kv": c_c, "k_rope": kr_c}
 
 
 def mla_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,

@@ -43,9 +43,18 @@ class Model:
                           prefix_embeds, enc_embeds, flags)
 
     def decode_step(self, params, tokens, cache, cache_pos,
-                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS,
+                    block_tables=None):
         return tf.decode_step(params, self.cfg, tokens, cache, cache_pos,
-                              flags)
+                              flags, block_tables=block_tables)
+
+    def prefill_extend(self, params, tokens, cache, block_tables,
+                       prefix_len: int, block_size: int,
+                       max_cache_len: int,
+                       flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+        return tf.prefill_extend(params, self.cfg, tokens, cache,
+                                 block_tables, prefix_len, block_size,
+                                 max_cache_len, flags)
 
     def mtp_logits(self, params, hidden, tokens,
                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
@@ -53,6 +62,9 @@ class Model:
 
     def abstract_cache(self, batch: int, max_len: int, enc_len: int = 0):
         return tf.abstract_cache(self.cfg, batch, max_len, enc_len)
+
+    def abstract_paged_cache(self, num_blocks: int, block_size: int):
+        return tf.abstract_paged_cache(self.cfg, num_blocks, block_size)
 
     # ---- modality stubs -------------------------------------------------
     def input_shapes_for(self, shape: InputShape) -> Dict[str, Any]:

@@ -41,6 +41,11 @@ class RuntimeFlags:
     moe_impl: str = "gather"
     model_axis: str = "model"
     model_size: int = 1
+    # Paged decode: read K/V through block tables with the Pallas
+    # paged-attention kernel instead of the pure-JAX page gather.
+    # GQA/MHA/MQA only — MLA's latent cache always uses the gather path
+    # (LLMEngine.new_paged_cache rejects the combination).
+    use_paged_kernel: bool = False
 
 
 DEFAULT_FLAGS = RuntimeFlags()
@@ -132,16 +137,29 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
                 memory_kv: Optional[Dict] = None,
                 flags: RuntimeFlags = DEFAULT_FLAGS,
                 want_cache: bool = False, max_cache_len: int = 0,
+                block_tables: Optional[jax.Array] = None,
+                prefix_kv: Optional[Dict] = None, prefix_len: int = 0,
                 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
-    """Returns (x_out, aux_loss, new_cache)."""
+    """Returns (x_out, aux_loss, new_cache).
+
+    block_tables: paged decode — ``cache`` holds block-pool arenas.
+    prefix_kv/prefix_len: prefix-extend prefill — compute only the prompt
+    suffix, attending over K/V gathered for the shared prefix.
+    """
     h = rms_norm(params["norm1"], x, cfg.norm_eps, flags.fused_rmsnorm)
     new_cache: Dict[str, Any] = {}
     decode = cache is not None
+    extend = want_cache and prefix_kv is not None
     if kind == "attn":
         if cfg.use_mla:
             if decode:
                 y, c = mla_mod.mla_apply(params["mixer"], cfg, h, positions,
-                                         cache["mixer"], cache_pos)
+                                         cache["mixer"], cache_pos,
+                                         block_tables=block_tables)
+            elif extend:
+                y, c = mla_mod.mla_prefill_extend(
+                    params["mixer"], cfg, h, positions, prefix_kv["mixer"],
+                    prefix_len, max_cache_len, flags=flags)
             elif want_cache:
                 y, c = mla_mod.mla_prefill_into_cache(
                     params["mixer"], cfg, h, positions, max_cache_len,
@@ -154,7 +172,12 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
             if decode:
                 y, c = attn.attention_apply(params["mixer"], cfg, h,
                                             positions, cache["mixer"],
-                                            cache_pos, impl, flags)
+                                            cache_pos, impl, flags,
+                                            block_tables=block_tables)
+            elif extend:
+                y, c = attn.prefill_extend_into_cache(
+                    params["mixer"], cfg, h, positions, prefix_kv["mixer"],
+                    prefix_len, max_cache_len, impl, flags)
             elif want_cache:
                 y, c = attn.prefill_into_cache(
                     params["mixer"], cfg, h, positions, max_cache_len,
@@ -421,6 +444,50 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int,
     return cache
 
 
+def check_paged_support(cfg: ArchConfig) -> None:
+    """The paged KV cache pages attention K/V; architectures with
+    recurrent mixers, sliding windows or cross attention keep using the
+    contiguous slot cache."""
+    if cfg.is_encoder_decoder:
+        raise ValueError("paged KV cache: encoder-decoder models are "
+                         "not supported")
+    if cfg.sliding_window:
+        raise ValueError("paged KV cache: sliding-window attention is "
+                         "not supported (the window's rotating slot "
+                         "layout conflicts with block paging)")
+    bad = [k for k in cfg.layer_kinds() if k != "attn"]
+    if bad:
+        raise ValueError(f"paged KV cache: recurrent layer kinds "
+                         f"{sorted(set(bad))} have O(1) state, not a "
+                         f"growing KV cache; use the slot path")
+
+
+def abstract_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int):
+    """ShapeDtypeStruct pytree of the paged arena (same tree structure as
+    :func:`abstract_cache`, with each layer's ``[B, S, ...]`` cache
+    replaced by a ``[num_blocks, block_size, ...]`` block pool)."""
+    check_paged_support(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    head, pattern, R = group_structure(cfg)
+
+    def layer(kind: str):
+        c = mla_mod.abstract_paged_mla_cache(cfg, num_blocks, block_size,
+                                             dt) \
+            if cfg.use_mla else \
+            attn.abstract_paged_kv_cache(cfg, num_blocks, block_size, dt)
+        return {"mixer": c}
+
+    cache: Dict[str, Any] = {}
+    if head:
+        cache["head_layers"] = {f"layer{i}": layer(k)
+                                for i, (k, f) in enumerate(head)}
+    if R:
+        group = {f"l{j}": layer(k) for j, (k, f) in enumerate(pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), group)
+    return cache
+
+
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
             prefix_embeds: Optional[jax.Array] = None,
             enc_embeds: Optional[jax.Array] = None,
@@ -470,14 +537,84 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
     return logits, cache
 
 
+def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
+                   cache, block_tables: jax.Array, prefix_len: int,
+                   block_size: int, max_cache_len: int,
+                   flags: RuntimeFlags = DEFAULT_FLAGS):
+    """Prefill a prompt *suffix* against shared prefix blocks.
+
+    tokens: [B, S'] — the prompt tokens from position ``prefix_len`` on
+    (``prefix_len`` is a static multiple of ``block_size``); ``cache`` is
+    the paged arena and ``block_tables`` [B, P] names the prefix blocks.
+    Returns (last-token logits [B, V], suffix cache rows padded to
+    ``max_cache_len`` — scatter them into the arena with the paged
+    insert).  Suffix activations are bit-identical to a cold prefill of
+    the full prompt (row-independent attention; see
+    ``attn.prefill_extend_into_cache``)."""
+    check_paged_support(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_apply(params["embed"], tokens, dt)
+    x = constrain_batch(x, flags)
+    B, S_, _ = x.shape
+    positions = jnp.broadcast_to(prefix_len + jnp.arange(S_), (B, S_))
+    n_prefix_pages = prefix_len // block_size
+    ptbl = block_tables[:, :n_prefix_pages]
+
+    def gather_prefix(arena_mixer):
+        return jax.tree.map(
+            lambda a: a[ptbl].reshape((B, prefix_len) + a.shape[2:]),
+            arena_mixer)
+
+    head, pattern, R = group_structure(cfg)
+    out_cache: Dict[str, Any] = {}
+    if head:
+        out_cache["head_layers"] = {}
+        for i, (k, f) in enumerate(head):
+            lp = params["head_layers"][f"layer{i}"]
+            pkv = {"mixer": gather_prefix(
+                cache["head_layers"][f"layer{i}"]["mixer"])}
+            x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                  want_cache=True,
+                                  max_cache_len=max_cache_len, flags=flags,
+                                  prefix_kv=pkv, prefix_len=prefix_len)
+            out_cache["head_layers"][f"layer{i}"] = c
+    if R:
+        def group_step(x, scanned):
+            group_params, group_arena = scanned
+            caches = {}
+            for j, (k, f) in enumerate(pattern):
+                lp = group_params[f"l{j}"]
+                pkv = {"mixer": gather_prefix(group_arena[f"l{j}"]["mixer"])}
+                x, _, c = layer_apply(lp, cfg, k, f, x, positions,
+                                      want_cache=True,
+                                      max_cache_len=max_cache_len,
+                                      flags=flags, prefix_kv=pkv,
+                                      prefix_len=prefix_len)
+                caches[f"l{j}"] = c
+            return x, caches
+
+        x, group_caches = jax.lax.scan(group_step, x,
+                                       (params["blocks"], cache["blocks"]))
+        out_cache["blocks"] = group_caches
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, out_cache
+
+
 def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 cache, cache_pos: jax.Array,
-                flags: RuntimeFlags = DEFAULT_FLAGS):
+                flags: RuntimeFlags = DEFAULT_FLAGS,
+                block_tables: Optional[jax.Array] = None):
     """One decode step. tokens: [B, 1]. Returns (logits [B,V], new_cache).
 
     ``cache_pos`` is either a scalar (all rows at the same offset — the
     classic static batch) or a [B] vector of per-row offsets (continuous
-    batching: every row is an independent request/slot)."""
+    batching: every row is an independent request/slot).
+
+    ``block_tables`` ([B, P] int32) switches to the paged path: ``cache``
+    holds block-pool arenas and each row's K/V is reached through its
+    block table (bit-identical greedy tokens to the contiguous path)."""
     dt = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens, dt)
     x = constrain_batch(x, flags)
@@ -494,7 +631,8 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
             lp = params["head_layers"][f"layer{i}"]
             x, _, c = layer_apply(lp, cfg, k, f, x, positions,
                                   cache=cache["head_layers"][f"layer{i}"],
-                                  cache_pos=cache_pos, flags=flags)
+                                  cache_pos=cache_pos, flags=flags,
+                                  block_tables=block_tables)
             new_cache["head_layers"][f"layer{i}"] = c
     if R:
         # The stacked cache rides in the scan CARRY (updated in place per
@@ -517,7 +655,8 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 x, _, c = layer_apply(lp, cfg, k, f, x, positions,
                                       cache=group_cache[f"l{j}"],
                                       cache_pos=cache_pos,
-                                      memory_kv=mkv, flags=flags)
+                                      memory_kv=mkv, flags=flags,
+                                      block_tables=block_tables)
                 if mkv is not None:
                     c["cross"] = mkv
                 new_group[f"l{j}"] = c

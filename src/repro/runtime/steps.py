@@ -141,3 +141,40 @@ def make_slot_decode_step(model: Model,
         return next_tok, new_cache
 
     return slot_decode_step
+
+
+def make_paged_decode_step(model: Model,
+                           flags: RuntimeFlags = DEFAULT_FLAGS,
+                           pad_id: int = 0):
+    """Like :func:`make_slot_decode_step`, but the cache is a paged
+    block-pool arena and each slot reaches its K/V through a block table
+    ([N, P] int32; inactive rows hold all-zero tables, so their writes
+    land in the trash block 0)."""
+    def paged_decode_step(params, tokens, cache, positions, active,
+                          block_tables):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              positions, flags=flags,
+                                              block_tables=block_tables)
+        next_tok = jnp.where(
+            active[:, None],
+            jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None],
+            jnp.asarray(pad_id, jnp.int32))
+        return next_tok, new_cache
+
+    return paged_decode_step
+
+
+def make_prefill_extend_step(model: Model, prefix_len: int,
+                             block_size: int, max_cache_len: int,
+                             flags: RuntimeFlags = DEFAULT_FLAGS):
+    """Prefix-shared prefill: compute only the prompt suffix against
+    cached prefix blocks.  ``prefix_len`` is static (one compiled step
+    per (prefix pages, suffix length) shape pair)."""
+    def prefill_extend_step(params, tokens, cache, block_tables):
+        logits, rows = model.prefill_extend(
+            params, tokens, cache, block_tables, prefix_len, block_size,
+            max_cache_len, flags=flags)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, rows
+
+    return prefill_extend_step

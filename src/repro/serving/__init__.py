@@ -1,13 +1,15 @@
 from .engine import LLMEngine
-from .batching import Request, SlotScheduler, TokenEvent
+from .batching import PagedScheduler, Request, SlotScheduler, TokenEvent
 from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
                           UnbatchCalculator, LLMPrefillCalculator,
                           LLMDecodeLoopCalculator)
+from .kvcache import BlockPool, BlockPoolError, PrefixIndex
 from .pipeline import build_continuous_serving_graph, build_serving_graph
 from .server import GraphServer, RequestHandle
 
 __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "UnbatchCalculator", "LLMPrefillCalculator",
            "LLMDecodeLoopCalculator", "Request", "SlotScheduler",
-           "TokenEvent", "build_serving_graph",
+           "PagedScheduler", "TokenEvent", "BlockPool", "BlockPoolError",
+           "PrefixIndex", "build_serving_graph",
            "build_continuous_serving_graph", "GraphServer", "RequestHandle"]

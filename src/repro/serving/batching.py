@@ -57,6 +57,38 @@ def make_slot_insert():
     return insert
 
 
+def make_paged_insert(block_size: int):
+    """Build ``insert(arena, rows, row, page_ids)``: scatter one prefilled
+    cache row (shaped ``[B, S_cache, ...]``, ``S_cache`` a multiple of
+    ``block_size``) into the paged arena, page by page.
+
+    ``page_ids`` is a fixed-length [P] int32 vector — entry ``j`` is the
+    arena block receiving the row's ``j``-th page, or 0 (the trash block)
+    for pages that must not land anywhere: padding beyond the prompt, and
+    pages whose content is already present as a shared prefix block
+    (shared blocks are immutable — redirecting their writes to the trash
+    block preserves that invariant).  Fixed length means one compilation
+    covers every page count."""
+
+    def insert(arena, rows, row, page_ids):
+        def ins(path, big, rs):
+            ax = slot_batch_axis(path)
+            r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
+            r = lax.squeeze(r, (ax,))
+            if ax == 1:                     # scanned blocks: [R, S, ...]
+                R_, S = r.shape[0], r.shape[1]
+                pages = r.reshape((R_, S // block_size, block_size)
+                                  + r.shape[2:])
+                return big.at[:, page_ids].set(pages.astype(big.dtype))
+            S = r.shape[0]                   # head layers: [S, ...]
+            pages = r.reshape((S // block_size, block_size) + r.shape[1:])
+            return big.at[page_ids].set(pages.astype(big.dtype))
+
+        return tree_map_with_path(ins, arena, rows)
+
+    return insert
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request as tracked by the scheduler."""
@@ -68,6 +100,11 @@ class Request:
     slot: int = -1
     finished: bool = False
     finish_reason: str = ""            # "eos" | "length"
+    # paged-scheduler state (unused on the slot path)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    n_pages: int = 0                   # pages present in the block table
+    reserved_left: int = 0             # reserved-but-unallocated pages
+    prefix_len: int = 0                # tokens reused from shared blocks
 
 
 @dataclasses.dataclass
@@ -107,7 +144,7 @@ class SlotScheduler:
         self.waiting: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * self.num_slots
         self.free: List[int] = list(range(self.num_slots))  # LIFO reuse
-        self.cache = engine.new_slot_cache(self.num_slots)
+        self.cache = self._make_cache()
         self.positions = np.zeros(self.num_slots, np.int32)
         self.last_tokens = np.full(self.num_slots, self.pad_id, np.int32)
         self.stats: Dict[str, Any] = {
@@ -120,6 +157,9 @@ class SlotScheduler:
             # FlowLimiter upstream this must never exceed max_in_flight
             "max_outstanding": 0,
         }
+
+    def _make_cache(self):
+        return self.engine.new_slot_cache(self.num_slots)
 
     # -- state predicates -------------------------------------------------
     @property
@@ -241,3 +281,194 @@ class SlotScheduler:
         self.free.append(slot)
         req.slot = -1
         self.stats["completed"] += 1
+
+
+class PagedScheduler(SlotScheduler):
+    """Continuous batching over a paged KV cache.
+
+    Instead of one contiguous max-length cache row per slot, K/V live in
+    a block-pool arena (:class:`~repro.serving.kvcache.BlockPool`): each
+    request owns a *block table* of fixed-size token pages, allocated as
+    its sequence grows and freed on eviction, and full prompt blocks are
+    shared across requests by a hash-trie prefix index (ref-counted; a
+    prefix hit skips that prefix's prefill compute entirely via the
+    prefix-extend path).
+
+    Admission is **block-availability-aware**: a request is admitted only
+    once its worst-case page demand ``ceil((S + max_new) / bs)`` (minus
+    shared-prefix hits) can be *reserved*, so decode-time page extension
+    can never fail mid-flight and no preemption path is needed.  Requests
+    beyond block capacity wait, which ultimately surfaces upstream as
+    FlowLimiter back-pressure reflecting real memory.
+
+    Greedy decode stays bit-identical to ``LLMEngine.generate``: pages
+    gather back into position order (decode) and suffix prefill is
+    row-independent (see the model-layer docstrings).
+    """
+
+    def __init__(self, engine, num_slots: int = 4, *,
+                 num_blocks: int, block_size: int = 16,
+                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
+                 pad_id: int = 0, prefix_sharing: bool = True,
+                 trace=None):
+        from .kvcache import BlockPool, PrefixIndex, ROOT
+        self._ROOT = ROOT
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        super().__init__(engine, num_slots, max_new_tokens=max_new_tokens,
+                         eos_id=eos_id, pad_id=pad_id)
+        self.pool = BlockPool(self.num_blocks, self.block_size)
+        self.prefix: Optional[PrefixIndex] = \
+            PrefixIndex() if prefix_sharing else None
+        self.pages_per_seq = engine.max_len // self.block_size
+        self.tables = np.zeros((self.num_slots, self.pages_per_seq),
+                               np.int32)
+        self._trace = trace or (lambda name, value: None)
+        self.stats.update({
+            "prefill_tokens": 0,          # prompt tokens actually computed
+            "prefill_tokens_saved": 0,    # covered by shared prefix blocks
+            "shared_block_hits": 0, "extend_prefills": 0,
+            "admission_blocked_on_blocks": 0, "blocks_peak": 0,
+        })
+
+    def _make_cache(self):
+        return self.engine.new_paged_cache(self.num_blocks,
+                                           self.block_size)
+
+    def max_request_pages(self) -> int:
+        """Largest worst-case page demand the arena can ever satisfy."""
+        return self.num_blocks - 1          # block 0 is the trash block
+
+    def submit(self, payload) -> Request:
+        req_pages = -(-(np.asarray(payload["tokens"]).size
+                        + payload.get("max_new_tokens",
+                                      self.default_max_new))
+                      // self.block_size)
+        if req_pages > self.max_request_pages():
+            # admission could never reserve this: without the check the
+            # request would sit at the FIFO head forever, starving
+            # everything behind it
+            raise ValueError(
+                f"request {payload.get('id')!r}: needs {req_pages} KV "
+                f"blocks but the arena only has "
+                f"{self.max_request_pages()} usable blocks")
+        return super().submit(payload)
+
+    def _trace_pool(self) -> None:
+        self._trace("kvcache.blocks_in_use", self.pool.blocks_in_use)
+        self._trace("kvcache.blocks_free", self.pool.free_blocks)
+
+    # -- admission --------------------------------------------------------
+    def admit(self) -> List[TokenEvent]:
+        """Admit waiting requests while a slot AND their worst-case block
+        reservation are available.  Requests are processed one at a time
+        so a request can share full prompt blocks registered by the one
+        admitted just before it (cold prefills are batch-1; the win moves
+        from padding-free grouping to not recomputing shared prefixes)."""
+        events: List[TokenEvent] = []
+        bs = self.block_size
+        while self.waiting and self.free:
+            req = self.waiting[0]
+            S = req.prompt.size
+            total_pages = -(-(S + req.max_new_tokens) // bs)
+            if self.prefix is not None:
+                hits, parent = self.prefix.match(req.prompt, bs,
+                                                 max_blocks=(S - 1) // bs)
+            else:
+                hits, parent = [], self._ROOT
+            need = total_pages - len(hits)
+            if not self.pool.can_reserve(need):
+                self.stats["admission_blocked_on_blocks"] += 1
+                break
+            self.waiting.popleft()
+            self.pool.reserve(need)
+            for b in hits:
+                self.pool.ref_inc(b)
+            n_prompt_pages = -(-S // bs)
+            owned = [self.pool.allocate(reserved=True)
+                     for _ in range(n_prompt_pages - len(hits))]
+            slot = self.free.pop()
+            req.slot = slot
+            self.slots[slot] = req
+            req.blocks = hits + owned
+            req.n_pages = n_prompt_pages
+            req.reserved_left = total_pages - n_prompt_pages
+            C = len(hits) * bs
+            req.prefix_len = C
+            self.tables[slot] = 0
+            self.tables[slot, :n_prompt_pages] = req.blocks
+            page_ids = np.zeros(self.pages_per_seq, np.int32)
+            if C:
+                first, rows = self.engine.prefill_extend(
+                    req.prompt[C:], self.cache, self.tables[slot], C)
+                page_ids[:len(owned)] = owned
+                self.stats["extend_prefills"] += 1
+                self.stats["prefill_tokens"] += S - C
+                self.stats["prefill_tokens_saved"] += C
+                self.stats["shared_block_hits"] += len(hits)
+            else:
+                first, rows = self.engine.prefill(req.prompt[None])
+                page_ids[:n_prompt_pages] = owned
+                self.stats["prefill_tokens"] += S
+            self.cache = self.engine.paged_insert(self.cache, rows, 0,
+                                                  page_ids)
+            self.stats["prefill_calls"] += 1
+            self.stats["prefill_requests"] += 1
+            if self.prefix is not None:
+                key = parent
+                for i in range(len(hits), S // bs):
+                    key = self.prefix.register(
+                        key, req.prompt[i * bs:(i + 1) * bs],
+                        req.blocks[i])
+            self.positions[slot] = S
+            events.append(self._record(req, int(first[0])))
+            self.stats["max_active_slots"] = max(
+                self.stats["max_active_slots"], self.active)
+            self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
+        self._trace_pool()
+        return events
+
+    # -- one decode step --------------------------------------------------
+    def step(self) -> List[TokenEvent]:
+        if self.active == 0:
+            return []
+        bs = self.block_size
+        active = np.zeros(self.num_slots, bool)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            active[slot] = True
+            page = int(self.positions[slot]) // bs
+            if page >= req.n_pages:
+                # the write position crossed into a fresh page: extend the
+                # block table from this request's reservation (guaranteed
+                # to succeed — that is what admission reserved)
+                blk = self.pool.allocate(reserved=True)
+                req.reserved_left -= 1
+                req.blocks.append(blk)
+                self.tables[slot, page] = blk
+                req.n_pages += 1
+        self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
+        next_tok, self.cache = self.engine.decode_paged(
+            self.cache, self.last_tokens, self.positions, active,
+            self.tables)
+        self.stats["decode_steps"] += 1
+        events = []
+        for slot in np.nonzero(active)[0]:
+            req = self.slots[slot]
+            self.positions[slot] += 1
+            events.append(self._record(req, int(next_tok[slot])))
+        self._trace_pool()
+        return events
+
+    # -- eviction ---------------------------------------------------------
+    def _evict(self, req: Request) -> None:
+        slot = req.slot
+        super()._evict(req)
+        self.tables[slot] = 0
+        for b in req.blocks:
+            if self.pool.free(b) and self.prefix is not None:
+                self.prefix.unregister_block(b)
+        req.blocks = []
+        self.pool.release_reservation(req.reserved_left)
+        req.reserved_left = 0

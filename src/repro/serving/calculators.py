@@ -28,7 +28,7 @@ from ..core.calculator import Calculator, CalculatorContext
 from ..core.contract import AnyType, contract
 from ..core.registry import register_calculator
 from ..core.timestamp import Timestamp
-from .batching import SlotScheduler, TokenEvent
+from .batching import PagedScheduler, SlotScheduler, TokenEvent
 
 
 @register_calculator
@@ -139,6 +139,10 @@ class ContinuousBatchCalculator(Calculator):
         engine   — an LLMEngine (pin this node to a dedicated executor).
     Options:
         num_slots (default 4), max_new_tokens (default 16), eos_id.
+        paged (default False) — use the paged KV cache
+        (:class:`~repro.serving.batching.PagedScheduler`) with
+        num_blocks / block_size / prefix_sharing; block-pool occupancy is
+        recorded into the graph tracer as ``kvcache.*`` gauges.
 
     Each output stream carries its own monotonically increasing timestamp
     counter: responses finish out of request order by design (that is the
@@ -156,11 +160,23 @@ class ContinuousBatchCalculator(Calculator):
                 .set_input_policy("immediate"))
 
     def open(self, ctx: CalculatorContext) -> None:
-        self.sched = SlotScheduler(
-            ctx.side("engine"),
-            num_slots=int(ctx.options.get("num_slots", 4)),
-            max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
-            eos_id=ctx.options.get("eos_id"))
+        if ctx.options.get("paged"):
+            self.sched: SlotScheduler = PagedScheduler(
+                ctx.side("engine"),
+                num_slots=int(ctx.options.get("num_slots", 4)),
+                num_blocks=int(ctx.options["num_blocks"]),
+                block_size=int(ctx.options.get("block_size", 16)),
+                max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
+                eos_id=ctx.options.get("eos_id"),
+                prefix_sharing=bool(ctx.options.get("prefix_sharing",
+                                                    True)),
+                trace=ctx.trace_gauge)
+        else:
+            self.sched = SlotScheduler(
+                ctx.side("engine"),
+                num_slots=int(ctx.options.get("num_slots", 4)),
+                max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
+                eos_id=ctx.options.get("eos_id"))
         self._tick_pending = False
         self._ts = {"TOKEN": 0, "RESPONSE": 0, "TICK_OUT": 0}
 

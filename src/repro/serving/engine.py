@@ -17,7 +17,7 @@ Two decode modes:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +25,12 @@ import numpy as np
 
 from ..models.config import ArchConfig
 from ..models.model import Model
-from ..models.transformer import DEFAULT_FLAGS, RuntimeFlags
-from ..runtime.steps import (make_decode_step, make_prefill_step,
+from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
+                                  check_paged_support)
+from ..runtime.steps import (make_decode_step, make_paged_decode_step,
+                             make_prefill_extend_step, make_prefill_step,
                              make_slot_decode_step)
-from .batching import make_slot_insert
+from .batching import make_paged_insert, make_slot_insert
 
 
 class LLMEngine:
@@ -38,6 +40,7 @@ class LLMEngine:
         self.cfg = cfg
         self.model = Model(cfg)
         self.max_len = max_len
+        self.flags = flags
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
         self.params = params
@@ -46,6 +49,12 @@ class LLMEngine:
         self._decode = jax.jit(make_decode_step(self.model, flags))
         self._slot_decode = jax.jit(make_slot_decode_step(self.model, flags))
         self._insert = jax.jit(make_slot_insert())
+        # paged-path jits, built lazily on first use (one per block_size /
+        # prefix_len — see the paged API section below)
+        self._paged_decode = None
+        self._paged_insert = None
+        self._paged_block_size = 0
+        self._extend_steps: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -112,3 +121,81 @@ class LLMEngine:
             jnp.asarray(positions, jnp.int32),
             jnp.asarray(active, bool))
         return np.asarray(next_tok[:, 0]), cache
+
+    # ------------------------------------------------------------------
+    # paged API (block-pool KV cache; see repro.serving.kvcache)
+    # ------------------------------------------------------------------
+    def new_paged_cache(self, num_blocks: int, block_size: int):
+        """Zeroed paged arena of ``num_blocks`` blocks of ``block_size``
+        tokens (block 0 is the trash block).  Also builds the paged
+        decode/insert jits for this ``block_size``."""
+        check_paged_support(self.cfg)
+        if self.max_len % block_size != 0:
+            raise ValueError(f"engine max_len {self.max_len} must be a "
+                             f"multiple of block_size {block_size}")
+        if self.flags.use_flash:
+            raise ValueError("paged serving requires attn_impl "
+                             "'chunked'|'naive' (the prefix-extend "
+                             "prefill has no flash path yet)")
+        if getattr(self.flags, "model_size", 1) > 1:
+            raise ValueError("paged serving is single-host for now "
+                             "(prefix-extend attention is not "
+                             "sequence-parallel)")
+        if self.cfg.use_mla and getattr(self.flags, "use_paged_kernel",
+                                        False):
+            raise ValueError("use_paged_kernel covers GQA/MHA/MQA only; "
+                             "MLA paged decode uses the latent-gather "
+                             "path (drop the flag)")
+        if self._paged_decode is None or \
+                self._paged_block_size != int(block_size):
+            # jits are cached per block_size (shapes retrace on their own)
+            self._paged_block_size = int(block_size)
+            self._paged_decode = jax.jit(
+                make_paged_decode_step(self.model, self.flags))
+            self._paged_insert = jax.jit(make_paged_insert(block_size))
+            self._extend_steps.clear()
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.model.abstract_paged_cache(num_blocks, block_size))
+
+    def paged_insert(self, cache, rows, row: int, page_ids: np.ndarray):
+        """Scatter prefilled cache row ``row`` of ``rows`` into the arena
+        at ``page_ids`` ([max_len // block_size] int32, 0 = skip page)."""
+        return self._paged_insert(cache, rows, jnp.asarray(row, jnp.int32),
+                                  jnp.asarray(page_ids, jnp.int32))
+
+    def decode_paged(self, cache, last_tokens: np.ndarray,
+                     positions: np.ndarray, active: np.ndarray,
+                     block_tables: np.ndarray) -> Tuple[np.ndarray, Dict]:
+        """One greedy decode step across all slots, K/V through block
+        tables ([N, P] int32; inactive rows all-zero)."""
+        next_tok, cache = self._paged_decode(
+            self.params,
+            jnp.asarray(last_tokens, jnp.int32)[:, None],
+            cache,
+            jnp.asarray(positions, jnp.int32),
+            jnp.asarray(active, bool),
+            jnp.asarray(block_tables, jnp.int32))
+        return np.asarray(next_tok[:, 0]), cache
+
+    def prefill_extend(self, suffix_tokens: np.ndarray,
+                       cache, table_row: np.ndarray,
+                       prefix_len: int) -> Tuple[np.ndarray, Dict]:
+        """Prefill one prompt's suffix against its shared prefix blocks.
+
+        suffix_tokens: [S'] — prompt tokens from ``prefix_len`` on;
+        table_row: [P] int32 block table covering the prefix pages.
+        Returns (first generated token [1], suffix cache rows [1, ...] to
+        :meth:`paged_insert`).  Compiled per (prefix_len, S') shape."""
+        step = self._extend_steps.get(prefix_len)
+        if step is None:
+            step = jax.jit(make_prefill_extend_step(
+                self.model, prefix_len, self._paged_block_size,
+                self.max_len, self.flags))
+            self._extend_steps[prefix_len] = step
+        next_tok, rows = step(
+            self.params,
+            jnp.asarray(suffix_tokens, jnp.int32)[None],
+            cache,
+            jnp.asarray(table_row, jnp.int32)[None])
+        return np.asarray(next_tok), rows

@@ -1,0 +1,8 @@
+"""Paged KV-cache subsystem: block-pool allocator over one preallocated
+arena, ref-counted prompt-prefix sharing, and the host bookkeeping behind
+the paged decode path (see docs/KV_CACHE.md)."""
+from .allocator import BlockPool, BlockPoolError
+from .prefix import PrefixIndex, ROOT, chain_key
+
+__all__ = ["BlockPool", "BlockPoolError", "PrefixIndex", "ROOT",
+           "chain_key"]

@@ -78,7 +78,11 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
                                    drop_on_overload: bool = False,
                                    max_new_tokens: int = 16,
                                    eos_id: Optional[int] = None,
-                                   enable_tracer: bool = True
+                                   enable_tracer: bool = True,
+                                   paged: bool = False,
+                                   num_blocks: int = 0,
+                                   block_size: int = 16,
+                                   prefix_sharing: bool = True
                                    ) -> GraphConfig:
     """Continuous-batching serving graph (the GraphServer topology).
 
@@ -87,6 +91,12 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     wave is always staged while the current one decodes.  Beyond that the
     limiter queues up to ``queue_size`` requests — or drops immediately
     when ``drop_on_overload`` (which makes ``queue_size`` moot).
+
+    With ``paged=True`` the engine node runs the paged KV cache
+    (``num_blocks`` blocks of ``block_size`` tokens; ref-counted prefix
+    sharing unless ``prefix_sharing=False``).  The GraphServer derives a
+    memory-aware ``max_in_flight`` default in that mode — see
+    :class:`repro.serving.server.GraphServer`.
     """
     if max_in_flight <= 0:
         max_in_flight = 2 * num_slots
@@ -94,6 +104,13 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     requests = b.input("requests")
     engine_sp = b.side_input("engine")
     b.executor("inference", 1)
+
+    engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens,
+                   "eos_id": eos_id}
+    if paged:
+        engine_opts.update({"paged": True, "num_blocks": num_blocks,
+                            "block_size": block_size,
+                            "prefix_sharing": prefix_sharing})
 
     finished = b.loopback()
     tick = b.loopback()
@@ -107,8 +124,7 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
         inputs={"REQUEST": limiter.out("OUT", name="admitted"),
                 "TICK": tick},
         side_inputs={"engine": engine_sp},
-        options={"num_slots": num_slots, "max_new_tokens": max_new_tokens,
-                 "eos_id": eos_id},
+        options=engine_opts,
         executor="inference")
     tokens = engine.out("TOKEN", name="tokens")
     responses = engine.out("RESPONSE", name="responses")

@@ -117,14 +117,39 @@ class GraphServer:
     def __init__(self, engine: LLMEngine, *, num_slots: int = 4,
                  max_in_flight: int = 0, queue_size: int = 1024,
                  max_new_tokens: int = 16, eos_id: Optional[int] = None,
-                 drop_on_overload: bool = False, enable_tracer: bool = True):
+                 drop_on_overload: bool = False, enable_tracer: bool = True,
+                 paged: bool = False, num_blocks: int = 0,
+                 block_size: int = 16, prefix_sharing: bool = True):
         self.engine = engine
         self._default_max_new = max_new_tokens
+        self._paged = paged
+        self._block_size = block_size
+        if paged:
+            if num_blocks <= 0:
+                # arena sized to num_slots worst-case rows by default —
+                # the same memory the slot cache would have used
+                num_blocks = 1 + num_slots * (engine.max_len // block_size)
+            if max_in_flight <= 0:
+                # The limiter bounds scheduling burst; REAL memory
+                # admission is the PagedScheduler's block-reservation
+                # check.  A request that cannot reserve its worst-case
+                # pages waits inside the engine subsystem holding its
+                # limiter budget, so sustained block pressure backs up
+                # into the limiter and on to submitters.  The default is
+                # therefore at least as permissive as slot mode, plus
+                # however many worst-case rows the arena actually holds
+                # (a big arena should admit more than 2*num_slots).
+                max_in_flight = max(
+                    2 * num_slots,
+                    (num_blocks - 1) // (engine.max_len // block_size))
+        self._num_blocks = num_blocks
         cfg = build_continuous_serving_graph(
             num_slots=num_slots, max_in_flight=max_in_flight,
             queue_size=queue_size, max_new_tokens=max_new_tokens,
             eos_id=eos_id, drop_on_overload=drop_on_overload,
-            enable_tracer=enable_tracer)
+            enable_tracer=enable_tracer, paged=paged,
+            num_blocks=num_blocks, block_size=block_size,
+            prefix_sharing=prefix_sharing)
         self.graph = Graph(cfg, side_packets={"engine": engine})
         self._token_poller = self.graph.add_output_stream_poller("tokens")
         self._handles: Dict[Any, RequestHandle] = {}
@@ -158,6 +183,16 @@ class GraphServer:
             raise ValueError(
                 f"prompt ({tokens.size}) + max_new_tokens ({new}) exceeds "
                 f"engine max_len ({self.engine.max_len})")
+        if self._paged:
+            # mirror PagedScheduler.submit: a request whose worst-case
+            # block demand exceeds the whole arena could never be
+            # admitted — reject it here, client-side (an error inside
+            # the graph node would terminate the run)
+            pages = -(-(tokens.size + new) // self._block_size)
+            if pages > self._num_blocks - 1:
+                raise ValueError(
+                    f"request needs {pages} KV blocks but the arena "
+                    f"only has {self._num_blocks - 1} usable blocks")
         with self._lock:
             if self._closed:
                 raise RuntimeError("server is closed")
@@ -199,6 +234,14 @@ class GraphServer:
                 sched = getattr(node.calculator, "sched", None)
                 if sched is not None:
                     out["scheduler"] = dict(sched.stats)
+                    pool = getattr(sched, "pool", None)
+                    if pool is not None:
+                        out["block_pool"] = dict(
+                            pool.stats, num_blocks=pool.num_blocks,
+                            block_size=pool.block_size,
+                            in_use=pool.blocks_in_use,
+                            free=pool.free_blocks,
+                            reserved=pool.reserved_blocks)
         return out
 
     def close(self, timeout: float = 300.0) -> Dict[str, Any]:

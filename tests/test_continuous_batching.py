@@ -128,28 +128,42 @@ class TestSlotScheduler:
                           "id": 0, "max_new_tokens": 16})
 
 
+@pytest.fixture(scope="module", params=["slot", "paged"])
+def server_factory(request, engine):
+    """Build a GraphServer in either KV-cache mode.  Every TestGraphServer
+    test runs twice; the paged run pins that block-table decode stays
+    bit-identical to the contiguous cache_pos decode across the suite."""
+    def make(**kw):
+        if request.param == "paged":
+            kw.update(paged=True, block_size=8,
+                      num_blocks=kw.pop("num_blocks", 65))
+        return GraphServer(engine, **kw)
+    return make
+
+
 class TestGraphServer:
     """The full graph: FlowLimiter admission -> tick-driven continuous
-    decode -> streamed tokens/responses."""
+    decode -> streamed tokens/responses.  Parametrized over the slot
+    (contiguous rows) and paged (block tables) KV caches."""
 
-    def test_unequal_lengths_match_sequential(self, engine):
+    def test_unequal_lengths_match_sequential(self, engine, server_factory):
         rng = np.random.RandomState(4)
         prompts = make_prompts(rng, [5, 9, 5, 13, 7, 11, 5, 9])
         refs = [engine.generate(p[None], max_new_tokens=6)[0]
                 for p in prompts]
-        with GraphServer(engine, num_slots=4, max_new_tokens=6) as srv:
+        with server_factory(num_slots=4, max_new_tokens=6) as srv:
             handles = [srv.submit(p) for p in prompts]
             results = [h.result(timeout=180) for h in handles]
         for got, ref in zip(results, refs):
             np.testing.assert_array_equal(got, ref)
 
-    def test_concurrent_client_threads(self, engine):
+    def test_concurrent_client_threads(self, engine, server_factory):
         rng = np.random.RandomState(5)
         prompts = make_prompts(rng, [6, 6, 10, 10, 6, 10])
         refs = [engine.generate(p[None], max_new_tokens=5)[0]
                 for p in prompts]
         results = [None] * len(prompts)
-        with GraphServer(engine, num_slots=3, max_new_tokens=5) as srv:
+        with server_factory(num_slots=3, max_new_tokens=5) as srv:
             def client(i):
                 results[i] = srv.submit(prompts[i]).result(timeout=180)
             threads = [threading.Thread(target=client, args=(i,))
@@ -161,24 +175,25 @@ class TestGraphServer:
         for got, ref in zip(results, refs):
             np.testing.assert_array_equal(got, ref)
 
-    def test_streaming_tokens_match_result(self, engine):
+    def test_streaming_tokens_match_result(self, engine, server_factory):
         rng = np.random.RandomState(6)
         prompt = make_prompts(rng, [8])[0]
-        with GraphServer(engine, num_slots=2, max_new_tokens=6) as srv:
+        with server_factory(num_slots=2, max_new_tokens=6) as srv:
             h = srv.submit(prompt)
             streamed = list(h.stream(timeout=180))
             final = h.result(timeout=10)
         np.testing.assert_array_equal(np.asarray(streamed, np.int32), final)
 
-    def test_admission_throttled_under_max_in_flight(self, engine):
+    def test_admission_throttled_under_max_in_flight(self, engine,
+                                                     server_factory):
         """More requests than max_in_flight: the FlowLimiter keeps the
         engine subsystem at <= max_in_flight outstanding requests, yet all
         requests complete (queued upstream, admitted as responses free
         budget)."""
         rng = np.random.RandomState(7)
         prompts = make_prompts(rng, [5] * 9)
-        with GraphServer(engine, num_slots=2, max_in_flight=3,
-                         max_new_tokens=4) as srv:
+        with server_factory(num_slots=2, max_in_flight=3,
+                            max_new_tokens=4) as srv:
             handles = [srv.submit(p) for p in prompts]
             for h in handles:
                 assert h.result(timeout=180) is not None
@@ -189,23 +204,23 @@ class TestGraphServer:
         assert stats["scheduler"]["max_outstanding"] <= 3
         assert stats["scheduler"]["max_active_slots"] <= 2
 
-    def test_submit_rejects_oversized_prompt(self, engine):
+    def test_submit_rejects_oversized_prompt(self, engine, server_factory):
         """Invalid requests fail client-side instead of killing the graph."""
-        with GraphServer(engine, num_slots=2, max_new_tokens=16) as srv:
+        with server_factory(num_slots=2, max_new_tokens=16) as srv:
             with pytest.raises(ValueError):
                 srv.submit(np.zeros(60, np.int32))   # 60 + 16 > max_len 64
             # the server is still healthy afterwards
             ok = srv.submit(np.ones(4, np.int32), max_new_tokens=2)
             assert ok.result(timeout=120) is not None
 
-    def test_finish_out_of_request_order(self, engine):
+    def test_finish_out_of_request_order(self, engine, server_factory):
         """A short request submitted after a long one completes first —
         the defining behaviour continuous batching adds over the
         batch-and-drain pipeline."""
         rng = np.random.RandomState(8)
         long_p, short_p = make_prompts(rng, [6, 6])
         order = []
-        with GraphServer(engine, num_slots=2, max_new_tokens=16) as srv:
+        with server_factory(num_slots=2, max_new_tokens=16) as srv:
             h_long = srv.submit(long_p, max_new_tokens=16)
             h_short = srv.submit(short_p, max_new_tokens=2)
             done = threading.Event()

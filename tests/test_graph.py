@@ -156,6 +156,57 @@ class TestGraphBasics:
         with pytest.raises(GraphError, match="cancel"):
             g.wait_until_done(timeout=10)
 
+    def test_runner_error_surfaces_instead_of_hanging(self):
+        """An exception escaping the task runner itself (not calculator
+        code — e.g. a broken input policy) used to be printed by the
+        executor worker and dropped, leaving wait_until_done to hang.
+        It must surface as the run's recorded error."""
+        cfg = GraphConfig(input_streams=["a"], output_streams=["b"])
+        cfg.add_node("AddOneCalculator", name="n0", inputs={"IN": "a"},
+                     outputs={"OUT": "b"})
+        g = Graph(cfg)
+        g.start_run()
+
+        class BrokenPolicy:
+            def ready_timestamp(self, queues):
+                return g.nodes[0].input_queues["IN"].bound  # pretend ready
+
+            def pop_input_set(self, queues, t):
+                raise RuntimeError("scheduler state corrupted")
+
+        # swap the node's policy after open so only process trips it
+        import time as _t
+        deadline = _t.monotonic() + 10
+        while g.nodes[0].state != g.nodes[0].OPENED:
+            if _t.monotonic() > deadline:  # pragma: no cover
+                pytest.fail("node never opened")
+            _t.sleep(0.01)
+        g.nodes[0].policy = BrokenPolicy()
+        g.add_packet_to_input_stream("a", 1, 0)
+        g.close_all_input_streams()
+        with pytest.raises(GraphError, match="scheduler state corrupted"):
+            g.wait_until_done(timeout=30)
+
+    def test_executor_on_error_callback(self):
+        """Unit: Executor routes run_task exceptions to on_error."""
+        from repro.core.executor import Executor
+        seen = []
+        done = threading.Event()
+
+        def boom(task):
+            raise ValueError(f"task {task}")
+
+        def on_error(e):
+            seen.append(e)
+            done.set()
+
+        ex = Executor("t", 1, boom, on_error=on_error)
+        ex.start()
+        ex.submit(0, "x")
+        assert done.wait(timeout=10)
+        ex.stop()
+        assert isinstance(seen[0], ValueError)
+
 
 class TestValidation:
     def test_unknown_calculator(self):

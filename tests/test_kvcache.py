@@ -1,0 +1,308 @@
+"""Paged KV-cache subsystem: block-pool allocator invariants (property
+tests), prefix-index sharing, and PagedScheduler exactness — paged greedy
+decode and prefix-shared prefill are BIT-IDENTICAL to
+``LLMEngine.generate`` one request at a time, while admission is bounded
+by real block availability and no block leaks across evictions.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401
+from repro.configs import get_config
+from repro.serving import BlockPool, BlockPoolError, LLMEngine, PrefixIndex
+from repro.serving.batching import PagedScheduler
+from repro.serving.kvcache import ROOT
+
+
+def small_cfg(arch="minicpm_2b"):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=128,
+                               vocab_size=512)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return LLMEngine(small_cfg(), max_len=64, seed=7)
+
+
+def drain(sched):
+    got = {}
+    while sched.has_work():
+        for ev in sched.admit() + sched.step():
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens, np.int32)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# allocator property tests
+# ---------------------------------------------------------------------------
+
+class TestBlockPool:
+    def test_random_ops_preserve_invariants(self):
+        """Deterministic randomized sweep of alloc/share/free/reserve;
+        the exhaustive hypothesis version lives in
+        test_kvcache_properties.py (importorskip-guarded)."""
+        rng = np.random.RandomState(0)
+        for trial in range(20):
+            num_blocks = int(rng.randint(2, 13))
+            pool = BlockPool(num_blocks, block_size=4)
+            live, reserved = [], 0
+            for op in rng.randint(0, 6, size=50):
+                if op == 0 and pool.available_blocks > 0:
+                    live.append(pool.allocate())
+                elif op == 1 and live:
+                    blk = live[len(live) // 2]
+                    pool.ref_inc(blk)
+                    live.append(blk)
+                elif op == 2 and live:
+                    blk = live.pop()
+                    assert pool.free(blk) == (blk not in live)
+                elif op == 3 and pool.can_reserve(1):
+                    pool.reserve(1)
+                    reserved += 1
+                elif op == 4 and reserved:
+                    live.append(pool.allocate(reserved=True))
+                    reserved -= 1
+                elif op == 5 and reserved:
+                    pool.release_reservation(1)
+                    reserved -= 1
+                pool.check_invariants()
+                assert pool.reserved_blocks == reserved
+                assert pool.blocks_in_use == len(set(live))
+            for blk in list(live):
+                live.remove(blk)
+                pool.free(blk)
+            if reserved:
+                pool.release_reservation(reserved)
+            pool.check_invariants()
+            assert pool.blocks_in_use == 0
+            assert pool.free_blocks == num_blocks - 1
+            assert pool.stats["allocated"] == pool.stats["freed"]
+
+    def test_double_free_raises(self):
+        pool = BlockPool(4, 4)
+        blk = pool.allocate()
+        pool.free(blk)
+        with pytest.raises(BlockPoolError):
+            pool.free(blk)
+
+    def test_trash_block_never_allocated_or_freed(self):
+        pool = BlockPool(3, 4)
+        assert sorted([pool.allocate(), pool.allocate()]) == [1, 2]
+        with pytest.raises(BlockPoolError):
+            pool.allocate()            # exhausted — 0 is not handed out
+        with pytest.raises(BlockPoolError):
+            pool.free(0)
+
+    def test_over_reservation_rejected(self):
+        pool = BlockPool(4, 4)
+        pool.reserve(3)
+        assert not pool.can_reserve(1)
+        with pytest.raises(BlockPoolError):
+            pool.reserve(1)
+        pool.release_reservation(3)
+        assert pool.can_reserve(3)
+
+    def test_cow_forks_only_shared_blocks(self):
+        pool = BlockPool(8, 4)
+        blk = pool.allocate()
+        assert pool.cow(blk) == blk            # unshared: write in place
+        pool.ref_inc(blk)
+        new = pool.cow(blk)
+        assert new != blk and pool.ref_count(blk) == 1 \
+            and pool.ref_count(new) == 1
+        pool.free(new)
+        pool.free(blk)
+        pool.check_invariants()
+
+
+class TestPrefixIndex:
+    def test_match_walks_longest_chain(self):
+        idx = PrefixIndex()
+        toks = list(range(12))
+        k1 = idx.register(ROOT, toks[0:4], 1)
+        idx.register(k1, toks[4:8], 2)
+        hits, _ = idx.match(toks, 4)
+        assert hits == [1, 2]
+        # divergence inside block 2 -> only block 1 matches
+        hits, _ = idx.match(toks[:4] + [99, 99, 99, 99], 4)
+        assert hits == [1]
+        # max_blocks caps the walk (scheduler always computes >= 1 token)
+        hits, _ = idx.match(toks, 4, max_blocks=1)
+        assert hits == [1]
+
+    def test_unregister_evicts(self):
+        idx = PrefixIndex()
+        idx.register(ROOT, [1, 2], 5)
+        idx.unregister_block(5)
+        assert idx.match([1, 2], 2) == ([], ROOT)
+        assert len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# PagedScheduler end-to-end
+# ---------------------------------------------------------------------------
+
+class TestPagedScheduler:
+    def test_paged_decode_matches_sequential(self, engine):
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, 512, size=L).astype(np.int32)
+                   for L in [5, 9, 5, 13, 7]]
+        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        sched = PagedScheduler(engine, num_slots=3, num_blocks=24,
+                               block_size=8, max_new_tokens=6)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        # all blocks and reservations returned, prefix index empty
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+        assert sched.pool.reserved_blocks == 0
+        assert len(sched.prefix) == 0
+        assert sorted(sched.free) == list(range(3))
+
+    def test_shared_prefix_skips_prefill_compute(self, engine):
+        """Prompts sharing full blocks reuse them: fewer prefill tokens
+        computed, identical outputs."""
+        rng = np.random.RandomState(1)
+        prefix = rng.randint(0, 512, size=16).astype(np.int32)
+        prompts = [np.concatenate(
+            [prefix, rng.randint(0, 512, size=k).astype(np.int32)])
+            for k in (3, 5, 7)]
+        refs = [engine.generate(p[None], max_new_tokens=5)[0]
+                for p in prompts]
+        sched = PagedScheduler(engine, num_slots=3, num_blocks=32,
+                               block_size=8, max_new_tokens=5)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        st_ = sched.stats
+        # requests 2 and 3 each reused the 16-token prefix (2 blocks)
+        assert st_["extend_prefills"] == 2
+        assert st_["prefill_tokens_saved"] == 32
+        assert st_["shared_block_hits"] == 4
+        assert st_["prefill_tokens"] == sum(len(p) for p in prompts) - 32
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0 and len(sched.prefix) == 0
+
+    def test_sharing_disabled_recomputes(self, engine):
+        rng = np.random.RandomState(2)
+        prefix = rng.randint(0, 512, size=16).astype(np.int32)
+        prompts = [np.concatenate(
+            [prefix, rng.randint(0, 512, size=k).astype(np.int32)])
+            for k in (3, 5)]
+        refs = [engine.generate(p[None], max_new_tokens=4)[0]
+                for p in prompts]
+        sched = PagedScheduler(engine, num_slots=2, num_blocks=32,
+                               block_size=8, max_new_tokens=4,
+                               prefix_sharing=False)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["prefill_tokens_saved"] == 0
+        assert sched.stats["prefill_tokens"] == sum(len(p) for p in prompts)
+
+    def test_admission_blocks_on_pool_pressure(self, engine):
+        """A pool too small for all requests at once: admission waits for
+        block availability (not just slots), everything still completes,
+        and peak usage never exceeds the arena."""
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(0, 512, size=9).astype(np.int32)
+                   for _ in range(6)]
+        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        # each request: ceil((9+6)/8) = 2 pages; 5 usable blocks => at
+        # most 2 concurrently despite 4 slots
+        sched = PagedScheduler(engine, num_slots=4, num_blocks=6,
+                               block_size=8, max_new_tokens=6)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["admission_blocked_on_blocks"] > 0
+        assert sched.stats["max_active_slots"] <= 2
+        assert sched.stats["blocks_peak"] <= 5
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+
+    def test_higher_concurrency_than_slot_rows_at_same_memory(self, engine):
+        """The capacity claim: an arena holding N worst-case (max_len)
+        rows serves MORE than N concurrent small requests, because paged
+        requests only occupy what they use."""
+        rng = np.random.RandomState(5)
+        # arena = 2 worst-case rows (2 * 64 tokens / 8 = 16 blocks + trash)
+        sched = PagedScheduler(engine, num_slots=8, num_blocks=17,
+                               block_size=8, max_new_tokens=4)
+        prompts = [rng.randint(0, 512, size=6).astype(np.int32)
+                   for _ in range(8)]
+        refs = [engine.generate(p[None], max_new_tokens=4)[0]
+                for p in prompts]
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        # each small request needs ceil((6+4)/8)=2 pages -> 8 fit at once,
+        # where the contiguous slot cache would cap at 2 rows
+        assert sched.stats["max_active_slots"] == 8
+
+    def test_mla_arch_paged_and_prefix_shared(self):
+        """MLA (latent KV) paged decode + prefix-extend stay exact."""
+        cfg = dataclasses.replace(get_config("deepseek_v3_671b").reduced(),
+                                  vocab_size=512)
+        eng = LLMEngine(cfg, max_len=32, seed=3)
+        rng = np.random.RandomState(6)
+        prefix = rng.randint(0, 512, size=8).astype(np.int32)
+        prompts = [rng.randint(0, 512, size=5).astype(np.int32),
+                   np.concatenate([prefix,
+                                   rng.randint(0, 512, size=3)
+                                   .astype(np.int32)]),
+                   np.concatenate([prefix,
+                                   rng.randint(0, 512, size=4)
+                                   .astype(np.int32)])]
+        refs = [eng.generate(p[None], max_new_tokens=4)[0] for p in prompts]
+        sched = PagedScheduler(eng, num_slots=3, num_blocks=16,
+                               block_size=4, max_new_tokens=4)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["extend_prefills"] >= 1
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+
+    def test_unservable_request_rejected_at_submit(self, engine):
+        """A request within max_len whose worst-case page demand exceeds
+        the whole arena must be rejected up front — otherwise it would
+        sit at the FIFO head forever, starving every request behind it."""
+        sched = PagedScheduler(engine, num_slots=2, num_blocks=4,
+                               block_size=8, max_new_tokens=16)
+        with pytest.raises(ValueError, match="blocks"):
+            # 30 + 16 = 46 tokens <= max_len 64, but 6 pages > 3 usable
+            sched.submit({"tokens": np.zeros(30, np.int32), "id": 0})
+        # a servable request still goes through
+        from repro.serving import GraphServer
+        with GraphServer(engine, num_slots=2, max_new_tokens=16,
+                         paged=True, num_blocks=4, block_size=8) as srv:
+            with pytest.raises(ValueError, match="blocks"):
+                srv.submit(np.zeros(30, np.int32))
+            ok = srv.submit(np.ones(4, np.int32), max_new_tokens=2)
+            assert ok.result(timeout=120) is not None
+
+    def test_recurrent_arch_rejected(self):
+        cfg = get_config("xlstm_1_3b").reduced()
+        eng = LLMEngine(cfg, max_len=32, seed=0)
+        with pytest.raises(ValueError, match="recurrent"):
+            PagedScheduler(eng, num_slots=2, num_blocks=8, block_size=4)

@@ -1,0 +1,73 @@
+"""Hypothesis property tests for the paged-KV block allocator: random
+alloc / share (ref_inc) / free / reserve interleavings preserve the pool
+invariants — no double free, no leaked or duplicated blocks, reservation
+ledger bounded by the free list — and full teardown restores a pristine
+pool (everything freed after eviction).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import BlockPool, BlockPoolError
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=80),
+       st.integers(2, 16))
+def test_random_ops_preserve_invariants(ops, num_blocks):
+    pool = BlockPool(num_blocks, block_size=4)
+    live = []                      # one entry per outstanding reference
+    reserved = 0
+    for op in ops:
+        if op == 0 and pool.available_blocks > 0:        # alloc
+            blk = pool.allocate()
+            assert blk not in live           # fresh blocks are unshared
+            live.append(blk)
+        elif op == 1 and live:                           # share a ref
+            blk = live[len(live) // 2]
+            pool.ref_inc(blk)
+            live.append(blk)
+        elif op == 2 and live:                           # drop one ref
+            blk = live.pop()
+            freed = pool.free(blk)
+            assert freed == (blk not in live)
+            if freed:                                    # no double free
+                with pytest.raises(BlockPoolError):
+                    pool.free(blk)
+        elif op == 3 and pool.can_reserve(1):            # reserve
+            pool.reserve(1)
+            reserved += 1
+        elif op == 4 and reserved:                       # draw reservation
+            live.append(pool.allocate(reserved=True))
+            reserved -= 1
+        elif op == 5 and reserved:                       # return it
+            pool.release_reservation(1)
+            reserved -= 1
+        pool.check_invariants()
+        assert pool.reserved_blocks == reserved
+        assert pool.blocks_in_use == len(set(live))
+        for blk in set(live):
+            assert pool.ref_count(blk) == live.count(blk)
+    # eviction: drop every reference — nothing may leak
+    for blk in list(live):
+        live.remove(blk)
+        pool.free(blk)
+        pool.check_invariants()
+    if reserved:
+        pool.release_reservation(reserved)
+    assert pool.blocks_in_use == 0
+    assert pool.reserved_blocks == 0
+    assert pool.free_blocks == num_blocks - 1
+    assert pool.stats["allocated"] == pool.stats["freed"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 32))
+def test_pool_construction_bounds(num_blocks, block_size):
+    pool = BlockPool(num_blocks, block_size)
+    assert pool.free_blocks == num_blocks - 1    # block 0 reserved
+    got = [pool.allocate() for _ in range(num_blocks - 1)]
+    assert sorted(got) == list(range(1, num_blocks))
+    with pytest.raises(BlockPoolError):
+        pool.allocate()

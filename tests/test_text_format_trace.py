@@ -97,6 +97,85 @@ class TestTextFormat:
         Graph(cfg)  # validates (cycle is declared)
 
 
+class TestTracerRing:
+    def test_events_does_not_consume_slot_ids(self):
+        """events() must be a pure read: calling it repeatedly used to
+        claim one ring slot id per call, skewing wraparound accounting."""
+        from repro.core import tracer as trace_mod
+        t = Tracer(capacity=4)
+        for i in range(3):
+            t.record(trace_mod.PACKET_EMIT, node_id=i)
+        for _ in range(10):                       # analysis is idempotent
+            assert [e.node_id for e in t.events()] == [0, 1, 2]
+        for i in range(3, 6):                     # wrap: keep last 4
+            t.record(trace_mod.PACKET_EMIT, node_id=i)
+        assert [e.node_id for e in t.events()] == [2, 3, 4, 5]
+
+
+class TestChromeTrace:
+    def test_export_round_trip(self, tmp_path):
+        """export_chrome_trace emits chrome://tracing JSON whose events
+        correspond 1:1 to the ring buffer's RUN pairs / packet events /
+        gauges (paper §5.2: the visualizer loads pre-recorded traces)."""
+        import json
+        from repro.core import tracer as trace_mod
+        cfg = parse_graph_config(EXAMPLE)
+        g = Graph(cfg)
+        g.start_run()
+        rng = np.random.RandomState(2)
+        for t in range(4):
+            g.add_packet_to_input_stream(
+                "frame", (rng.rand(8, 8) * 255).astype(np.float32), t)
+        g.close_all_input_streams()
+        g.wait_until_done(timeout=30)
+        g.tracer.record(trace_mod.GAUGE, 0, "kvcache.blocks_in_use", 0, 7)
+        path = str(tmp_path / "trace.json")
+        g.tracer.export_chrome_trace(path, g.node_names())
+        with open(path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        raw = g.tracer.events()
+        runs = [e for e in evs if e["ph"] == "X"]
+        ends = [e for e in raw if e.event_type == trace_mod.RUN_END]
+        assert len(runs) == len(ends)
+        assert all(e["dur"] >= 0 for e in runs)
+        counters = [e for e in evs if e["ph"] == "C"]
+        assert counters and counters[-1]["args"]["value"] == 7
+        assert counters[-1]["name"] == "kvcache.blocks_in_use"
+        instants = [e for e in evs if e["ph"] == "i"]
+        n_packet = sum(e.event_type in (trace_mod.PACKET_EMIT,
+                                        trace_mod.PACKET_QUEUED,
+                                        trace_mod.PACKET_DROPPED)
+                       for e in raw)
+        assert len(instants) == n_packet
+        names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+        assert names == set(g.node_names().values())
+
+    def test_paged_server_records_pool_gauges(self):
+        """The serving scheduler's block-pool occupancy lands in the graph
+        tracer so the profiler can plot cache pressure."""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.core import tracer as trace_mod
+        from repro.serving import GraphServer, LLMEngine
+        cfg = dataclasses.replace(get_config("minicpm_2b").reduced(),
+                                  num_layers=1, d_model=64, vocab_size=256)
+        engine = LLMEngine(cfg, max_len=32, seed=0)
+        srv = GraphServer(engine, num_slots=2, max_new_tokens=3,
+                          paged=True, num_blocks=17, block_size=8)
+        try:
+            srv.generate(np.arange(1, 6, dtype=np.int32), timeout=120)
+        finally:
+            tracer = srv.graph.tracer
+            srv.close()
+        gauges = [e for e in tracer.events()
+                  if e.event_type == trace_mod.GAUGE]
+        in_use = [e.packet_data_id for e in gauges
+                  if e.stream_id == "kvcache.blocks_in_use"]
+        assert in_use and max(in_use) >= 1   # pressure rose during decode
+        assert in_use[-1] == 0               # and drained at the end
+
+
 class TestTraceFiles:
     def test_save_load_round_trip(self, tmp_path):
         cfg = parse_graph_config(EXAMPLE)
