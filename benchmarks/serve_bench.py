@@ -1,32 +1,44 @@
 #!/usr/bin/env python
-"""Serving benchmark: continuous batching (slot + paged KV cache) vs the
-sequential one-request-at-a-time baseline, plus the two paged-cache
-acceptance measurements:
+"""Serving benchmark: continuous batching (slot + paged backends behind
+the unified Scheduler) vs the sequential one-request-at-a-time baseline,
+plus the four serving-acceptance measurements:
 
 * **shared-prefix** — requests sharing a long prompt prefix reuse its KV
   blocks (ref-counted prefix sharing), so the prefill tokens actually
   computed drop versus the sharing-disabled run;
 * **capacity** — at a FIXED arena size (same KV bytes), the paged server
   sustains more concurrent requests than the contiguous slot cache,
-  whose capacity is bounded by worst-case (max_len) rows.
+  whose capacity is bounded by worst-case (max_len) rows;
+* **chunked-prefill** — under a mixed long-prompt/decode workload,
+  ingesting long prompts in fixed-token chunks cuts the p50 inter-token
+  latency of already-decoding requests (a long arrival no longer stalls
+  everyone for one monolithic prefill);
+* **admission** — at the same arena size, optimistic/preemptive
+  admission sustains more concurrent requests than PR 3's worst-case
+  reservation admission.
 
 All modes run the SAME engine and greedy decode, so generated tokens are
 bit-identical everywhere; the deltas are pure scheduling and memory
-layout.  Results land in ``BENCH_serve.json`` (``--out``) to seed the
-perf trajectory; ``--smoke`` shrinks everything for the CI smoke job.
+layout.  Results land in ``BENCH_serve.json`` (``--out``) with run
+provenance (git SHA, config, seed) so the cross-PR bench trajectory is
+comparable; ``--smoke`` shrinks everything for the CI smoke job.
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
         --requests 8 --num-slots 4 --max-new-tokens 32
 
 Exits non-zero unless (a) the slot server beats sequential throughput,
-(b) prefix sharing reduces computed prefill tokens, and (c) the paged
-server's concurrency at fixed memory exceeds the contiguous equivalent.
+(b) prefix sharing reduces computed prefill tokens, (c) the paged
+server's concurrency at fixed memory exceeds the contiguous equivalent,
+(d) chunked prefill cuts p50 inter-token latency, and (e) preemptive
+admission beats reservation concurrency.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import platform
+import subprocess
 import sys
 import time
 
@@ -36,12 +48,32 @@ sys.path.insert(0, "src")
 
 import repro.calculators  # noqa: F401,E402
 from repro.configs import get_config  # noqa: E402
-from repro.serving import GraphServer, LLMEngine  # noqa: E402
+from repro.serving import (GraphServer, LLMEngine, PagedBackend,  # noqa: E402
+                           Scheduler, SlotBackend)
 
 
 def percentile(xs, q):
     xs = sorted(xs)
     return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def provenance(args) -> dict:
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    import jax
+    return {
+        "git_sha": sha,
+        "seed": args.seed,
+        "backends": ["slot", "paged"],
+        "argv": sys.argv[1:],
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 
 def run_sequential(engine, prompts, max_new):
@@ -88,8 +120,8 @@ def bench_shared_prefix(engine, args, report):
         for i in range(args.requests)]
     out = {}
     for label, sharing in (("cold", False), ("shared", True)):
-        # warm pass: compiles this variant's prefill / prefill_extend
-        # shapes (one per distinct suffix length) outside the timing
+        # warm pass: compiles this variant's prefill / extend shapes (one
+        # per distinct suffix length) outside the timing
         run_server(engine, prompts, args.max_new_tokens, args.num_slots,
                    paged=True, block_size=args.block_size,
                    prefix_sharing=sharing)
@@ -156,6 +188,116 @@ def bench_capacity(engine, args, report):
     return paged_cc > slot_cc
 
 
+def bench_chunked_prefill(engine, args, report):
+    """Mixed workload on the slot backend: ``num_slots - 1`` requests
+    decode continuously while long prompts arrive one after another.
+    Whole-prompt prefill stalls every decoder for one monolithic prefill;
+    chunked prefill bounds each stall at one chunk.  Measured as the p50
+    / p95 inter-token gap of the decoders during each long prompt's
+    ingestion window (host-driven scheduler: deterministic, no threads)."""
+    rng = np.random.RandomState(args.seed + 3)
+    bs = args.block_size
+    chunk = 2 * bs
+    long_len = engine.max_len - args.max_new_tokens - bs
+    n_long = 3
+    n_short = max(1, args.num_slots - 1)
+    shorts = [rng.randint(0, 512, size=8).astype(np.int32)
+              for _ in range(n_short)]
+    longs = [rng.randint(0, 512, size=long_len).astype(np.int32)
+             for _ in range(n_long)]
+    short_budget = engine.max_len - 8 - 1
+
+    def run(chunk_size):
+        sched = Scheduler(SlotBackend(engine, args.num_slots),
+                          max_new_tokens=2, chunk_size=chunk_size)
+        for i, p in enumerate(shorts):
+            sched.submit({"tokens": p, "id": f"s{i}",
+                          "max_new_tokens": short_budget})
+        sched.admit()
+        gaps = []
+        for j, lp in enumerate(longs):
+            sched.submit({"tokens": lp, "id": f"L{j}",
+                          "max_new_tokens": 2})
+            t_last = time.perf_counter()
+            waiting_first = True
+            while waiting_first:
+                for ev in sched.admit() + sched.step():
+                    if ev.request.id == f"L{j}" and ev.index == 0:
+                        waiting_first = False
+                now = time.perf_counter()
+                gaps.append(now - t_last)   # decoders' inter-token gap
+                t_last = now
+            while any(str(r.id).startswith("L") for r in sched.slots
+                      if r is not None):
+                sched.admit()
+                sched.step()
+        ticks = sched.stats["chunked_prefill_ticks"]
+        return gaps, ticks
+
+    out = {}
+    for label, chunk_size in (("whole", None), ("chunked", chunk)):
+        run(chunk_size)                      # warm: compile all shapes
+        gaps, ticks = run(chunk_size)
+        out[label] = {
+            "p50_intertoken_ms": round(percentile(gaps, 0.50) * 1e3, 2),
+            "p95_intertoken_ms": round(percentile(gaps, 0.95) * 1e3, 2),
+            "max_intertoken_ms": round(max(gaps) * 1e3, 2),
+            "chunked_prefill_ticks": ticks,
+        }
+    report["chunked_prefill"] = {
+        "long_prompt_len": long_len, "chunk_tokens": chunk,
+        "decoders": n_short, **out,
+    }
+    print(f"chunked-prefill ({long_len}-token arrivals, chunk {chunk}): "
+          f"p50 inter-token {out['whole']['p50_intertoken_ms']}ms (whole) "
+          f"-> {out['chunked']['p50_intertoken_ms']}ms (chunked), "
+          f"max {out['whole']['max_intertoken_ms']}ms -> "
+          f"{out['chunked']['max_intertoken_ms']}ms")
+    return out["chunked"]["p50_intertoken_ms"] < \
+        out["whole"]["p50_intertoken_ms"]
+
+
+def bench_admission(engine, args, report):
+    """Same paged arena, same workload: PR 3's worst-case reservation vs
+    optimistic admission + preemption.  Short requests demand 2 pages
+    worst-case but 1 page at admission — reservation strands the
+    difference, preemption lends it out and reclaims under pressure."""
+    rng = np.random.RandomState(args.seed + 4)
+    bs = args.block_size
+    cap_new = min(4, args.max_new_tokens)
+    n = args.requests
+    # 1 page at admission, 2 worst-case; 5 usable blocks
+    prompts = [rng.randint(0, 512, size=bs - 2).astype(np.int32)
+               for _ in range(n)]
+    num_blocks = 6
+    out, results = {}, {}
+    for mode in ("reserve", "preempt"):
+        res, tps, _, wall, stats = run_server(
+            engine, prompts, cap_new, n, paged=True, block_size=bs,
+            num_blocks=num_blocks, admission=mode)
+        sched = stats["scheduler"]
+        out[mode] = {
+            "concurrent": sched["max_active_slots"],
+            "preemptions": sched["preemptions"],
+            "blocks_peak": sched["blocks_peak"],
+            "tok_per_s": round(tps, 1), "wall_s": round(wall, 2),
+        }
+        results[mode] = res
+    exact = all(np.array_equal(a, b) for a, b in
+                zip(results["reserve"], results["preempt"]))
+    report["admission"] = {
+        "arena_blocks": num_blocks - 1, "block_size": bs,
+        "outputs_identical": exact, **out,
+    }
+    print(f"admission at {num_blocks - 1} blocks: reservation holds "
+          f"{out['reserve']['concurrent']} concurrent, preemptive holds "
+          f"{out['preempt']['concurrent']} "
+          f"({out['preempt']['preemptions']} preemptions), "
+          f"outputs identical: {exact}")
+    return exact and out["preempt"]["concurrent"] > \
+        out["reserve"]["concurrent"]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm_2b")
@@ -181,7 +323,8 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch).reduced()
     cfg = dataclasses.replace(cfg, num_layers=args.num_layers,
                               d_model=args.d_model, vocab_size=512)
-    max_len = -(-(args.max_new_tokens + 24) // args.block_size) \
+    # headroom above max_new for the long-prompt (chunked prefill) bench
+    max_len = -(-(args.max_new_tokens + 72) // args.block_size) \
         * args.block_size
     engine = LLMEngine(cfg, max_len=max_len, seed=args.seed)
     # throughput / shared-prefix runs leave num_blocks unset so
@@ -198,25 +341,30 @@ def main(argv=None) -> int:
     widths = [1]
     while widths[-1] < args.num_slots:
         widths.append(widths[-1] * 2)
-    slot_cache = engine.new_slot_cache(args.num_slots)
+    warm_backend = SlotBackend(engine, args.num_slots)
+    Scheduler(warm_backend, max_new_tokens=2)       # builds the cache
     for i, L in enumerate(sorted(set(lengths))):
         p = next(pp for pp in prompts if len(pp) == L)
         engine.generate(p[None], max_new_tokens=2)         # prefill[1]+decode
         for w in widths if i == 0 else widths[1:]:
             _, rows = engine.prefill(np.tile(p[None], (w, 1)))  # prefill[w]
-            engine.insert_slot(slot_cache, rows, 0, 0)          # insert[w]
+            engine.insert(warm_backend, warm_backend.cache, rows, 0, 0)
     run_server(engine, prompts[:args.num_slots], 2, args.num_slots)
     run_server(engine, prompts[:args.num_slots], 2, args.num_slots,
                paged=True, block_size=args.block_size)
 
-    report = {"config": {
-        "arch": cfg.name, "requests": args.requests,
-        "num_slots": args.num_slots, "max_new_tokens": args.max_new_tokens,
-        "max_len": max_len, "block_size": args.block_size,
-        "smoke": args.smoke,
-    }}
+    report = {
+        "provenance": provenance(args),
+        "config": {
+            "arch": cfg.name, "requests": args.requests,
+            "num_slots": args.num_slots,
+            "max_new_tokens": args.max_new_tokens,
+            "max_len": max_len, "block_size": args.block_size,
+            "smoke": args.smoke,
+        },
+    }
 
-    # ---- throughput: sequential vs slot vs paged ----------------------
+    # ---- throughput: sequential vs slot vs paged, one run -------------
     seq_res, seq_tps, seq_lat, seq_wall = run_sequential(
         engine, prompts, args.max_new_tokens)
     srv_res, srv_tps, srv_lat, srv_wall, _ = run_server(
@@ -234,7 +382,7 @@ def main(argv=None) -> int:
     print(f"requests={args.requests} num_slots={args.num_slots} "
           f"max_new_tokens={args.max_new_tokens} arch={cfg.name} (reduced)")
     rows = (("sequential", seq_tps, seq_lat, seq_wall),
-            ("graphserver", srv_tps, srv_lat, srv_wall),
+            ("slot", srv_tps, srv_lat, srv_wall),
             ("paged", pg_tps, pg_lat, pg_wall))
     for name, tps, lat, wall in rows:
         print(f"{name:12s} {tps:8.1f} tok/s  wall={wall:6.2f}s  "
@@ -252,9 +400,11 @@ def main(argv=None) -> int:
     print(f"speedup      {speedup:8.2f}x (slot), "
           f"{pg_tps / seq_tps:.2f}x (paged)")
 
-    # ---- paged acceptance: shared prefix + capacity -------------------
+    # ---- acceptance: prefix / capacity / chunked / admission ----------
     prefix_ok = bench_shared_prefix(engine, args, report)
     capacity_ok = bench_capacity(engine, args, report)
+    chunked_ok = bench_chunked_prefill(engine, args, report)
+    admission_ok = bench_admission(engine, args, report)
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -278,6 +428,18 @@ def main(argv=None) -> int:
     if not capacity_ok:
         print("FAIL: paged concurrency did not exceed contiguous at "
               "fixed memory")
+        ok = False
+    if not chunked_ok:
+        if args.smoke:
+            print("note: smoke shapes are overhead-bound; chunked-prefill "
+                  "latency gate not enforced")
+        else:
+            print("FAIL: chunked prefill did not cut p50 inter-token "
+                  "latency")
+            ok = False
+    if not admission_ok:
+        print("FAIL: preemptive admission did not beat reservation "
+              "concurrency")
         ok = False
     return 0 if ok else 1
 

@@ -5,9 +5,20 @@ running decode batch as slots free up; tokens stream back per step).
 
     PYTHONPATH=src python examples/serve_llm.py
 
-Pass ``--fixed-batch`` to run the original batch-and-drain pipeline
-instead, for comparison, or ``--paged`` to serve over the paged KV
-cache with ref-counted prefix sharing (docs/KV_CACHE.md).
+Useful knobs (all forwarded to repro.launch.serve):
+
+* ``--backend {slot,paged}`` — contiguous slot rows or the paged KV
+  cache with ref-counted prefix sharing (docs/SCHEDULER.md).
+* ``--chunk-size N`` — chunked prefill: long prompts ingest N tokens per
+  scheduler tick, interleaved with everyone else's decode steps.
+* ``--priority N`` — cycle per-request priorities 0..N (higher priority
+  is admitted first and preempted last under block pressure).
+* ``--admission {preempt,reserve}`` — paged admission policy.
+* ``--fixed-batch`` — the original batch-and-drain pipeline, for
+  comparison.
+
+Scheduler stats (preemptions, replayed tokens, chunked-prefill ticks)
+are printed on exit.
 """
 import sys
 

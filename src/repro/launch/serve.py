@@ -34,16 +34,22 @@ def run_continuous(args, cfg, engine) -> int:
     lat = [None] * args.requests
     results = [None] * args.requests
 
+    paged = args.paged or args.backend == "paged"
     with GraphServer(engine, num_slots=args.num_slots,
                      max_in_flight=args.max_in_flight,
                      max_new_tokens=args.max_new_tokens,
-                     paged=args.paged, num_blocks=args.num_blocks,
-                     block_size=args.block_size) as srv:
+                     chunk_size=args.chunk_size or None,
+                     paged=paged, num_blocks=args.num_blocks,
+                     block_size=args.block_size,
+                     admission=args.admission) as srv:
         t0 = time.time()
 
         def client(worker: int) -> None:
             for i in range(worker, args.requests, args.clients):
-                h = srv.submit(prompts[i], request_id=f"req{i}")
+                # cycle per-request priorities 0..--priority (0 = FIFO)
+                prio = i % (args.priority + 1) if args.priority else 0
+                h = srv.submit(prompts[i], request_id=f"req{i}",
+                               priority=prio)
                 results[i] = h.result(timeout=600)
                 lat[i] = time.time() - t0
 
@@ -69,6 +75,10 @@ def run_continuous(args, cfg, engine) -> int:
           f"decode_steps={sched.get('decode_steps')} "
           f"prefill_calls={sched.get('prefill_calls')} "
           f"max_active_slots={sched.get('max_active_slots')}")
+    print(f"scheduler: preemptions={sched.get('preemptions')} "
+          f"replayed_tokens={sched.get('replayed_tokens')} "
+          f"chunked_prefill_ticks={sched.get('chunked_prefill_ticks')} "
+          f"extend_prefills={sched.get('extend_prefills')}")
     if "block_pool" in stats:
         bp = stats["block_pool"]
         print(f"block pool: {bp['num_blocks']}x{bp['block_size']} tokens, "
@@ -131,9 +141,21 @@ def main(argv=None) -> int:
     ap.add_argument("--max-in-flight", type=int, default=0)
     ap.add_argument("--fixed-batch", action="store_true",
                     help="use the original batch-and-drain pipeline")
+    ap.add_argument("--backend", choices=["slot", "paged"], default="slot",
+                    help="KV-cache backend (see docs/SCHEDULER.md)")
     ap.add_argument("--paged", action="store_true",
-                    help="paged KV cache with ref-counted prefix sharing "
-                         "(see docs/KV_CACHE.md)")
+                    help="shorthand for --backend paged (ref-counted "
+                         "prefix sharing; see docs/KV_CACHE.md)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunked prefill: ingest prompts this many "
+                         "tokens per scheduler tick (0 = whole prompt)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="cycle request priorities 0..N (higher admitted "
+                         "first, preempted last); 0 = plain FIFO")
+    ap.add_argument("--admission", choices=["preempt", "reserve"],
+                    default="preempt",
+                    help="paged admission: optimistic + preemption "
+                         "(default) or PR 3's worst-case reservation")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged arena size in blocks (0 = num_slots "
                          "worst-case rows)")

@@ -9,6 +9,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import paging
 from .config import ArchConfig
 from .layers import apply_rope, rms_norm
 from .params import ParamSpec, Template
@@ -218,22 +219,19 @@ def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
     that reads through the block table directly.
     """
     NB, bs, KV, hd = cache["k"].shape
-    B = q.shape[0]
+    P = block_tables.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)          # [B] per-row positions
-    rows = jnp.arange(B)
-    blk = block_tables[rows, pos // bs]              # [B] tail block ids
-    off = pos % bs
-    k_new = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
-    v_new = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+    blk, off = paging.tail_refs(block_tables, pos, bs)
+    k_new = paging.scatter_token(cache["k"], blk, off, k[:, 0])
+    v_new = paging.scatter_token(cache["v"], blk, off, v[:, 0])
     if flags is not None and getattr(flags, "use_paged_kernel", False):
         from ..kernels.ops import paged_attention
         out = paged_attention(q[:, 0], k_new, v_new, block_tables,
                               pos)[:, None]
     else:
-        P = block_tables.shape[1]
-        k_seq = k_new[block_tables].reshape(B, P * bs, KV, hd)
-        v_seq = v_new[block_tables].reshape(B, P * bs, KV, hd)
-        valid = jnp.arange(P * bs)[None, :] <= pos[:, None]
+        k_seq = paging.gather_pages(k_new, block_tables)
+        v_seq = paging.gather_pages(v_new, block_tables)
+        valid = paging.valid_mask(P * bs, pos)
         mask = valid[:, None, None, None, :]         # [B,1,1,1,T]
         out = _grouped_attention(q, k_seq, v_seq, mask)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])

@@ -14,6 +14,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import paging
 from .config import ArchConfig
 from .layers import apply_rope, rms_norm
 from .params import ParamSpec, Template
@@ -171,25 +172,20 @@ def _mla_paged_decode(params, cfg: ArchConfig, x, positions, cache,
     gathered back into position order, so the score/softmax math is
     bit-identical to the contiguous per-row path."""
     NB, bs, R = cache["c_kv"].shape
-    B = x.shape[0]
     P = block_tables.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)
-    rows = jnp.arange(B)
-    blk = block_tables[rows, pos // bs]
-    off = pos % bs
+    blk, off = paging.tail_refs(block_tables, pos, bs)
     q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
     c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
-    c_kv = cache["c_kv"].at[blk, off].set(
-        c_new[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[blk, off].set(
-        kr_new[:, 0].astype(cache["k_rope"].dtype))
-    c_seq = c_kv[block_tables].reshape(B, P * bs, R)
-    kr_seq = k_rope[block_tables].reshape(B, P * bs, -1)
+    c_kv = paging.scatter_token(cache["c_kv"], blk, off, c_new[:, 0])
+    k_rope = paging.scatter_token(cache["k_rope"], blk, off, kr_new[:, 0])
+    c_seq = paging.gather_pages(c_kv, block_tables)
+    kr_seq = paging.gather_pages(k_rope, block_tables)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
     scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_seq) +
               jnp.einsum("bshk,btk->bhst", q_rope, kr_seq))
     scores = scores.astype(jnp.float32) * scale
-    valid = jnp.arange(P * bs)[None, :] <= pos[:, None]
+    valid = paging.valid_mask(P * bs, pos)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out_lat = jnp.einsum("bhst,btr->bshr", probs, c_seq)

@@ -48,13 +48,12 @@ class Model:
         return tf.decode_step(params, self.cfg, tokens, cache, cache_pos,
                               flags, block_tables=block_tables)
 
-    def prefill_extend(self, params, tokens, cache, block_tables,
-                       prefix_len: int, block_size: int,
-                       max_cache_len: int,
+    def prefill_extend(self, params, tokens, cache, prefix_ref,
+                       prefix_len: int, max_cache_len: int,
                        flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
         return tf.prefill_extend(params, self.cfg, tokens, cache,
-                                 block_tables, prefix_len, block_size,
-                                 max_cache_len, flags)
+                                 prefix_ref, prefix_len, max_cache_len,
+                                 flags)
 
     def mtp_logits(self, params, hidden, tokens,
                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):

@@ -1,0 +1,93 @@
+"""The block-table dispatch seam for paged KV caches.
+
+Every place the model layer touches K/V through a block table funnels
+through this module: the tail-block scatter of a decode step, the
+page gather that reconstructs a sequence in position order, and the
+prefix gather used by chunked/prefix-extend prefill.  `attention.py`,
+`mla.py` and `transformer.py` contain no block-table arithmetic of
+their own — they ask this seam for position-ordered K/V and write
+refs, which is what keeps the paged paths bit-identical to the
+contiguous ones (a gather in position order IS the contiguous row).
+
+``PagedPrefix`` / ``SlotPrefix`` name the two cache layouts a
+prefix-extend prefill can read its prefix from: a block-pool arena
+reached through a block table, or a contiguous slot row.  They are
+constructed inside jitted step functions from plain array arguments,
+so they never cross a jit boundary themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedPrefix:
+    """Prefix K/V lives in a paged arena, reached via ``block_tables``
+    ([B, P] int32); ``block_size`` is static."""
+    block_tables: jax.Array
+    block_size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotPrefix:
+    """Prefix K/V lives in contiguous slot rows ``slots`` ([B] int32) of
+    a ``[num_slots, max_len, ...]`` cache."""
+    slots: jax.Array
+
+
+PrefixRef = Union[PagedPrefix, SlotPrefix]
+
+
+def tail_refs(block_tables: jax.Array, pos: jax.Array,
+              block_size: int) -> Tuple[jax.Array, jax.Array]:
+    """(block ids, in-block offsets) of each row's write position.
+
+    Rows whose table entry is the trash block 0 (inactive slots,
+    padding) resolve to block 0 — writes there are harmless and reads
+    from it are always masked."""
+    rows = jnp.arange(pos.shape[0])
+    return block_tables[rows, pos // block_size], pos % block_size
+
+
+def scatter_token(leaf: jax.Array, blk: jax.Array, off: jax.Array,
+                  new: jax.Array) -> jax.Array:
+    """Write one new token's cache entry per row into its tail block."""
+    return leaf.at[blk, off].set(new.astype(leaf.dtype))
+
+
+def gather_pages(leaf: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Reassemble each row's sequence in position order: [B, P*bs, ...].
+
+    This reconstructs exactly the contiguous cache row (pages are
+    gathered in table order and the table is position-ordered), which
+    is the bit-identity argument for paged decode."""
+    B, P = block_tables.shape
+    bs = leaf.shape[1]
+    return leaf[block_tables].reshape((B, P * bs) + leaf.shape[2:])
+
+
+def valid_mask(total_len: int, pos: jax.Array) -> jax.Array:
+    """[B, T] mask of cache positions at or before each row's write
+    position (position ``pos`` itself was just written this step)."""
+    return jnp.arange(total_len)[None, :] <= pos[:, None]
+
+
+def gather_prefix_kv(mixer_cache, ref: PrefixRef, prefix_len: int):
+    """Gather positions ``[0, prefix_len)`` of each row's cached K/V.
+
+    The ONE place prefix-extend prefill dispatches on cache layout:
+    paged gathers ``prefix_len // block_size`` whole pages through the
+    table; slot slices the head of the contiguous row."""
+    if isinstance(ref, SlotPrefix):
+        return jax.tree.map(lambda a: a[ref.slots, :prefix_len],
+                            mixer_cache)
+    n_pages = prefix_len // ref.block_size
+    ptbl = ref.block_tables[:, :n_pages]
+    B = ref.block_tables.shape[0]
+    return jax.tree.map(
+        lambda a: a[ptbl].reshape((B, prefix_len) + a.shape[2:]),
+        mixer_cache)

@@ -17,6 +17,7 @@ from . import attention as attn
 from . import mamba as mam
 from . import mla as mla_mod
 from . import moe as moe_mod
+from . import paging
 from . import xlstm as xl
 from .config import ArchConfig
 from .layers import (embed_apply, embed_template, lm_head_apply,
@@ -44,7 +45,7 @@ class RuntimeFlags:
     # Paged decode: read K/V through block tables with the Pallas
     # paged-attention kernel instead of the pure-JAX page gather.
     # GQA/MHA/MQA only — MLA's latent cache always uses the gather path
-    # (LLMEngine.new_paged_cache rejects the combination).
+    # (LLMEngine.new_cache rejects the combination).
     use_paged_kernel: bool = False
 
 
@@ -538,18 +539,21 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
 
 
 def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
-                   cache, block_tables: jax.Array, prefix_len: int,
-                   block_size: int, max_cache_len: int,
+                   cache, prefix_ref, prefix_len: int,
+                   max_cache_len: int,
                    flags: RuntimeFlags = DEFAULT_FLAGS):
-    """Prefill a prompt *suffix* against shared prefix blocks.
+    """Prefill a prompt *suffix* against already-cached prefix K/V.
 
-    tokens: [B, S'] — the prompt tokens from position ``prefix_len`` on
-    (``prefix_len`` is a static multiple of ``block_size``); ``cache`` is
-    the paged arena and ``block_tables`` [B, P] names the prefix blocks.
-    Returns (last-token logits [B, V], suffix cache rows padded to
-    ``max_cache_len`` — scatter them into the arena with the paged
-    insert).  Suffix activations are bit-identical to a cold prefill of
-    the full prompt (row-independent attention; see
+    tokens: [B, S'] — the prompt tokens from position ``prefix_len`` on.
+    ``prefix_ref`` names where the prefix lives
+    (:class:`~repro.models.paging.PagedPrefix` — block-pool arena through
+    a block table, ``prefix_len`` a static multiple of its block size —
+    or :class:`~repro.models.paging.SlotPrefix` — contiguous slot rows).
+    This one entry point serves both prefix-shared prefill and chunked
+    prefill on either cache layout.  Returns (last-token logits [B, V],
+    suffix cache rows padded to ``max_cache_len`` — write them back with
+    the layout's insert).  Suffix activations are bit-identical to a
+    cold prefill of the full prompt (row-independent attention; see
     ``attn.prefill_extend_into_cache``)."""
     check_paged_support(cfg)
     dt = jnp.dtype(cfg.dtype)
@@ -557,13 +561,9 @@ def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
     x = constrain_batch(x, flags)
     B, S_, _ = x.shape
     positions = jnp.broadcast_to(prefix_len + jnp.arange(S_), (B, S_))
-    n_prefix_pages = prefix_len // block_size
-    ptbl = block_tables[:, :n_prefix_pages]
 
-    def gather_prefix(arena_mixer):
-        return jax.tree.map(
-            lambda a: a[ptbl].reshape((B, prefix_len) + a.shape[2:]),
-            arena_mixer)
+    def gather_prefix(mixer_cache):
+        return paging.gather_prefix_kv(mixer_cache, prefix_ref, prefix_len)
 
     head, pattern, R = group_structure(cfg)
     out_cache: Dict[str, Any] = {}

@@ -14,6 +14,8 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.tree_util import tree_map_with_path
 
 from ..models.model import Model
 from ..models.transformer import DEFAULT_FLAGS, RuntimeFlags
@@ -117,9 +119,9 @@ def make_decode_step(model: Model, flags: RuntimeFlags = DEFAULT_FLAGS):
     return decode_step
 
 
-def make_slot_decode_step(model: Model,
-                          flags: RuntimeFlags = DEFAULT_FLAGS,
-                          pad_id: int = 0):
+def make_serve_decode_step(model: Model,
+                           flags: RuntimeFlags = DEFAULT_FLAGS,
+                           pad_id: int = 0, paged: bool = False):
     """Decode one token for every *slot* of a continuous batch.
 
     Unlike :func:`make_decode_step`, the batch rows are independent
@@ -130,51 +132,159 @@ def make_slot_decode_step(model: Model,
     cannot perturb active rows, and a later insert overwrites the whole
     cache row anyway) but their emitted token is forced to ``pad_id`` so
     the host scheduler can ignore them.
+
+    With ``paged=True`` the cache is a paged block-pool arena and each
+    slot reaches its K/V through a block table ([N, P] int32; inactive
+    rows hold all-zero tables, so their writes land in the trash
+    block 0).  One factory serves both cache layouts — the layout
+    difference is entirely inside the model's block-table seam
+    (:mod:`repro.models.paging`).
     """
-    def slot_decode_step(params, tokens, cache, positions, active):
-        logits, new_cache = model.decode_step(params, tokens, cache,
-                                              positions, flags=flags)
-        next_tok = jnp.where(
+    def mask_tok(logits, active):
+        return jnp.where(
             active[:, None],
             jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None],
             jnp.asarray(pad_id, jnp.int32))
-        return next_tok, new_cache
+
+    if paged:
+        def paged_decode_step(params, tokens, cache, positions, active,
+                              block_tables):
+            logits, new_cache = model.decode_step(
+                params, tokens, cache, positions, flags=flags,
+                block_tables=block_tables)
+            return mask_tok(logits, active), new_cache
+        return paged_decode_step
+
+    def slot_decode_step(params, tokens, cache, positions, active):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              positions, flags=flags)
+        return mask_tok(logits, active), new_cache
 
     return slot_decode_step
 
 
-def make_paged_decode_step(model: Model,
-                           flags: RuntimeFlags = DEFAULT_FLAGS,
-                           pad_id: int = 0):
-    """Like :func:`make_slot_decode_step`, but the cache is a paged
-    block-pool arena and each slot reaches its K/V through a block table
-    ([N, P] int32; inactive rows hold all-zero tables, so their writes
-    land in the trash block 0)."""
-    def paged_decode_step(params, tokens, cache, positions, active,
-                          block_tables):
-        logits, new_cache = model.decode_step(params, tokens, cache,
-                                              positions, flags=flags,
-                                              block_tables=block_tables)
-        next_tok = jnp.where(
-            active[:, None],
-            jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None],
-            jnp.asarray(pad_id, jnp.int32))
-        return next_tok, new_cache
+# ---------------------------------------------------------------------------
+# cache-row insert / extend (continuous batching)
+# ---------------------------------------------------------------------------
 
-    return paged_decode_step
+def slot_batch_axis(path) -> int:
+    """Axis of the slot (batch) dimension in a cache leaf.
+
+    ``prefill`` returns head-layer leaves shaped [B, ...] and scanned-block
+    leaves shaped [R, B, ...] (R = layer-group repeat count), so the batch
+    axis is 1 under the top-level ``"blocks"`` key and 0 everywhere else.
+    """
+    return 1 if (path and getattr(path[0], "key", None) == "blocks") else 0
 
 
-def make_prefill_extend_step(model: Model, prefix_len: int,
-                             block_size: int, max_cache_len: int,
-                             flags: RuntimeFlags = DEFAULT_FLAGS):
-    """Prefix-shared prefill: compute only the prompt suffix against
-    cached prefix blocks.  ``prefix_len`` is static (one compiled step
-    per (prefix pages, suffix length) shape pair)."""
-    def prefill_extend_step(params, tokens, cache, block_tables):
+def make_slot_insert():
+    """Build ``insert(cache, rows, row, slot)``: copy cache row ``row`` of a
+    freshly prefilled batch into slot ``slot`` of the persistent slot cache.
+    ``row``/``slot`` are traced scalars, so one compilation covers every
+    slot index (recompiles only on a new prefill batch width)."""
+
+    def insert(cache, rows, row, slot):
+        def ins(path, big, rs):
+            ax = slot_batch_axis(path)
+            r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
+            return lax.dynamic_update_slice_in_dim(
+                big, r.astype(big.dtype), slot, axis=ax)
+
+        return tree_map_with_path(ins, cache, rows)
+
+    return insert
+
+
+def _paged_scatter_rows(block_size: int, arena, rows, row, page_ids):
+    """Scatter one prefilled cache row (``[B, S_cache, ...]``, ``S_cache``
+    a multiple of ``block_size``) into the paged arena, page by page.
+
+    ``page_ids`` is a fixed-length [P] int32 vector — entry ``j`` is the
+    arena block receiving the row's ``j``-th page, or 0 (the trash block)
+    for pages that must not land anywhere: padding beyond the prompt, and
+    pages whose content is already present as a shared prefix block
+    (shared blocks are immutable — redirecting their writes to the trash
+    block preserves that invariant).  Fixed length means one compilation
+    covers every page count."""
+    def ins(path, big, rs):
+        ax = slot_batch_axis(path)
+        r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
+        r = lax.squeeze(r, (ax,))
+        if ax == 1:                     # scanned blocks: [R, S, ...]
+            R_, S = r.shape[0], r.shape[1]
+            pages = r.reshape((R_, S // block_size, block_size)
+                              + r.shape[2:])
+            return big.at[:, page_ids].set(pages.astype(big.dtype))
+        S = r.shape[0]                   # head layers: [S, ...]
+        pages = r.reshape((S // block_size, block_size) + r.shape[1:])
+        return big.at[page_ids].set(pages.astype(big.dtype))
+
+    return tree_map_with_path(ins, arena, rows)
+
+
+def make_paged_insert(block_size: int):
+    """Build ``insert(arena, rows, row, page_ids)`` — see
+    :func:`_paged_scatter_rows`."""
+    return partial(_paged_scatter_rows, block_size)
+
+
+def _slot_write_rows(cache, rows, slot, offset: int):
+    """Write batch-1 suffix rows (seq length S', unpadded) into slot
+    ``slot`` at sequence offset ``offset`` (static) — the chunked-prefill
+    insert for the contiguous layout."""
+    def ins(path, big, rs):
+        ax = slot_batch_axis(path)
+        r = lax.dynamic_slice_in_dim(rs, 0, 1, axis=ax)   # row 0 of [.,1,.]
+        starts = [jnp.asarray(0, jnp.int32)] * big.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        starts[ax + 1] = jnp.asarray(offset, jnp.int32)
+        return lax.dynamic_update_slice(big, r.astype(big.dtype), starts)
+
+    return tree_map_with_path(ins, cache, rows)
+
+
+def make_extend_step(model: Model, prefix_len: int,
+                     flags: RuntimeFlags = DEFAULT_FLAGS, *,
+                     block_size: int = 0, max_cache_len: int = 0):
+    """Chunked / prefix-shared prefill: compute only a prompt suffix
+    against the request's cached prefix, write the suffix K/V back into
+    its cache, and return the last position's next token (meaningful only
+    when the suffix ends the prompt).  ``prefix_len`` is static — one
+    compiled step per (prefix length, suffix length) shape pair.
+
+    ``block_size == 0`` builds the slot-layout step
+    ``(params, tokens [1,S'], cache, slot) -> (tok [1], cache)`` that
+    reads the prefix from — and writes the suffix into — contiguous slot
+    row ``slot``; otherwise the paged step
+    ``(params, tokens [1,S'], cache, table_row [P], page_ids [P]) ->
+    (tok [1], cache)`` reads prefix pages through ``table_row`` and
+    scatters suffix pages to the ``page_ids`` blocks."""
+    from ..models.paging import PagedPrefix, SlotPrefix
+
+    if block_size:
+        if max_cache_len <= 0:
+            raise ValueError("paged extend step needs max_cache_len "
+                             "(rows must pad to whole pages)")
+        def paged_extend_step(params, tokens, cache, table_row, page_ids):
+            ref = PagedPrefix(table_row[None], block_size)
+            logits, rows = model.prefill_extend(
+                params, tokens, cache, ref, prefix_len,
+                max_cache_len, flags=flags)
+            cache = _paged_scatter_rows(block_size, cache, rows,
+                                        jnp.asarray(0, jnp.int32), page_ids)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache
+        return paged_extend_step
+
+    def slot_extend_step(params, tokens, cache, slot):
+        ref = SlotPrefix(slot[None])
+        # max_cache_len == suffix length: rows come back unpadded, so the
+        # in-place write touches exactly [slot, prefix_len:prefix_len+S')
         logits, rows = model.prefill_extend(
-            params, tokens, cache, block_tables, prefix_len, block_size,
-            max_cache_len, flags=flags)
+            params, tokens, cache, ref, prefix_len,
+            tokens.shape[1], flags=flags)
+        cache = _slot_write_rows(cache, rows, slot, prefix_len)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok, rows
+        return next_tok, cache
 
-    return prefill_extend_step
+    return slot_extend_step

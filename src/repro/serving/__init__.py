@@ -1,15 +1,18 @@
 from .engine import LLMEngine
-from .batching import PagedScheduler, Request, SlotScheduler, TokenEvent
+from .batching import Request, Scheduler, TokenEvent
 from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
                           UnbatchCalculator, LLMPrefillCalculator,
                           LLMDecodeLoopCalculator)
-from .kvcache import BlockPool, BlockPoolError, PrefixIndex
+from .kvcache import (BlockPool, BlockPoolError, CacheBackend,
+                      CachePressure, PagedBackend, PrefixIndex,
+                      SlotBackend, make_backend)
 from .pipeline import build_continuous_serving_graph, build_serving_graph
 from .server import GraphServer, RequestHandle
 
 __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "UnbatchCalculator", "LLMPrefillCalculator",
-           "LLMDecodeLoopCalculator", "Request", "SlotScheduler",
-           "PagedScheduler", "TokenEvent", "BlockPool", "BlockPoolError",
-           "PrefixIndex", "build_serving_graph",
-           "build_continuous_serving_graph", "GraphServer", "RequestHandle"]
+           "LLMDecodeLoopCalculator", "Request", "Scheduler", "TokenEvent",
+           "BlockPool", "BlockPoolError", "CacheBackend", "CachePressure",
+           "PagedBackend", "PrefixIndex", "SlotBackend", "make_backend",
+           "build_serving_graph", "build_continuous_serving_graph",
+           "GraphServer", "RequestHandle"]

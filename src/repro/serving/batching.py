@@ -1,16 +1,26 @@
-"""Continuous batching: slot-based KV-cache management + request scheduler.
+"""Continuous batching: ONE scheduler over the CacheBackend protocol.
 
 This is the core of the GraphServer subsystem (vLLM-style continuous
 batching mapped onto the repo's MediaPipe-like graph runtime).  The decode
 batch is a fixed set of ``num_slots`` *slots*; each slot holds one
-in-flight request's KV/recurrent cache row.  New requests are prefilled
-(grouped by equal prompt length so one jitted prefill serves the group)
-and **inserted** into free slots while other slots keep decoding; finished
-requests are **evicted** so their slot is immediately reusable.  Per-slot
-positions feed the model's vectorised ``cache_pos`` decode path
-(:func:`repro.runtime.steps.make_slot_decode_step`), which keeps batched
-greedy decode bit-identical to one-request-at-a-time decode — every row op
-is row-independent.
+in-flight request's cache row (contiguous) or block table (paged) — the
+layout difference lives entirely behind the request's
+:class:`~repro.serving.kvcache.CacheBackend`.  The scheduler owns policy:
+the priority queue, slot assignment, **chunked prefill** (long prompts
+ingested in fixed-token chunks interleaved with decode ticks, so a long
+arrival no longer stalls every active request's next token) and
+**preemption** (when the paged backend runs out of blocks, the
+least-important request is evicted and recomputed on readmission).
+
+Determinism: greedy decode stays bit-identical to
+``LLMEngine.generate`` one request at a time under every schedule —
+admission order, chunk boundaries and preemptions included.  Prefill
+batches group only equal-length prompts (no padding perturbs positions),
+every decode-batch row op is row-independent, chunked/prefix extension
+reproduces exactly the cold prefill's K/V (see the model-layer
+docstrings), and a preempted request replays ``prompt ++ tokens[:-1]``
+through the same deterministic prefill, re-deriving — and suppressing —
+its already-streamed tokens before continuing.
 
 The scheduler here is host-side and graph-agnostic: the MediaPipe wiring
 (admission through ``FlowLimiterCalculator``, the tick loopback that lets
@@ -19,92 +29,53 @@ the graph scheduler interleave admission with decode steps) lives in
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
-from typing import Any, Deque, Dict, List, Optional
+import itertools
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from jax import lax
-from jax.tree_util import tree_map_with_path
+from .kvcache.backend import CacheBackend, CachePressure
 
 
-def slot_batch_axis(path) -> int:
-    """Axis of the slot (batch) dimension in a cache leaf.
-
-    ``prefill`` returns head-layer leaves shaped [B, ...] and scanned-block
-    leaves shaped [R, B, ...] (R = layer-group repeat count), so the batch
-    axis is 1 under the top-level ``"blocks"`` key and 0 everywhere else.
-    """
-    return 1 if (path and getattr(path[0], "key", None) == "blocks") else 0
-
-
-def make_slot_insert():
-    """Build ``insert(cache, rows, row, slot)``: copy cache row ``row`` of a
-    freshly prefilled batch into slot ``slot`` of the persistent slot cache.
-    ``row``/``slot`` are traced scalars, so one compilation covers every
-    slot index (recompiles only on a new prefill batch width)."""
-
-    def insert(cache, rows, row, slot):
-        def ins(path, big, rs):
-            ax = slot_batch_axis(path)
-            r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
-            return lax.dynamic_update_slice_in_dim(
-                big, r.astype(big.dtype), slot, axis=ax)
-
-        return tree_map_with_path(ins, cache, rows)
-
-    return insert
-
-
-def make_paged_insert(block_size: int):
-    """Build ``insert(arena, rows, row, page_ids)``: scatter one prefilled
-    cache row (shaped ``[B, S_cache, ...]``, ``S_cache`` a multiple of
-    ``block_size``) into the paged arena, page by page.
-
-    ``page_ids`` is a fixed-length [P] int32 vector — entry ``j`` is the
-    arena block receiving the row's ``j``-th page, or 0 (the trash block)
-    for pages that must not land anywhere: padding beyond the prompt, and
-    pages whose content is already present as a shared prefix block
-    (shared blocks are immutable — redirecting their writes to the trash
-    block preserves that invariant).  Fixed length means one compilation
-    covers every page count."""
-
-    def insert(arena, rows, row, page_ids):
-        def ins(path, big, rs):
-            ax = slot_batch_axis(path)
-            r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
-            r = lax.squeeze(r, (ax,))
-            if ax == 1:                     # scanned blocks: [R, S, ...]
-                R_, S = r.shape[0], r.shape[1]
-                pages = r.reshape((R_, S // block_size, block_size)
-                                  + r.shape[2:])
-                return big.at[:, page_ids].set(pages.astype(big.dtype))
-            S = r.shape[0]                   # head layers: [S, ...]
-            pages = r.reshape((S // block_size, block_size) + r.shape[1:])
-            return big.at[page_ids].set(pages.astype(big.dtype))
-
-        return tree_map_with_path(ins, arena, rows)
-
-    return insert
-
-
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One generation request as tracked by the scheduler."""
     id: Any
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    priority: int = 0                  # higher value = more important
+    arrival: int = 0                   # monotone submission order
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    ingested: int = 0                  # tokens of `seq` already in cache
+    preemptions: int = 0
     finished: bool = False
     finish_reason: str = ""            # "eos" | "length"
-    # paged-scheduler state (unused on the slot path)
+    # backend-owned state (paged: block table bookkeeping)
     blocks: List[int] = dataclasses.field(default_factory=list)
     n_pages: int = 0                   # pages present in the block table
+    registered: int = 0                # pages published to the prefix index
     reserved_left: int = 0             # reserved-but-unallocated pages
     prefix_len: int = 0                # tokens reused from shared blocks
+    prefix_key: Any = None             # prefix-index chain key
+
+    @property
+    def seq(self) -> np.ndarray:
+        """The token sequence whose K/V must be in cache before this
+        request can decode: the prompt, plus — after a preemption —
+        every already-emitted token except the last (the last emitted
+        token is re-derived by the replay prefill itself, which is what
+        proves the recomputation bit-identical)."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens[:-1], np.int32)])
+
+    def sort_key(self):
+        return (-self.priority, self.arrival)
 
 
 @dataclasses.dataclass
@@ -116,50 +87,74 @@ class TokenEvent:
     finished: bool
 
 
-class SlotScheduler:
-    """Admission + per-step decode over a fixed-width slot batch.
+class Scheduler:
+    """Admission + chunked prefill + per-step decode over a fixed-width
+    slot batch, parameterized by a :class:`CacheBackend`.
 
     Drive it with::
 
         sched.submit(payload)      # any number of times, any time
-        events = sched.admit()     # prefill waiting requests into free slots
+        events = sched.admit()     # admission + one prefill chunk each
         events += sched.step()     # one decode step across active slots
 
     until :meth:`has_work` is False.  ``admit``/``step`` return
-    :class:`TokenEvent` lists in deterministic (slot) order.
+    :class:`TokenEvent` lists in deterministic order.
+
+    ``chunk_size`` enables chunked prefill: a prompt longer than one
+    chunk is ingested one chunk per ``admit`` tick while other slots keep
+    decoding (the backend aligns the chunk — paged rounds up to a whole
+    number of blocks).  ``None`` ingests whole prompts at admission.
     """
 
-    def __init__(self, engine, num_slots: int = 4, *,
+    def __init__(self, backend: CacheBackend, *,
                  max_new_tokens: int = 16, eos_id: Optional[int] = None,
-                 pad_id: int = 0):
+                 pad_id: int = 0, chunk_size: Optional[int] = None,
+                 trace=None):
+        engine = backend.engine
         if engine.cfg.is_encoder_decoder:
             raise ValueError("continuous batching supports decoder-only "
                              "models (encoder-decoder prefill needs "
                              "enc_embeds plumbing)")
+        self.backend = backend
         self.engine = engine
-        self.num_slots = int(num_slots)
+        self.num_slots = backend.num_slots
         self.default_max_new = int(max_new_tokens)
         self.default_eos = eos_id
         self.pad_id = int(pad_id)
-        self.waiting: Deque[Request] = collections.deque()
+        self.chunk: Optional[int] = None
+        if chunk_size is not None:
+            engine.check_extend_support()
+            self.chunk = backend.align_chunk(chunk_size)
+        self.waiting: List[Request] = []      # sorted by sort_key()
+        self.ingesting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * self.num_slots
         self.free: List[int] = list(range(self.num_slots))  # LIFO reuse
-        self.cache = self._make_cache()
         self.positions = np.zeros(self.num_slots, np.int32)
         self.last_tokens = np.full(self.num_slots, self.pad_id, np.int32)
+        self._arrival = itertools.count()
         self.stats: Dict[str, Any] = {
             "submitted": 0, "completed": 0, "decode_steps": 0,
             "prefill_calls": 0, "prefill_requests": 0,
             "prefill_padded_rows": 0,
+            "prefill_tokens": 0,          # prompt tokens actually computed
+            "extend_prefills": 0, "chunked_prefill_ticks": 0,
+            "preemptions": 0, "replayed_tokens": 0,
             "evictions_eos": 0, "evictions_length": 0,
             "max_active_slots": 0,
             # peak requests inside the subsystem (waiting + active): with a
             # FlowLimiter upstream this must never exceed max_in_flight
             "max_outstanding": 0,
         }
+        backend.bind(self.stats, trace)
 
-    def _make_cache(self):
-        return self.engine.new_slot_cache(self.num_slots)
+    # -- backend conveniences (servers, benchmarks, tests) ---------------
+    @property
+    def pool(self):
+        return getattr(self.backend, "pool", None)
+
+    @property
+    def prefix(self):
+        return getattr(self.backend, "prefix", None)
 
     # -- state predicates -------------------------------------------------
     @property
@@ -171,82 +166,171 @@ class SlotScheduler:
 
     # -- request intake ---------------------------------------------------
     def submit(self, payload: Dict[str, Any]) -> Request:
-        """payload: {'tokens': [S] ints, 'id': any,
-        'max_new_tokens': int?, 'eos_id': int?}"""
+        """payload: {'tokens': [S] ints, 'id': any, 'max_new_tokens': int?,
+        'eos_id': int?, 'priority': int?}.  Validated against the
+        backend's REAL capacity (paged: arena blocks, not just
+        engine.max_len) so an unservable request fails here instead of
+        starving the queue."""
         prompt = np.asarray(payload["tokens"], np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        if prompt.size + payload.get("max_new_tokens",
-                                     self.default_max_new) > \
-                self.engine.max_len:
+        max_new = int(payload.get("max_new_tokens", self.default_max_new))
+        cap = self.backend.max_request_tokens()
+        if prompt.size + max_new > cap:
             raise ValueError(
                 f"request {payload.get('id')!r}: prompt ({prompt.size}) + "
-                f"max_new_tokens exceeds engine max_len "
-                f"({self.engine.max_len})")
+                f"max_new_tokens ({max_new}) exceeds "
+                f"{self.backend.capacity_desc()}")
         req = Request(
             id=payload.get("id"),
             prompt=prompt,
-            max_new_tokens=int(payload.get("max_new_tokens",
-                                           self.default_max_new)),
-            eos_id=payload.get("eos_id", self.default_eos))
-        self.waiting.append(req)
+            max_new_tokens=max_new,
+            eos_id=payload.get("eos_id", self.default_eos),
+            priority=int(payload.get("priority", 0)),
+            arrival=next(self._arrival))
+        bisect.insort(self.waiting, req, key=Request.sort_key)
         self.stats["submitted"] += 1
         self.stats["max_outstanding"] = max(
             self.stats["max_outstanding"],
             self.stats["submitted"] - self.stats["completed"])
         return req
 
-    # -- admission: dynamic prefill batching ------------------------------
+    # -- admission + chunked prefill --------------------------------------
     def admit(self) -> List[TokenEvent]:
-        """Prefill waiting requests into free slots.
+        """Admit waiting requests into free slots and advance prompt
+        ingestion by (at most) one chunk per in-flight request.
 
-        Head-of-line requests with equal prompt length are prefilled as one
-        batch (dynamic prefill batching); admission stays FIFO.  Prefill
-        already yields each request's first generated token.
-
-        The batch is padded to a power-of-two width with duplicates of its
-        first row: group width depends on arrival timing, so without
-        bucketing each new width is a fresh XLA compile at an unpredictable
-        moment.  Padding rows are row-independent (they cannot perturb real
-        rows) and are simply not inserted.
-        """
+        Requests whose whole prompt fits one chunk are prefilled as one
+        batch per equal prompt length when the backend supports it
+        (dynamic prefill batching; padding rows are row-independent).
+        Otherwise each newly-admitted request ingests its first chunk
+        immediately — one at a time, so a request can share prefix
+        blocks registered by the one admitted just before it."""
         events: List[TokenEvent] = []
+        # continue in-flight chunked ingests first (FIFO fairness)
+        for req in list(self.ingesting):
+            events.extend(self._ingest_tick(req))
+        group: List[Request] = []
         while self.waiting and self.free:
-            L = self.waiting[0].prompt.size
-            group: List[Request] = []
-            while (self.waiting and len(group) < len(self.free)
-                   and self.waiting[0].prompt.size == L):
-                group.append(self.waiting.popleft())
-            width = 1
-            while width < len(group):
-                width *= 2
-            prompts = np.stack([r.prompt for r in group]
-                               + [group[0].prompt] * (width - len(group)))
-            first, rows = self.engine.prefill(prompts)
-            self.stats["prefill_calls"] += 1
-            self.stats["prefill_requests"] += len(group)
-            self.stats["prefill_padded_rows"] += width - len(group)
-            for i, req in enumerate(group):
-                slot = self.free.pop()
-                req.slot = slot
-                self.slots[slot] = req
-                self.cache = self.engine.insert_slot(self.cache, rows,
-                                                     i, slot)
-                self.positions[slot] = req.prompt.size
-                events.append(self._record(req, int(first[i])))
+            req = self.waiting[0]
+            if not self.backend.can_admit(req, req.seq, self.chunk):
+                break
+            self.waiting.pop(0)
+            slot = self.free.pop()
+            req.slot = slot
+            self.slots[slot] = req
+            self.backend.acquire(req, req.seq)
+            req.ingested = req.prefix_len
+            self.positions[slot] = req.ingested
+            self.ingesting.append(req)
             self.stats["max_active_slots"] = max(
                 self.stats["max_active_slots"], self.active)
+            if (self.backend.supports_group_prefill and not req.tokens
+                    and req.ingested == 0
+                    and (self.chunk is None
+                         or req.prompt.size <= self.chunk)):
+                group.append(req)
+            else:
+                events.extend(self._ingest_tick(req))
+        if group:
+            events.extend(self._group_prefill(group))
         return events
 
-    # -- one decode step over the slot mask -------------------------------
-    def step(self) -> List[TokenEvent]:
-        if self.active == 0:
+    def _group_prefill(self, reqs: List[Request]) -> List[TokenEvent]:
+        """Whole-prompt batch prefill, one call per distinct length."""
+        events: List[TokenEvent] = []
+        by_len: Dict[int, List[Request]] = {}
+        for r in reqs:
+            by_len.setdefault(int(r.prompt.size), []).append(r)
+        for grp in sorted(by_len.values(), key=lambda g: g[0].arrival):
+            first = self.backend.prefill_group(grp)
+            for i, req in enumerate(grp):
+                self.ingesting.remove(req)
+                req.ingested = req.prompt.size
+                self.positions[req.slot] = req.prompt.size
+                self.stats["prefill_requests"] += 1
+                events.append(self._record(req, int(first[i])))
+        return events
+
+    def _ingest_tick(self, req: Request) -> List[TokenEvent]:
+        """Ingest the next chunk of ``req``'s sequence, preempting under
+        cache pressure.  Emits the first generated token when ingestion
+        completes (suppressed on a post-preemption replay: the re-derived
+        token was already streamed)."""
+        if req not in self.ingesting:      # preempted earlier this round
             return []
+        seq = req.seq
+        start = req.ingested
+        end = len(seq) if self.chunk is None \
+            else min(len(seq), start + self.chunk)
+        while True:
+            try:
+                tok = self.backend.ingest(req, seq, start, end)
+                break
+            except CachePressure:
+                victim = self._pick_victim()
+                self._preempt(victim)
+                if victim is req:
+                    return []
+        if self.chunk is not None and (end < len(seq)
+                                       or start > req.prefix_len):
+            self.stats["chunked_prefill_ticks"] += 1
+        req.ingested = end
+        if end < len(seq):
+            # Mid-ingest slots are outside the decode mask, but a decode
+            # step still WRITES at positions[slot] for every row (row ops
+            # are row-independent, not row-skipping).  Keeping the
+            # position at the ingest frontier makes that stray write
+            # harmless: the slot layout overwrites the frontier with the
+            # next chunk, and the paged layout's frontier page is not in
+            # the block table yet, so the write routes to trash block 0.
+            self.positions[req.slot] = end
+            return []
+        self.ingesting.remove(req)
+        self.positions[req.slot] = len(seq)
+        self.stats["prefill_requests"] += 1
+        if req.tokens:
+            # replay after preemption: `tok` re-derives the request's
+            # last already-emitted token (deterministic greedy decode),
+            # so it is not a new event.  A mismatch means the
+            # determinism contract is broken (a bug, or a backend whose
+            # reduction order varies with batch shape) — continuing
+            # would silently stream tokens inconsistent with what the
+            # client already received, so fail loudly instead (explicit
+            # raise: an assert would vanish under `python -O`).
+            if tok != req.tokens[-1]:
+                raise RuntimeError(
+                    f"request {req.id!r}: replay after preemption "
+                    f"re-derived token {tok} where {req.tokens[-1]} was "
+                    f"already streamed — determinism contract broken")
+            self.last_tokens[req.slot] = req.tokens[-1]
+            self.stats["replayed_tokens"] += len(req.tokens)
+            return []
+        return [self._record(req, int(tok))]
+
+    # -- one decode step over the slot mask -------------------------------
+    def _decoding(self) -> List[Request]:
+        return [r for r in self.slots
+                if r is not None and r not in self.ingesting]
+
+    def step(self) -> List[TokenEvent]:
+        if not self._decoding():
+            return []
+        # back every write position with memory, preempting if needed
+        for req in list(self._decoding()):
+            if req.slot < 0 or self.slots[req.slot] is not req:
+                continue                    # preempted by an earlier grow
+            while (req.slot >= 0 and self.slots[req.slot] is req
+                   and not self.backend.grow(
+                       req, int(self.positions[req.slot]))):
+                self._preempt(self._pick_victim())
         active = np.zeros(self.num_slots, bool)
-        for slot, req in enumerate(self.slots):
-            active[slot] = req is not None
-        next_tok, self.cache = self.engine.decode_slots(
-            self.cache, self.last_tokens, self.positions, active)
+        for req in self._decoding():
+            active[req.slot] = True
+        if not active.any():
+            return []
+        next_tok = self.backend.decode(self.last_tokens, self.positions,
+                                       active)
         self.stats["decode_steps"] += 1
         events = []
         for slot in np.nonzero(active)[0]:
@@ -254,6 +338,40 @@ class SlotScheduler:
             self.positions[slot] += 1
             events.append(self._record(req, int(next_tok[slot])))
         return events
+
+    # -- preemption -------------------------------------------------------
+    def _pick_victim(self) -> Request:
+        """Lowest priority first, youngest arrival as tie-break: the
+        oldest/most-important requests keep their blocks, which
+        guarantees forward progress."""
+        candidates = [r for r in self.slots if r is not None]
+        return min(candidates, key=lambda r: (r.priority, -r.arrival))
+
+    def _preempt(self, victim: Request) -> None:
+        """Evict ``victim`` and requeue it: its blocks are freed, its
+        cache is gone, and readmission recomputes ``victim.seq`` through
+        the normal (chunked) ingest path — deterministic greedy decode
+        makes the recomputation bit-identical, so its output stream just
+        pauses and resumes."""
+        self.preempt(victim)
+
+    def preempt(self, victim: Request) -> None:
+        """Public for tests/tools: force-preempt an in-flight request."""
+        if victim.slot < 0 or self.slots[victim.slot] is not victim:
+            raise ValueError(f"request {victim.id!r} holds no slot")
+        slot = victim.slot
+        self.backend.release(victim)
+        self.slots[slot] = None
+        self.free.append(slot)
+        self.positions[slot] = 0
+        self.last_tokens[slot] = self.pad_id
+        victim.slot = -1
+        victim.ingested = 0
+        victim.preemptions += 1
+        self.stats["preemptions"] += 1
+        if victim in self.ingesting:
+            self.ingesting.remove(victim)
+        bisect.insort(self.waiting, victim, key=Request.sort_key)
 
     # -- bookkeeping ------------------------------------------------------
     def _record(self, req: Request, token: int) -> TokenEvent:
@@ -271,204 +389,15 @@ class SlotScheduler:
         return TokenEvent(req, token, index, req.finished)
 
     def _evict(self, req: Request) -> None:
-        """Free the request's slot.  The cache row is left as-is: a later
-        insert overwrites the whole row, and inactive rows cannot perturb
-        active ones (row-independent decode)."""
+        """Free the request's slot and backend resources.  Slot cache
+        rows are left as-is: a later insert overwrites the whole row, and
+        inactive rows cannot perturb active ones (row-independent
+        decode)."""
         slot = req.slot
+        self.backend.release(req)
         self.slots[slot] = None
         self.positions[slot] = 0
         self.last_tokens[slot] = self.pad_id
         self.free.append(slot)
         req.slot = -1
         self.stats["completed"] += 1
-
-
-class PagedScheduler(SlotScheduler):
-    """Continuous batching over a paged KV cache.
-
-    Instead of one contiguous max-length cache row per slot, K/V live in
-    a block-pool arena (:class:`~repro.serving.kvcache.BlockPool`): each
-    request owns a *block table* of fixed-size token pages, allocated as
-    its sequence grows and freed on eviction, and full prompt blocks are
-    shared across requests by a hash-trie prefix index (ref-counted; a
-    prefix hit skips that prefix's prefill compute entirely via the
-    prefix-extend path).
-
-    Admission is **block-availability-aware**: a request is admitted only
-    once its worst-case page demand ``ceil((S + max_new) / bs)`` (minus
-    shared-prefix hits) can be *reserved*, so decode-time page extension
-    can never fail mid-flight and no preemption path is needed.  Requests
-    beyond block capacity wait, which ultimately surfaces upstream as
-    FlowLimiter back-pressure reflecting real memory.
-
-    Greedy decode stays bit-identical to ``LLMEngine.generate``: pages
-    gather back into position order (decode) and suffix prefill is
-    row-independent (see the model-layer docstrings).
-    """
-
-    def __init__(self, engine, num_slots: int = 4, *,
-                 num_blocks: int, block_size: int = 16,
-                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
-                 pad_id: int = 0, prefix_sharing: bool = True,
-                 trace=None):
-        from .kvcache import BlockPool, PrefixIndex, ROOT
-        self._ROOT = ROOT
-        self.num_blocks = int(num_blocks)
-        self.block_size = int(block_size)
-        super().__init__(engine, num_slots, max_new_tokens=max_new_tokens,
-                         eos_id=eos_id, pad_id=pad_id)
-        self.pool = BlockPool(self.num_blocks, self.block_size)
-        self.prefix: Optional[PrefixIndex] = \
-            PrefixIndex() if prefix_sharing else None
-        self.pages_per_seq = engine.max_len // self.block_size
-        self.tables = np.zeros((self.num_slots, self.pages_per_seq),
-                               np.int32)
-        self._trace = trace or (lambda name, value: None)
-        self.stats.update({
-            "prefill_tokens": 0,          # prompt tokens actually computed
-            "prefill_tokens_saved": 0,    # covered by shared prefix blocks
-            "shared_block_hits": 0, "extend_prefills": 0,
-            "admission_blocked_on_blocks": 0, "blocks_peak": 0,
-        })
-
-    def _make_cache(self):
-        return self.engine.new_paged_cache(self.num_blocks,
-                                           self.block_size)
-
-    def max_request_pages(self) -> int:
-        """Largest worst-case page demand the arena can ever satisfy."""
-        return self.num_blocks - 1          # block 0 is the trash block
-
-    def submit(self, payload) -> Request:
-        req_pages = -(-(np.asarray(payload["tokens"]).size
-                        + payload.get("max_new_tokens",
-                                      self.default_max_new))
-                      // self.block_size)
-        if req_pages > self.max_request_pages():
-            # admission could never reserve this: without the check the
-            # request would sit at the FIFO head forever, starving
-            # everything behind it
-            raise ValueError(
-                f"request {payload.get('id')!r}: needs {req_pages} KV "
-                f"blocks but the arena only has "
-                f"{self.max_request_pages()} usable blocks")
-        return super().submit(payload)
-
-    def _trace_pool(self) -> None:
-        self._trace("kvcache.blocks_in_use", self.pool.blocks_in_use)
-        self._trace("kvcache.blocks_free", self.pool.free_blocks)
-
-    # -- admission --------------------------------------------------------
-    def admit(self) -> List[TokenEvent]:
-        """Admit waiting requests while a slot AND their worst-case block
-        reservation are available.  Requests are processed one at a time
-        so a request can share full prompt blocks registered by the one
-        admitted just before it (cold prefills are batch-1; the win moves
-        from padding-free grouping to not recomputing shared prefixes)."""
-        events: List[TokenEvent] = []
-        bs = self.block_size
-        while self.waiting and self.free:
-            req = self.waiting[0]
-            S = req.prompt.size
-            total_pages = -(-(S + req.max_new_tokens) // bs)
-            if self.prefix is not None:
-                hits, parent = self.prefix.match(req.prompt, bs,
-                                                 max_blocks=(S - 1) // bs)
-            else:
-                hits, parent = [], self._ROOT
-            need = total_pages - len(hits)
-            if not self.pool.can_reserve(need):
-                self.stats["admission_blocked_on_blocks"] += 1
-                break
-            self.waiting.popleft()
-            self.pool.reserve(need)
-            for b in hits:
-                self.pool.ref_inc(b)
-            n_prompt_pages = -(-S // bs)
-            owned = [self.pool.allocate(reserved=True)
-                     for _ in range(n_prompt_pages - len(hits))]
-            slot = self.free.pop()
-            req.slot = slot
-            self.slots[slot] = req
-            req.blocks = hits + owned
-            req.n_pages = n_prompt_pages
-            req.reserved_left = total_pages - n_prompt_pages
-            C = len(hits) * bs
-            req.prefix_len = C
-            self.tables[slot] = 0
-            self.tables[slot, :n_prompt_pages] = req.blocks
-            page_ids = np.zeros(self.pages_per_seq, np.int32)
-            if C:
-                first, rows = self.engine.prefill_extend(
-                    req.prompt[C:], self.cache, self.tables[slot], C)
-                page_ids[:len(owned)] = owned
-                self.stats["extend_prefills"] += 1
-                self.stats["prefill_tokens"] += S - C
-                self.stats["prefill_tokens_saved"] += C
-                self.stats["shared_block_hits"] += len(hits)
-            else:
-                first, rows = self.engine.prefill(req.prompt[None])
-                page_ids[:n_prompt_pages] = owned
-                self.stats["prefill_tokens"] += S
-            self.cache = self.engine.paged_insert(self.cache, rows, 0,
-                                                  page_ids)
-            self.stats["prefill_calls"] += 1
-            self.stats["prefill_requests"] += 1
-            if self.prefix is not None:
-                key = parent
-                for i in range(len(hits), S // bs):
-                    key = self.prefix.register(
-                        key, req.prompt[i * bs:(i + 1) * bs],
-                        req.blocks[i])
-            self.positions[slot] = S
-            events.append(self._record(req, int(first[0])))
-            self.stats["max_active_slots"] = max(
-                self.stats["max_active_slots"], self.active)
-            self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
-        self._trace_pool()
-        return events
-
-    # -- one decode step --------------------------------------------------
-    def step(self) -> List[TokenEvent]:
-        if self.active == 0:
-            return []
-        bs = self.block_size
-        active = np.zeros(self.num_slots, bool)
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            active[slot] = True
-            page = int(self.positions[slot]) // bs
-            if page >= req.n_pages:
-                # the write position crossed into a fresh page: extend the
-                # block table from this request's reservation (guaranteed
-                # to succeed — that is what admission reserved)
-                blk = self.pool.allocate(reserved=True)
-                req.reserved_left -= 1
-                req.blocks.append(blk)
-                self.tables[slot, page] = blk
-                req.n_pages += 1
-        self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
-        next_tok, self.cache = self.engine.decode_paged(
-            self.cache, self.last_tokens, self.positions, active,
-            self.tables)
-        self.stats["decode_steps"] += 1
-        events = []
-        for slot in np.nonzero(active)[0]:
-            req = self.slots[slot]
-            self.positions[slot] += 1
-            events.append(self._record(req, int(next_tok[slot])))
-        self._trace_pool()
-        return events
-
-    # -- eviction ---------------------------------------------------------
-    def _evict(self, req: Request) -> None:
-        slot = req.slot
-        super()._evict(req)
-        self.tables[slot] = 0
-        for b in req.blocks:
-            if self.pool.free(b) and self.prefix is not None:
-                self.prefix.unregister_block(b)
-        req.blocks = []
-        self.pool.release_reservation(req.reserved_left)
-        req.reserved_left = 0

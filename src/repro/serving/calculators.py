@@ -12,11 +12,13 @@ Two engine nodes:
 * ``BatcherCalculator`` + ``LLMPrefillCalculator`` + ``UnbatchCalculator``
   — the original fixed-batch pipeline (a batch must drain before the next
   one starts).
-* ``ContinuousBatchCalculator`` — slot-based continuous batching: requests
-  join a *running* decode batch and stream tokens out per step.  The decode
-  loop is driven by the graph scheduler itself through a tick loopback
-  stream, so admission of new requests naturally interleaves with decode
-  steps and back-pressure/tracing see every step.
+* ``ContinuousBatchCalculator`` — continuous batching over the unified
+  Scheduler/CacheBackend stack (slot rows or paged arena, optional
+  chunked prefill and preemptive admission — docs/SCHEDULER.md):
+  requests join a *running* decode batch and stream tokens out per step.
+  The decode loop is driven by the graph scheduler itself through a tick
+  loopback stream, so admission, chunk ingestion and decode steps
+  naturally interleave and back-pressure/tracing see every step.
 """
 from __future__ import annotations
 
@@ -28,7 +30,8 @@ from ..core.calculator import Calculator, CalculatorContext
 from ..core.contract import AnyType, contract
 from ..core.registry import register_calculator
 from ..core.timestamp import Timestamp
-from .batching import PagedScheduler, SlotScheduler, TokenEvent
+from .batching import Scheduler, TokenEvent
+from .kvcache.backend import make_backend
 
 
 @register_calculator
@@ -120,11 +123,12 @@ LLMDecodeLoopCalculator = LLMPrefillCalculator
 
 @register_calculator
 class ContinuousBatchCalculator(Calculator):
-    """Slot-based continuous-batching engine node.
+    """Continuous-batching engine node over the unified Scheduler.
 
     Inputs:
         REQUEST  — admitted request packets
-                   ({'tokens', 'id', 'max_new_tokens'?, 'eos_id'?})
+                   ({'tokens', 'id', 'max_new_tokens'?, 'eos_id'?,
+                     'priority'?})
         TICK     — self-loopback (back edge): each tick packet drives one
                    admission round + one decode step.  The graph scheduler
                    interleaves REQUEST packets between ticks, which is what
@@ -139,9 +143,12 @@ class ContinuousBatchCalculator(Calculator):
         engine   — an LLMEngine (pin this node to a dedicated executor).
     Options:
         num_slots (default 4), max_new_tokens (default 16), eos_id.
+        chunk_size — chunked prefill: ingest long prompts this many
+        tokens per tick, interleaved with decode steps.
         paged (default False) — use the paged KV cache
-        (:class:`~repro.serving.batching.PagedScheduler`) with
-        num_blocks / block_size / prefix_sharing; block-pool occupancy is
+        (:class:`~repro.serving.kvcache.PagedBackend`) with
+        num_blocks / block_size / prefix_sharing / admission
+        ("preempt" | "reserve") / watermark; block-pool occupancy is
         recorded into the graph tracer as ``kvcache.*`` gauges.
 
     Each output stream carries its own monotonically increasing timestamp
@@ -160,23 +167,23 @@ class ContinuousBatchCalculator(Calculator):
                 .set_input_policy("immediate"))
 
     def open(self, ctx: CalculatorContext) -> None:
-        if ctx.options.get("paged"):
-            self.sched: SlotScheduler = PagedScheduler(
-                ctx.side("engine"),
-                num_slots=int(ctx.options.get("num_slots", 4)),
-                num_blocks=int(ctx.options["num_blocks"]),
-                block_size=int(ctx.options.get("block_size", 16)),
-                max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
-                eos_id=ctx.options.get("eos_id"),
-                prefix_sharing=bool(ctx.options.get("prefix_sharing",
-                                                    True)),
-                trace=ctx.trace_gauge)
-        else:
-            self.sched = SlotScheduler(
-                ctx.side("engine"),
-                num_slots=int(ctx.options.get("num_slots", 4)),
-                max_new_tokens=int(ctx.options.get("max_new_tokens", 16)),
-                eos_id=ctx.options.get("eos_id"))
+        opts = ctx.options
+        backend = make_backend(
+            ctx.side("engine"),
+            paged=bool(opts.get("paged")),
+            num_slots=int(opts.get("num_slots", 4)),
+            num_blocks=int(opts.get("num_blocks", 0)),
+            block_size=int(opts.get("block_size", 16)),
+            prefix_sharing=bool(opts.get("prefix_sharing", True)),
+            admission=opts.get("admission", "preempt"),
+            watermark=int(opts.get("watermark", 0)))
+        chunk = opts.get("chunk_size")
+        self.sched = Scheduler(
+            backend,
+            max_new_tokens=int(opts.get("max_new_tokens", 16)),
+            eos_id=opts.get("eos_id"),
+            chunk_size=int(chunk) if chunk else None,
+            trace=ctx.trace_gauge)
         self._tick_pending = False
         self._ts = {"TOKEN": 0, "RESPONSE": 0, "TICK_OUT": 0}
 

@@ -9,11 +9,13 @@ Two decode modes:
 
 * :meth:`generate` — classic static batch: prefill a [B, S] batch, then
   greedy-decode all rows in lockstep (scalar ``cache_pos``).
-* the slot API (:meth:`new_slot_cache` / :meth:`insert_slot` /
-  :meth:`decode_slots`) — continuous batching: the decode batch is a fixed
-  set of slots, each an independent request at its own position, and
-  requests are inserted/evicted while the batch keeps decoding.  Used by
-  :class:`repro.serving.batching.SlotScheduler` and the GraphServer.
+* the serving API — continuous batching over a
+  :class:`~repro.serving.kvcache.CacheBackend`: one
+  :meth:`new_cache` / :meth:`insert` / :meth:`decode` / :meth:`extend`
+  quartet dispatched on the backend's cache layout (contiguous slot rows
+  or a paged block-pool arena).  Jitted steps are cached per layout, so
+  one engine can serve slot and paged backends at the same time.  Used
+  by :class:`repro.serving.batching.Scheduler` and the GraphServer.
 """
 from __future__ import annotations
 
@@ -27,10 +29,9 @@ from ..models.config import ArchConfig
 from ..models.model import Model
 from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
                                   check_paged_support)
-from ..runtime.steps import (make_decode_step, make_paged_decode_step,
-                             make_prefill_extend_step, make_prefill_step,
-                             make_slot_decode_step)
-from .batching import make_paged_insert, make_slot_insert
+from ..runtime.steps import (make_decode_step, make_extend_step,
+                             make_paged_insert, make_prefill_step,
+                             make_serve_decode_step, make_slot_insert)
 
 
 class LLMEngine:
@@ -47,14 +48,10 @@ class LLMEngine:
         self._prefill = jax.jit(make_prefill_step(self.model, max_len,
                                                   flags))
         self._decode = jax.jit(make_decode_step(self.model, flags))
-        self._slot_decode = jax.jit(make_slot_decode_step(self.model, flags))
-        self._insert = jax.jit(make_slot_insert())
-        # paged-path jits, built lazily on first use (one per block_size /
-        # prefix_len — see the paged API section below)
-        self._paged_decode = None
-        self._paged_insert = None
-        self._paged_block_size = 0
-        self._extend_steps: Dict[int, Any] = {}
+        # serving jits, built lazily per cache layout: key is
+        # (backend.kind, block_size); extend steps add prefix_len
+        self._serve: Dict[Tuple, Dict[str, Any]] = {}
+        self._extend_steps: Dict[Tuple, Any] = {}
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -85,117 +82,127 @@ class LLMEngine:
                              payload.get("max_new_tokens", 16))
 
     # ------------------------------------------------------------------
-    # slot API (continuous batching)
+    # serving API (continuous batching over a CacheBackend)
     # ------------------------------------------------------------------
     def prefill(self, tokens: np.ndarray) -> Tuple[np.ndarray, Dict]:
         """Prefill [B, S] prompts; returns (first tokens [B], cache rows).
-        All rows must share one length — the SlotScheduler groups by length
+        All rows must share one length — the scheduler groups by length
         so padding never perturbs positions (exactness over utilisation)."""
         next_tok, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(tokens, jnp.int32)})
         return np.asarray(next_tok), cache
 
-    def new_slot_cache(self, num_slots: int):
-        """Zeroed decode cache with a batch width of ``num_slots``."""
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype),
-            self.model.abstract_cache(num_slots, self.max_len))
-
-    def insert_slot(self, cache, rows, row: int, slot: int):
-        """Copy prefilled cache row ``row`` of ``rows`` into ``slot``."""
-        return self._insert(cache, rows, jnp.asarray(row, jnp.int32),
-                            jnp.asarray(slot, jnp.int32))
-
-    def decode_slots(self, cache, last_tokens: np.ndarray,
-                     positions: np.ndarray, active: np.ndarray
-                     ) -> Tuple[np.ndarray, Dict]:
-        """One greedy decode step across all slots.
-
-        last_tokens/positions/active: [N] — each slot's most recent token,
-        cache offset, and occupancy.  Returns ([N] next tokens, cache);
-        inactive slots yield the pad token."""
-        next_tok, cache = self._slot_decode(
-            self.params,
-            jnp.asarray(last_tokens, jnp.int32)[:, None],
-            cache,
-            jnp.asarray(positions, jnp.int32),
-            jnp.asarray(active, bool))
-        return np.asarray(next_tok[:, 0]), cache
-
-    # ------------------------------------------------------------------
-    # paged API (block-pool KV cache; see repro.serving.kvcache)
-    # ------------------------------------------------------------------
-    def new_paged_cache(self, num_blocks: int, block_size: int):
-        """Zeroed paged arena of ``num_blocks`` blocks of ``block_size``
-        tokens (block 0 is the trash block).  Also builds the paged
-        decode/insert jits for this ``block_size``."""
+    def _check_paged(self, block_size: int) -> None:
         check_paged_support(self.cfg)
         if self.max_len % block_size != 0:
             raise ValueError(f"engine max_len {self.max_len} must be a "
                              f"multiple of block_size {block_size}")
-        if self.flags.use_flash:
-            raise ValueError("paged serving requires attn_impl "
-                             "'chunked'|'naive' (the prefix-extend "
-                             "prefill has no flash path yet)")
-        if getattr(self.flags, "model_size", 1) > 1:
-            raise ValueError("paged serving is single-host for now "
-                             "(prefix-extend attention is not "
-                             "sequence-parallel)")
         if self.cfg.use_mla and getattr(self.flags, "use_paged_kernel",
                                         False):
             raise ValueError("use_paged_kernel covers GQA/MHA/MQA only; "
                              "MLA paged decode uses the latent-gather "
                              "path (drop the flag)")
-        if self._paged_decode is None or \
-                self._paged_block_size != int(block_size):
-            # jits are cached per block_size (shapes retrace on their own)
-            self._paged_block_size = int(block_size)
-            self._paged_decode = jax.jit(
-                make_paged_decode_step(self.model, self.flags))
-            self._paged_insert = jax.jit(make_paged_insert(block_size))
-            self._extend_steps.clear()
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype),
-            self.model.abstract_paged_cache(num_blocks, block_size))
+        self.check_extend_support()
 
-    def paged_insert(self, cache, rows, row: int, page_ids: np.ndarray):
-        """Scatter prefilled cache row ``row`` of ``rows`` into the arena
-        at ``page_ids`` ([max_len // block_size] int32, 0 = skip page)."""
-        return self._paged_insert(cache, rows, jnp.asarray(row, jnp.int32),
-                                  jnp.asarray(page_ids, jnp.int32))
+    def check_extend_support(self) -> None:
+        """Prefix/chunked-extend prefill works for pure-attention decoder
+        stacks only, and has no flash or sequence-parallel path yet.
+        Paged backends always need it; slot backends only with chunked
+        prefill enabled."""
+        check_paged_support(self.cfg)
+        if self.flags.use_flash:
+            raise ValueError("extend prefill requires attn_impl "
+                             "'chunked'|'naive' (no flash path yet)")
+        if getattr(self.flags, "model_size", 1) > 1:
+            raise ValueError("extend prefill is single-host for now "
+                             "(prefix-extend attention is not "
+                             "sequence-parallel)")
 
-    def decode_paged(self, cache, last_tokens: np.ndarray,
-                     positions: np.ndarray, active: np.ndarray,
-                     block_tables: np.ndarray) -> Tuple[np.ndarray, Dict]:
-        """One greedy decode step across all slots, K/V through block
-        tables ([N, P] int32; inactive rows all-zero)."""
-        next_tok, cache = self._paged_decode(
-            self.params,
-            jnp.asarray(last_tokens, jnp.int32)[:, None],
-            cache,
-            jnp.asarray(positions, jnp.int32),
-            jnp.asarray(active, bool),
-            jnp.asarray(block_tables, jnp.int32))
+    def _serve_steps(self, backend) -> Dict[str, Any]:
+        key = (backend.kind, getattr(backend, "block_size", 0))
+        steps = self._serve.get(key)
+        if steps is None:
+            paged = backend.kind == "paged"
+            steps = {
+                "decode": jax.jit(make_serve_decode_step(
+                    self.model, self.flags, paged=paged)),
+                "insert": jax.jit(make_paged_insert(backend.block_size)
+                                  if paged else make_slot_insert()),
+            }
+            self._serve[key] = steps
+        return steps
+
+    def new_cache(self, backend):
+        """Zeroed decode cache in the backend's layout: ``num_slots``
+        contiguous max_len rows (slot) or a ``num_blocks`` x
+        ``block_size`` block-pool arena with trash block 0 (paged)."""
+        if backend.kind == "paged":
+            self._check_paged(backend.block_size)
+            abstract = self.model.abstract_paged_cache(backend.num_blocks,
+                                                       backend.block_size)
+        else:
+            abstract = self.model.abstract_cache(backend.num_slots,
+                                                 self.max_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            abstract)
+
+    def insert(self, backend, cache, rows, row: int, dst):
+        """Land prefilled cache row ``row`` of ``rows`` in the cache.
+        ``dst`` is the backend's write ref: a slot index (slot layout) or
+        a [max_len // block_size] int32 page-id vector (paged layout,
+        0 = skip page)."""
+        step = self._serve_steps(backend)["insert"]
+        return step(cache, rows, jnp.asarray(row, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+
+    def decode(self, backend, cache, last_tokens: np.ndarray,
+               positions: np.ndarray, active: np.ndarray,
+               block_tables: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, Dict]:
+        """One greedy decode step across all slots.
+
+        last_tokens/positions/active: [N] — each slot's most recent token,
+        cache offset, and occupancy.  Paged backends pass their
+        ``block_tables`` ([N, P] int32; inactive rows all-zero).  Returns
+        ([N] next tokens, cache); inactive slots yield the pad token."""
+        step = self._serve_steps(backend)["decode"]
+        args = (self.params,
+                jnp.asarray(last_tokens, jnp.int32)[:, None],
+                cache,
+                jnp.asarray(positions, jnp.int32),
+                jnp.asarray(active, bool))
+        if backend.kind == "paged":
+            next_tok, cache = step(*args,
+                                   jnp.asarray(block_tables, jnp.int32))
+        else:
+            next_tok, cache = step(*args)
         return np.asarray(next_tok[:, 0]), cache
 
-    def prefill_extend(self, suffix_tokens: np.ndarray,
-                       cache, table_row: np.ndarray,
-                       prefix_len: int) -> Tuple[np.ndarray, Dict]:
-        """Prefill one prompt's suffix against its shared prefix blocks.
-
-        suffix_tokens: [S'] — prompt tokens from ``prefix_len`` on;
-        table_row: [P] int32 block table covering the prefix pages.
-        Returns (first generated token [1], suffix cache rows [1, ...] to
-        :meth:`paged_insert`).  Compiled per (prefix_len, S') shape."""
-        step = self._extend_steps.get(prefix_len)
+    def extend(self, backend, cache, suffix_tokens: np.ndarray,
+               prefix_len: int, ref) -> Tuple[np.ndarray, Dict]:
+        """Chunked/prefix prefill: compute ``suffix_tokens`` (positions
+        ``prefix_len`` on) against the request's cached prefix and write
+        the new K/V back.  ``ref`` is the backend's write ref — a slot
+        index, or a ``(table_row, page_ids)`` pair.  Returns
+        ([1] next token after the suffix, cache).  Compiled per
+        (layout, prefix_len, suffix shape)."""
+        paged = backend.kind == "paged"
+        key = (backend.kind, getattr(backend, "block_size", 0),
+               int(prefix_len))
+        step = self._extend_steps.get(key)
         if step is None:
-            step = jax.jit(make_prefill_extend_step(
-                self.model, prefix_len, self._paged_block_size,
-                self.max_len, self.flags))
-            self._extend_steps[prefix_len] = step
-        next_tok, rows = step(
-            self.params,
-            jnp.asarray(suffix_tokens, jnp.int32)[None],
-            cache,
-            jnp.asarray(table_row, jnp.int32)[None])
-        return np.asarray(next_tok), rows
+            step = jax.jit(make_extend_step(
+                self.model, int(prefix_len), self.flags,
+                block_size=backend.block_size if paged else 0,
+                max_cache_len=self.max_len))
+            self._extend_steps[key] = step
+        suffix = jnp.asarray(suffix_tokens, jnp.int32)[None]
+        if paged:
+            table_row, page_ids = ref
+            next_tok, cache = step(self.params, suffix, cache,
+                                   jnp.asarray(table_row, jnp.int32),
+                                   jnp.asarray(page_ids, jnp.int32))
+        else:
+            next_tok, cache = step(self.params, suffix, cache,
+                                   jnp.asarray(ref, jnp.int32))
+        return np.asarray(next_tok), cache

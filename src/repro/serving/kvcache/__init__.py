@@ -1,8 +1,12 @@
-"""Paged KV-cache subsystem: block-pool allocator over one preallocated
-arena, ref-counted prompt-prefix sharing, and the host bookkeeping behind
-the paged decode path (see docs/KV_CACHE.md)."""
+"""KV-cache subsystem: the CacheBackend protocol (contiguous slot rows
+vs paged block-pool arena behind one interface), the block-pool
+allocator, and ref-counted prompt-prefix sharing (see
+docs/KV_CACHE.md + docs/SCHEDULER.md)."""
 from .allocator import BlockPool, BlockPoolError
+from .backend import (CacheBackend, CachePressure, PagedBackend,
+                      SlotBackend, make_backend, max_request_tokens)
 from .prefix import PrefixIndex, ROOT, chain_key
 
-__all__ = ["BlockPool", "BlockPoolError", "PrefixIndex", "ROOT",
-           "chain_key"]
+__all__ = ["BlockPool", "BlockPoolError", "CacheBackend", "CachePressure",
+           "PagedBackend", "PrefixIndex", "ROOT", "SlotBackend",
+           "chain_key", "make_backend", "max_request_tokens"]

@@ -79,10 +79,13 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
                                    max_new_tokens: int = 16,
                                    eos_id: Optional[int] = None,
                                    enable_tracer: bool = True,
+                                   chunk_size: Optional[int] = None,
                                    paged: bool = False,
                                    num_blocks: int = 0,
                                    block_size: int = 16,
-                                   prefix_sharing: bool = True
+                                   prefix_sharing: bool = True,
+                                   admission: str = "preempt",
+                                   watermark: int = 0
                                    ) -> GraphConfig:
     """Continuous-batching serving graph (the GraphServer topology).
 
@@ -106,11 +109,13 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     b.executor("inference", 1)
 
     engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens,
-                   "eos_id": eos_id}
+                   "eos_id": eos_id, "chunk_size": chunk_size}
     if paged:
         engine_opts.update({"paged": True, "num_blocks": num_blocks,
                             "block_size": block_size,
-                            "prefix_sharing": prefix_sharing})
+                            "prefix_sharing": prefix_sharing,
+                            "admission": admission,
+                            "watermark": watermark})
 
     finished = b.loopback()
     tick = b.loopback()

@@ -33,6 +33,7 @@ import numpy as np
 
 from ..core.graph import Graph, OutputStreamPoller
 from .engine import LLMEngine
+from .kvcache.backend import max_request_tokens
 from .pipeline import build_continuous_serving_graph
 
 
@@ -118,8 +119,10 @@ class GraphServer:
                  max_in_flight: int = 0, queue_size: int = 1024,
                  max_new_tokens: int = 16, eos_id: Optional[int] = None,
                  drop_on_overload: bool = False, enable_tracer: bool = True,
+                 chunk_size: Optional[int] = None,
                  paged: bool = False, num_blocks: int = 0,
-                 block_size: int = 16, prefix_sharing: bool = True):
+                 block_size: int = 16, prefix_sharing: bool = True,
+                 admission: str = "preempt", watermark: int = 0):
         self.engine = engine
         self._default_max_new = max_new_tokens
         self._paged = paged
@@ -131,14 +134,14 @@ class GraphServer:
                 num_blocks = 1 + num_slots * (engine.max_len // block_size)
             if max_in_flight <= 0:
                 # The limiter bounds scheduling burst; REAL memory
-                # admission is the PagedScheduler's block-reservation
-                # check.  A request that cannot reserve its worst-case
-                # pages waits inside the engine subsystem holding its
-                # limiter budget, so sustained block pressure backs up
-                # into the limiter and on to submitters.  The default is
-                # therefore at least as permissive as slot mode, plus
-                # however many worst-case rows the arena actually holds
-                # (a big arena should admit more than 2*num_slots).
+                # admission is the paged backend's block-availability
+                # check.  A request that cannot take its blocks waits
+                # inside the engine subsystem holding its limiter budget,
+                # so sustained block pressure backs up into the limiter
+                # and on to submitters.  The default is therefore at
+                # least as permissive as slot mode, plus however many
+                # worst-case rows the arena actually holds (a big arena
+                # should admit more than 2*num_slots).
                 max_in_flight = max(
                     2 * num_slots,
                     (num_blocks - 1) // (engine.max_len // block_size))
@@ -147,9 +150,10 @@ class GraphServer:
             num_slots=num_slots, max_in_flight=max_in_flight,
             queue_size=queue_size, max_new_tokens=max_new_tokens,
             eos_id=eos_id, drop_on_overload=drop_on_overload,
-            enable_tracer=enable_tracer, paged=paged,
-            num_blocks=num_blocks, block_size=block_size,
-            prefix_sharing=prefix_sharing)
+            enable_tracer=enable_tracer, chunk_size=chunk_size,
+            paged=paged, num_blocks=num_blocks, block_size=block_size,
+            prefix_sharing=prefix_sharing, admission=admission,
+            watermark=watermark)
         self.graph = Graph(cfg, side_packets={"engine": engine})
         self._token_poller = self.graph.add_output_stream_poller("tokens")
         self._handles: Dict[Any, RequestHandle] = {}
@@ -168,31 +172,35 @@ class GraphServer:
 
     # -- client API ----------------------------------------------------
     def submit(self, tokens, max_new_tokens: Optional[int] = None,
-               eos_id: Optional[int] = None,
+               eos_id: Optional[int] = None, priority: int = 0,
                request_id: Any = None) -> RequestHandle:
         """Enqueue one generation request; returns immediately.
 
+        ``priority``: higher values are admitted first and preempted
+        last (paged backend under block pressure).
+
         Invalid requests are rejected here, client-side — an error thrown
-        inside a graph node would terminate the whole run."""
+        inside a graph node would terminate the whole run.  The check
+        mirrors ``Scheduler.submit``: the cap is the backend's REAL
+        capacity (paged: arena blocks, not just engine max_len)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         new = self._default_max_new if max_new_tokens is None \
             else int(max_new_tokens)
         if tokens.size == 0:
             raise ValueError("empty prompt")
-        if tokens.size + new > self.engine.max_len:
+        cap = max_request_tokens(
+            self.engine.max_len,
+            self._num_blocks if self._paged else 0, self._block_size)
+        if tokens.size + new > cap:
+            detail = f"engine max_len ({self.engine.max_len})" \
+                if not self._paged else \
+                (f"backend capacity ({cap} tokens: "
+                 f"{self._num_blocks - 1} usable blocks x "
+                 f"{self._block_size}, engine max_len "
+                 f"{self.engine.max_len})")
             raise ValueError(
-                f"prompt ({tokens.size}) + max_new_tokens ({new}) exceeds "
-                f"engine max_len ({self.engine.max_len})")
-        if self._paged:
-            # mirror PagedScheduler.submit: a request whose worst-case
-            # block demand exceeds the whole arena could never be
-            # admitted — reject it here, client-side (an error inside
-            # the graph node would terminate the run)
-            pages = -(-(tokens.size + new) // self._block_size)
-            if pages > self._num_blocks - 1:
-                raise ValueError(
-                    f"request needs {pages} KV blocks but the arena "
-                    f"only has {self._num_blocks - 1} usable blocks")
+                f"prompt ({tokens.size}) + max_new_tokens ({new}) "
+                f"exceeds {detail}")
         with self._lock:
             if self._closed:
                 raise RuntimeError("server is closed")
@@ -207,6 +215,8 @@ class GraphServer:
                 payload["max_new_tokens"] = int(max_new_tokens)
             if eos_id is not None:
                 payload["eos_id"] = int(eos_id)
+            if priority:
+                payload["priority"] = int(priority)
             # feed the graph under the server lock: stream timestamps must
             # be added in allocation order or a faster thread would trip
             # the monotonicity check.  (The requests edge is unbounded, so

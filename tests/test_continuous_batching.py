@@ -1,10 +1,14 @@
-"""Continuous batching: exactness vs sequential decode, slot insert/evict,
-EOS eviction + slot reuse, admission throttling, and token streaming.
+"""Continuous batching: exactness vs sequential decode, the unified
+Scheduler over both CacheBackends, chunked prefill, priority admission,
+preemption-with-replay, EOS eviction + slot reuse, admission throttling,
+and token streaming.
 
-The load-bearing invariant: greedy decode through the slot-based
-continuous batch is BIT-IDENTICAL to `LLMEngine.generate` one request at a
-time — prefill groups only equal-length prompts (no padding) and every
-decode-batch row op is row-independent.
+The load-bearing invariant: greedy decode through the continuous batch is
+BIT-IDENTICAL to `LLMEngine.generate` one request at a time — under every
+schedule, chunk boundary, and preemption.  Prefill groups only
+equal-length prompts (no padding), every decode-batch row op is
+row-independent, chunk/prefix extension reproduces the cold prefill's
+K/V, and a preempted request deterministically replays its own history.
 """
 import dataclasses
 import threading
@@ -14,7 +18,8 @@ import pytest
 
 import repro.calculators  # noqa: F401
 from repro.configs import get_config
-from repro.serving import GraphServer, LLMEngine, SlotScheduler
+from repro.serving import (GraphServer, LLMEngine, PagedBackend, Scheduler,
+                           SlotBackend)
 
 
 def small_cfg(arch="minicpm_2b"):
@@ -32,29 +37,39 @@ def make_prompts(rng, lengths):
     return [rng.randint(0, 512, size=L).astype(np.int32) for L in lengths]
 
 
-class TestSlotScheduler:
-    """The host-side scheduler, independent of the graph."""
+def make_backend(engine, kind, num_slots, **kw):
+    if kind == "paged":
+        kw.setdefault("num_blocks", 65)
+        kw.setdefault("block_size", 8)
+        return PagedBackend(engine, num_slots, **kw)
+    return SlotBackend(engine, num_slots)
 
-    def test_insert_decode_evict_matches_sequential(self, engine):
+
+def drain(sched, got=None):
+    got = {} if got is None else got
+    while sched.has_work():
+        for ev in sched.admit() + sched.step():
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+    return got
+
+
+class TestScheduler:
+    """The host-side scheduler, independent of the graph — one Scheduler
+    class driven through either CacheBackend."""
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_insert_decode_evict_matches_sequential(self, engine, kind):
         rng = np.random.RandomState(0)
         prompts = make_prompts(rng, [5, 9, 5, 13, 7])
         refs = [engine.generate(p[None], max_new_tokens=6)[0]
                 for p in prompts]
 
-        sched = SlotScheduler(engine, num_slots=3, max_new_tokens=6)
+        sched = Scheduler(make_backend(engine, kind, 3), max_new_tokens=6)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
-        got = {}
-
-        def drain(events):
-            for ev in events:
-                if ev.finished:
-                    got[ev.request.id] = np.asarray(ev.request.tokens,
-                                                    np.int32)
-
-        while sched.has_work():
-            drain(sched.admit())
-            drain(sched.step())
+        got = drain(sched)
         for i, ref in enumerate(refs):
             np.testing.assert_array_equal(got[i], ref)
         # all slots returned to the free list
@@ -64,7 +79,7 @@ class TestSlotScheduler:
 
     def test_equal_length_prompts_prefill_as_one_batch(self, engine):
         rng = np.random.RandomState(1)
-        sched = SlotScheduler(engine, num_slots=4, max_new_tokens=4)
+        sched = Scheduler(SlotBackend(engine, 4), max_new_tokens=4)
         for i, p in enumerate(make_prompts(rng, [6, 6, 6, 6])):
             sched.submit({"tokens": p, "id": i})
         sched.admit()
@@ -78,17 +93,12 @@ class TestSlotScheduler:
         first, late = make_prompts(rng, [8, 10])
         ref_late = engine.generate(late[None], max_new_tokens=5)[0]
 
-        sched = SlotScheduler(engine, num_slots=2, max_new_tokens=5)
+        sched = Scheduler(SlotBackend(engine, 2), max_new_tokens=5)
         sched.submit({"tokens": first, "id": "first"})
         sched.admit()
         sched.step()                       # decode underway
         sched.submit({"tokens": late, "id": "late"})
-        got = {}
-        while sched.has_work():
-            for ev in sched.admit() + sched.step():
-                if ev.finished:
-                    got[ev.request.id] = np.asarray(ev.request.tokens,
-                                                    np.int32)
+        got = drain(sched)
         np.testing.assert_array_equal(got["late"], ref_late)
         # 'late' was admitted while 'first' was mid-flight
         assert sched.stats["max_active_slots"] == 2
@@ -102,8 +112,8 @@ class TestSlotScheduler:
         ref0 = engine.generate(prompts[0][None], max_new_tokens=8)[0]
         eos = int(ref0[1])
 
-        sched = SlotScheduler(engine, num_slots=2, max_new_tokens=8,
-                              eos_id=eos)
+        sched = Scheduler(SlotBackend(engine, 2), max_new_tokens=8,
+                          eos_id=eos)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got, reasons = {}, {}
@@ -122,21 +132,213 @@ class TestSlotScheduler:
         assert sorted(sched.free) == [0, 1]
 
     def test_rejects_oversized_request(self, engine):
-        sched = SlotScheduler(engine, num_slots=1)
-        with pytest.raises(ValueError):
+        sched = Scheduler(SlotBackend(engine, 1))
+        with pytest.raises(ValueError, match="max_len"):
             sched.submit({"tokens": np.zeros(60, np.int32),
                           "id": 0, "max_new_tokens": 16})
 
+    def test_submit_coerces_max_new_tokens(self, engine):
+        """Validation uses the coerced int, not the raw payload value."""
+        sched = Scheduler(SlotBackend(engine, 1))
+        req = sched.submit({"tokens": np.zeros(4, np.int32), "id": 0,
+                            "max_new_tokens": np.int64(3)})
+        assert isinstance(req.max_new_tokens, int)
+        with pytest.raises(ValueError, match="max_len"):
+            sched.submit({"tokens": np.zeros(4, np.int32), "id": 1,
+                          "max_new_tokens": np.float64(61.0)})
 
-@pytest.fixture(scope="module", params=["slot", "paged"])
+    def test_priority_admission_order(self, engine):
+        """Higher-priority requests jump the waiting queue."""
+        rng = np.random.RandomState(9)
+        lo1, lo2, hi = make_prompts(rng, [6, 7, 8])
+        sched = Scheduler(SlotBackend(engine, 1), max_new_tokens=2)
+        sched.submit({"tokens": lo1, "id": "lo1"})
+        sched.submit({"tokens": lo2, "id": "lo2"})
+        sched.submit({"tokens": hi, "id": "hi", "priority": 5})
+        done = []
+        while sched.has_work():
+            for ev in sched.admit() + sched.step():
+                if ev.finished:
+                    done.append(ev.request.id)
+        # hi overtakes both earlier-submitted low-priority requests
+        assert done == ["hi", "lo1", "lo2"]
+
+
+class TestChunkedPrefill:
+    """Long prompts ingested chunk-by-chunk, interleaved with decode."""
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_chunked_matches_whole_prefill(self, engine, kind):
+        rng = np.random.RandomState(10)
+        long_p = rng.randint(0, 512, size=37).astype(np.int32)
+        short_p = rng.randint(0, 512, size=6).astype(np.int32)
+        ref_long = engine.generate(long_p[None], max_new_tokens=5)[0]
+        ref_short = engine.generate(short_p[None], max_new_tokens=5)[0]
+        sched = Scheduler(make_backend(engine, kind, 2), max_new_tokens=5,
+                          chunk_size=8)
+        sched.submit({"tokens": long_p, "id": "long"})
+        sched.submit({"tokens": short_p, "id": "short"})
+        got = drain(sched)
+        np.testing.assert_array_equal(got["long"], ref_long)
+        np.testing.assert_array_equal(got["short"], ref_short)
+        assert sched.stats["chunked_prefill_ticks"] >= 4
+
+    def test_decode_interleaves_with_long_prefill(self, engine):
+        """The point of chunked prefill: while a long prompt ingests, an
+        already-active request still gets decode steps (its tokens arrive
+        DURING the chunk ticks, not after)."""
+        rng = np.random.RandomState(11)
+        short_p, long_p = make_prompts(rng, [6, 40])
+        sched = Scheduler(SlotBackend(engine, 2), max_new_tokens=8,
+                          chunk_size=8)
+        sched.submit({"tokens": short_p, "id": "short"})
+        sched.admit()                       # short is decoding
+        sched.submit({"tokens": long_p, "id": "long"})
+        decoded_during_ingest = 0
+        while any(r.id == "long" for r in sched.ingesting) or \
+                any(r.id == "long" for r in sched.waiting):
+            sched.admit()
+            for ev in sched.step():
+                if ev.request.id == "short":
+                    decoded_during_ingest += 1
+        assert decoded_during_ingest >= 3   # 40 tokens / 8-chunks = 5 ticks
+        drain(sched)
+
+    def test_chunk_aligned_to_block_size(self, engine):
+        be = PagedBackend(engine, 2, num_blocks=65, block_size=8)
+        sched = Scheduler(be, chunk_size=11)
+        assert sched.chunk == 16            # rounded up to whole blocks
+
+
+class TestPreemption:
+    """Preemptive admission: on block exhaustion the least-important
+    request is evicted, its blocks freed, and its cache recomputed on
+    readmission — outputs stay bit-identical."""
+
+    def test_pressure_preempts_and_replays_exactly(self, engine):
+        rng = np.random.RandomState(12)
+        prompts = make_prompts(rng, [6] * 6)
+        refs = [engine.generate(p[None], max_new_tokens=12)[0]
+                for p in prompts]
+        # 8 usable blocks of 4 tokens; each request needs
+        # ceil((6+12)/4) = 5 pages eventually but only 2 at admission:
+        # optimistic admission over-admits, pressure forces preemptions
+        sched = Scheduler(PagedBackend(engine, 6, num_blocks=9,
+                                       block_size=4), max_new_tokens=12)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = {}
+        while sched.has_work():
+            for ev in sched.admit() + sched.step():
+                if ev.finished:
+                    got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                    np.int32)
+            sched.pool.check_invariants()   # after every preemption too
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["preemptions"] > 0
+        assert sched.pool.blocks_in_use == 0
+
+    def test_preemption_prefers_low_priority_then_youngest(self, engine):
+        rng = np.random.RandomState(13)
+        pa, pb, pc = make_prompts(rng, [6, 7, 8])
+        sched = Scheduler(PagedBackend(engine, 3, num_blocks=65,
+                                       block_size=8), max_new_tokens=4)
+        a = sched.submit({"tokens": pa, "id": "a", "priority": 1})
+        b = sched.submit({"tokens": pb, "id": "b"})
+        c = sched.submit({"tokens": pc, "id": "c"})
+        sched.admit()
+        assert sched._pick_victim() is c     # lowest priority, youngest
+        sched.preempt(c)
+        assert sched._pick_victim() is b
+        sched.preempt(b)
+        assert sched._pick_victim() is a
+        drain(sched)
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_forced_preemption_mid_decode(self, engine, kind):
+        """Preempt a request that already streamed tokens: the replay
+        re-derives (and suppresses) them, then continues identically."""
+        rng = np.random.RandomState(14)
+        prompts = make_prompts(rng, [5, 9])
+        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        sched = Scheduler(make_backend(engine, kind, 2), max_new_tokens=6)
+        r0 = sched.submit({"tokens": prompts[0], "id": 0})
+        sched.submit({"tokens": prompts[1], "id": 1})
+        got = {}
+        sched.admit()
+        sched.step()
+        sched.step()                        # r0 has streamed 3 tokens
+        streamed_before = list(r0.tokens)
+        sched.preempt(r0)
+        if kind == "paged":
+            sched.pool.check_invariants()
+        drain(sched, got)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        # replay kept the already-streamed prefix (no duplicate events)
+        np.testing.assert_array_equal(got[0][:len(streamed_before)],
+                                      streamed_before)
+        assert r0.preemptions == 1
+        assert sched.stats["replayed_tokens"] == len(streamed_before)
+
+    def test_random_schedule_sweep_bit_identical(self, engine):
+        """Deterministic randomized sweep over arrivals, priorities,
+        chunk sizes and forced preemptions on both backends (the
+        exhaustive hypothesis version lives in
+        test_scheduler_properties.py, importorskip-guarded)."""
+        rng = np.random.RandomState(15)
+        for trial in range(4):
+            lengths = rng.randint(3, 30, size=rng.randint(3, 7))
+            prompts = make_prompts(rng, lengths)
+            max_new = int(rng.randint(2, 8))
+            refs = [engine.generate(p[None], max_new_tokens=max_new)[0]
+                    for p in prompts]
+            kind = ("slot", "paged")[trial % 2]
+            chunk = (None, 8)[(trial // 2) % 2]
+            be = make_backend(engine, kind, int(rng.randint(2, 4)),
+                              **({"num_blocks": int(rng.randint(12, 30)),
+                                  "block_size": 4}
+                                 if kind == "paged" else {}))
+            sched = Scheduler(be, max_new_tokens=max_new,
+                              chunk_size=chunk)
+            got = {}
+            pending = list(enumerate(prompts))
+            while sched.has_work() or pending:
+                if pending and rng.rand() < 0.6:
+                    i, p = pending.pop(0)
+                    sched.submit({"tokens": p, "id": i,
+                                  "priority": int(rng.randint(0, 3))})
+                for ev in sched.admit() + sched.step():
+                    if ev.finished:
+                        got[ev.request.id] = np.asarray(
+                            ev.request.tokens, np.int32)
+                holders = [r for r in sched.slots if r is not None]
+                if holders and rng.rand() < 0.15:
+                    sched.preempt(holders[rng.randint(len(holders))])
+                if kind == "paged":
+                    sched.pool.check_invariants()
+            for i, ref in enumerate(refs):
+                np.testing.assert_array_equal(got[i], ref)
+            if kind == "paged":
+                assert sched.pool.blocks_in_use == 0
+
+
+@pytest.fixture(scope="module", params=["slot", "paged", "slot-chunked",
+                                        "paged-chunked"])
 def server_factory(request, engine):
-    """Build a GraphServer in either KV-cache mode.  Every TestGraphServer
-    test runs twice; the paged run pins that block-table decode stays
-    bit-identical to the contiguous cache_pos decode across the suite."""
+    """Build a GraphServer in each KV-cache/chunking mode.  Every
+    TestGraphServer test runs four ways; the paged runs pin that
+    block-table decode stays bit-identical to the contiguous cache_pos
+    decode, the chunked runs that chunk boundaries never leak into
+    outputs."""
     def make(**kw):
-        if request.param == "paged":
+        if request.param.startswith("paged"):
             kw.update(paged=True, block_size=8,
                       num_blocks=kw.pop("num_blocks", 65))
+        if request.param.endswith("chunked"):
+            kw.setdefault("chunk_size", 8)
         return GraphServer(engine, **kw)
     return make
 
@@ -144,7 +346,8 @@ def server_factory(request, engine):
 class TestGraphServer:
     """The full graph: FlowLimiter admission -> tick-driven continuous
     decode -> streamed tokens/responses.  Parametrized over the slot
-    (contiguous rows) and paged (block tables) KV caches."""
+    (contiguous rows) and paged (block tables) KV caches, plain and
+    chunked."""
 
     def test_unequal_lengths_match_sequential(self, engine, server_factory):
         rng = np.random.RandomState(4)

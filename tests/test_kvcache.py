@@ -1,8 +1,10 @@
 """Paged KV-cache subsystem: block-pool allocator invariants (property
-tests), prefix-index sharing, and PagedScheduler exactness — paged greedy
-decode and prefix-shared prefill are BIT-IDENTICAL to
+tests), prefix-index sharing, and paged-backend Scheduler exactness —
+paged greedy decode and prefix-shared prefill are BIT-IDENTICAL to
 ``LLMEngine.generate`` one request at a time, while admission is bounded
-by real block availability and no block leaks across evictions.
+by real block availability (worst-case reservation in ``reserve`` mode,
+optimistic + preemption in the default ``preempt`` mode) and no block
+leaks across evictions.
 """
 import dataclasses
 
@@ -11,9 +13,19 @@ import pytest
 
 import repro.calculators  # noqa: F401
 from repro.configs import get_config
-from repro.serving import BlockPool, BlockPoolError, LLMEngine, PrefixIndex
-from repro.serving.batching import PagedScheduler
+from repro.serving import (BlockPool, BlockPoolError, LLMEngine,
+                           PagedBackend, PrefixIndex, Scheduler)
 from repro.serving.kvcache import ROOT
+
+
+def paged_sched(engine, num_slots, *, num_blocks, block_size,
+                max_new_tokens=16, **kw):
+    sched_kw = {k: kw.pop(k) for k in ("chunk_size", "eos_id")
+                if k in kw}
+    return Scheduler(PagedBackend(engine, num_slots,
+                                  num_blocks=num_blocks,
+                                  block_size=block_size, **kw),
+                     max_new_tokens=max_new_tokens, **sched_kw)
 
 
 def small_cfg(arch="minicpm_2b"):
@@ -143,18 +155,18 @@ class TestPrefixIndex:
 
 
 # ---------------------------------------------------------------------------
-# PagedScheduler end-to-end
+# paged-backend Scheduler end-to-end
 # ---------------------------------------------------------------------------
 
-class TestPagedScheduler:
+class TestPagedServing:
     def test_paged_decode_matches_sequential(self, engine):
         rng = np.random.RandomState(0)
         prompts = [rng.randint(0, 512, size=L).astype(np.int32)
                    for L in [5, 9, 5, 13, 7]]
         refs = [engine.generate(p[None], max_new_tokens=6)[0]
                 for p in prompts]
-        sched = PagedScheduler(engine, num_slots=3, num_blocks=24,
-                               block_size=8, max_new_tokens=6)
+        sched = paged_sched(engine, 3, num_blocks=24,
+                            block_size=8, max_new_tokens=6)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got = drain(sched)
@@ -177,8 +189,8 @@ class TestPagedScheduler:
             for k in (3, 5, 7)]
         refs = [engine.generate(p[None], max_new_tokens=5)[0]
                 for p in prompts]
-        sched = PagedScheduler(engine, num_slots=3, num_blocks=32,
-                               block_size=8, max_new_tokens=5)
+        sched = paged_sched(engine, 3, num_blocks=32,
+                            block_size=8, max_new_tokens=5)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got = drain(sched)
@@ -201,9 +213,9 @@ class TestPagedScheduler:
             for k in (3, 5)]
         refs = [engine.generate(p[None], max_new_tokens=4)[0]
                 for p in prompts]
-        sched = PagedScheduler(engine, num_slots=2, num_blocks=32,
-                               block_size=8, max_new_tokens=4,
-                               prefix_sharing=False)
+        sched = paged_sched(engine, 2, num_blocks=32,
+                            block_size=8, max_new_tokens=4,
+                            prefix_sharing=False)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got = drain(sched)
@@ -223,8 +235,9 @@ class TestPagedScheduler:
                 for p in prompts]
         # each request: ceil((9+6)/8) = 2 pages; 5 usable blocks => at
         # most 2 concurrently despite 4 slots
-        sched = PagedScheduler(engine, num_slots=4, num_blocks=6,
-                               block_size=8, max_new_tokens=6)
+        sched = paged_sched(engine, 4, num_blocks=6,
+                            block_size=8, max_new_tokens=6,
+                            admission="reserve")
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got = drain(sched)
@@ -236,14 +249,55 @@ class TestPagedScheduler:
         sched.pool.check_invariants()
         assert sched.pool.blocks_in_use == 0
 
+    def test_preemptive_admission_beats_reservation(self, engine):
+        """Same arena, same workload: optimistic (preemptive) admission
+        sustains more concurrent requests than worst-case reservation —
+        requests whose worst-case demand never materializes at once stop
+        stranding blocks — while outputs stay bit-identical."""
+        rng = np.random.RandomState(4)
+        prompts = [rng.randint(0, 512, size=6).astype(np.int32)
+                   for _ in range(5)]
+        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        peaks = {}
+        for mode in ("reserve", "preempt"):
+            # worst case ceil((6+6)/8) = 2 pages, but only 1 page is
+            # needed at admission; 5 usable blocks
+            sched = paged_sched(engine, 5, num_blocks=6, block_size=8,
+                                max_new_tokens=6, admission=mode)
+            for i, p in enumerate(prompts):
+                sched.submit({"tokens": p, "id": i})
+            got = drain(sched)
+            for i, ref in enumerate(refs):
+                np.testing.assert_array_equal(got[i], ref)
+            sched.pool.check_invariants()
+            assert sched.pool.blocks_in_use == 0
+            peaks[mode] = sched.stats["max_active_slots"]
+        assert peaks["preempt"] > peaks["reserve"]
+
+    def test_watermark_never_starves_near_capacity_request(self, engine):
+        """A request whose demand approaches the whole arena passed
+        submit validation, so it must remain admissible once the pool
+        drains even with a watermark — the watermark damps preemption
+        thrash, it must not cut effective capacity."""
+        rng = np.random.RandomState(6)
+        # 3 usable blocks of 8; prompt 20 + max_new 4 -> exactly 3 pages
+        sched = paged_sched(engine, 2, num_blocks=4, block_size=8,
+                            max_new_tokens=4, watermark=1)
+        big = rng.randint(0, 512, size=20).astype(np.int32)
+        ref = engine.generate(big[None], max_new_tokens=4)[0]
+        sched.submit({"tokens": big, "id": "big"})
+        got = drain(sched)
+        np.testing.assert_array_equal(got["big"], ref)
+
     def test_higher_concurrency_than_slot_rows_at_same_memory(self, engine):
         """The capacity claim: an arena holding N worst-case (max_len)
         rows serves MORE than N concurrent small requests, because paged
         requests only occupy what they use."""
         rng = np.random.RandomState(5)
         # arena = 2 worst-case rows (2 * 64 tokens / 8 = 16 blocks + trash)
-        sched = PagedScheduler(engine, num_slots=8, num_blocks=17,
-                               block_size=8, max_new_tokens=4)
+        sched = paged_sched(engine, 8, num_blocks=17,
+                            block_size=8, max_new_tokens=4)
         prompts = [rng.randint(0, 512, size=6).astype(np.int32)
                    for _ in range(8)]
         refs = [engine.generate(p[None], max_new_tokens=4)[0]
@@ -272,8 +326,8 @@ class TestPagedScheduler:
                                    rng.randint(0, 512, size=4)
                                    .astype(np.int32)])]
         refs = [eng.generate(p[None], max_new_tokens=4)[0] for p in prompts]
-        sched = PagedScheduler(eng, num_slots=3, num_blocks=16,
-                               block_size=4, max_new_tokens=4)
+        sched = paged_sched(eng, 3, num_blocks=16,
+                            block_size=4, max_new_tokens=4)
         for i, p in enumerate(prompts):
             sched.submit({"tokens": p, "id": i})
         got = drain(sched)
@@ -287,8 +341,8 @@ class TestPagedScheduler:
         """A request within max_len whose worst-case page demand exceeds
         the whole arena must be rejected up front — otherwise it would
         sit at the FIFO head forever, starving every request behind it."""
-        sched = PagedScheduler(engine, num_slots=2, num_blocks=4,
-                               block_size=8, max_new_tokens=16)
+        sched = paged_sched(engine, 2, num_blocks=4,
+                            block_size=8, max_new_tokens=16)
         with pytest.raises(ValueError, match="blocks"):
             # 30 + 16 = 46 tokens <= max_len 64, but 6 pages > 3 usable
             sched.submit({"tokens": np.zeros(30, np.int32), "id": 0})
@@ -305,4 +359,4 @@ class TestPagedScheduler:
         cfg = get_config("xlstm_1_3b").reduced()
         eng = LLMEngine(cfg, max_len=32, seed=0)
         with pytest.raises(ValueError, match="recurrent"):
-            PagedScheduler(eng, num_slots=2, num_blocks=8, block_size=4)
+            paged_sched(eng, 2, num_blocks=8, block_size=4)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.kernels.ops import paged_attention
 from repro.kernels.ref import paged_attention_ref
-from repro.serving import LLMEngine
+from repro.serving import LLMEngine, PagedBackend
 
 
 def make_paged_inputs(rng, B, H, KV, hd, NB, bs, P, dtype=np.float32):
@@ -73,13 +73,14 @@ class TestPagedDecodeModel:
         return LLMEngine(cfg, max_len=32, seed=11, flags=flags)
 
     def _paged_generate(self, eng, prompt, n, bs=8):
-        cache = eng.new_paged_cache(num_blocks=12, block_size=bs)
+        backend = PagedBackend(eng, 1, num_blocks=12, block_size=bs)
+        cache = eng.new_cache(backend)
         P = eng.max_len // bs
         n_pages = -(-len(prompt) // bs)
         first, rows = eng.prefill(prompt[None])
         ids = np.zeros(P, np.int32)
         ids[:n_pages] = np.arange(1, n_pages + 1)
-        cache = eng.paged_insert(cache, rows, 0, ids)
+        cache = eng.insert(backend, cache, rows, 0, ids)
         table = np.zeros((1, P), np.int32)
         table[0, :n_pages] = np.arange(1, n_pages + 1)
         nxt_free = n_pages + 1
@@ -91,8 +92,8 @@ class TestPagedDecodeModel:
             if table[0, page] == 0:
                 table[0, page] = nxt_free
                 nxt_free += 1
-            nt, cache = eng.decode_paged(cache, last, pos,
-                                         np.array([True]), table)
+            nt, cache = eng.decode(backend, cache, last, pos,
+                                   np.array([True]), block_tables=table)
             pos += 1
             toks.append(int(nt[0]))
             last = nt
@@ -120,4 +121,5 @@ class TestPagedDecodeModel:
     def test_paged_cache_rejects_bad_shapes(self):
         eng = self._engine()
         with pytest.raises(ValueError, match="multiple"):
-            eng.new_paged_cache(num_blocks=8, block_size=5)   # 32 % 5 != 0
+            # 32 % 5 != 0
+            eng.new_cache(PagedBackend(eng, 1, num_blocks=8, block_size=5))
