@@ -11,14 +11,17 @@ Useful knobs (all forwarded to repro.launch.serve):
   cache with ref-counted prefix sharing (docs/SCHEDULER.md).
 * ``--chunk-size N`` — chunked prefill: long prompts ingest N tokens per
   scheduler tick, interleaved with everyone else's decode steps.
+* ``--speculate K`` — self-speculative decoding: draft up to K tokens
+  per tick by prompt lookup, verify them in one batched pass, emit
+  every accepted token at once (docs/SPECULATIVE.md).
 * ``--priority N`` — cycle per-request priorities 0..N (higher priority
   is admitted first and preempted last under block pressure).
 * ``--admission {preempt,reserve}`` — paged admission policy.
 * ``--fixed-batch`` — the original batch-and-drain pipeline, for
   comparison.
 
-Scheduler stats (preemptions, replayed tokens, chunked-prefill ticks)
-are printed on exit.
+Scheduler stats (preemptions, replayed tokens, chunked-prefill ticks,
+speculative acceptance rate) are printed on exit.
 """
 import sys
 

@@ -39,6 +39,7 @@ def run_continuous(args, cfg, engine) -> int:
                      max_in_flight=args.max_in_flight,
                      max_new_tokens=args.max_new_tokens,
                      chunk_size=args.chunk_size or None,
+                     speculate_k=args.speculate,
                      paged=paged, num_blocks=args.num_blocks,
                      block_size=args.block_size,
                      admission=args.admission) as srv:
@@ -79,6 +80,14 @@ def run_continuous(args, cfg, engine) -> int:
           f"replayed_tokens={sched.get('replayed_tokens')} "
           f"chunked_prefill_ticks={sched.get('chunked_prefill_ticks')} "
           f"extend_prefills={sched.get('extend_prefills')}")
+    if sched.get("spec_steps"):
+        rate = sched["spec_accepted"] / max(1, sched["spec_drafted"])
+        print(f"speculative: spec_steps={sched['spec_steps']} "
+              f"drafted={sched['spec_drafted']} "
+              f"accepted={sched['spec_accepted']} "
+              f"(accept rate {rate:.0%}, "
+              f"{sched['spec_emitted'] / sched['spec_steps']:.2f} "
+              f"tokens/verify-tick)")
     if "block_pool" in stats:
         bp = stats["block_pool"]
         print(f"block pool: {bp['num_blocks']}x{bp['block_size']} tokens, "
@@ -149,6 +158,11 @@ def main(argv=None) -> int:
     ap.add_argument("--chunk-size", type=int, default=0,
                     help="chunked prefill: ingest prompts this many "
                          "tokens per scheduler tick (0 = whole prompt)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="self-speculative decoding: draft up to K "
+                         "tokens per tick by prompt lookup and verify "
+                         "them in one pass (0 = plain greedy; see "
+                         "docs/SPECULATIVE.md)")
     ap.add_argument("--priority", type=int, default=0,
                     help="cycle request priorities 0..N (higher admitted "
                          "first, preempted last); 0 = plain FIFO")

@@ -137,16 +137,38 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
         return y, None
 
     if block_tables is not None:
-        assert x.shape[1] == 1, "paged decode processes one new token"
         return _paged_decode(params, cfg, q, k, v, cache, cache_pos,
                              block_tables, flags)
 
-    # ---- decode: append one token, attend to cache -------------------
+    # ---- decode: append S' token(s), attend to cache ------------------
     B, S, KV, hd = cache["k"].shape
-    assert x.shape[1] == 1, "decode processes one new token"
+    S_q = x.shape[1]
     window = cfg.sliding_window or 0
     cache_pos = jnp.asarray(cache_pos, jnp.int32)
     per_row = cache_pos.ndim == 1
+    if S_q > 1:
+        # Multi-token (speculative verify) decode: scatter all S' new
+        # K/V at positions pos..pos+S'-1 of each row and give query s the
+        # causal mask `idx <= pos + s`.  Row- and query-independence keep
+        # every query's math identical to S' successive one-token decode
+        # steps, which is the speculative bit-identity argument
+        # (docs/SPECULATIVE.md).  Writes beyond a row's accepted prefix
+        # are rolled back by the scheduler (positions rewind; stale
+        # entries stay masked until overwritten by the next window).
+        if window:
+            raise ValueError("multi-token (speculative) decode does not "
+                             "support sliding-window attention")
+        if not per_row:
+            raise ValueError("multi-token decode needs per-row cache_pos")
+        slots = cache_pos[:, None] + jnp.arange(S_q)[None, :]   # [B,S']
+        rows = jnp.arange(B)[:, None]
+        k_new = cache["k"].at[rows, slots].set(k.astype(cache["k"].dtype))
+        v_new = cache["v"].at[rows, slots].set(v.astype(cache["v"].dtype))
+        valid = jnp.arange(S)[None, None, :] <= slots[:, :, None]
+        mask = valid[:, None, None]                       # [B,1,1,S',T]
+        out = _grouped_attention(q, k_new, v_new, mask)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, {"k": k_new, "v": v_new}
     slot = (cache_pos % S) if window else cache_pos
     if per_row:
         rows = jnp.arange(B)
@@ -207,9 +229,9 @@ def prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
 
 def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
                   block_tables, flags):
-    """Single-token decode against a paged arena.
+    """Decode one (or, speculatively, S') token(s) against a paged arena.
 
-    The new token's K/V is scattered into the sequence's current tail
+    Each new token's K/V is scattered into the sequence's current tail
     block (``table[b, pos // bs]`` at offset ``pos % bs``); rows whose
     table entry is the trash block 0 (inactive slots, padding) write
     harmlessly there.  Attention then either gathers pages back into
@@ -220,7 +242,26 @@ def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
     """
     NB, bs, KV, hd = cache["k"].shape
     P = block_tables.shape[1]
+    S_q = q.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)          # [B] per-row positions
+    if S_q > 1:
+        # Multi-token (speculative verify) decode: scatter each of the S'
+        # new tokens into its row's tail block at pos+s; query s is
+        # masked to `idx <= pos + s` over the page-gathered sequence.
+        # Window positions whose page is not in the table resolve to the
+        # trash block 0 — the write is harmless and the positions stay
+        # masked (the scheduler backs every position it will keep).
+        pos_s = pos[:, None] + jnp.arange(S_q)[None, :]         # [B,S']
+        blk, off = paging.tail_refs(block_tables, pos_s, bs)
+        k_new = paging.scatter_token(cache["k"], blk, off, k)
+        v_new = paging.scatter_token(cache["v"], blk, off, v)
+        k_seq = paging.gather_pages(k_new, block_tables)
+        v_seq = paging.gather_pages(v_new, block_tables)
+        valid = jnp.arange(P * bs)[None, None, :] <= pos_s[:, :, None]
+        mask = valid[:, None, None]                       # [B,1,1,S',T]
+        out = _grouped_attention(q, k_seq, v_seq, mask)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, {"k": k_new, "v": v_new}
     blk, off = paging.tail_refs(block_tables, pos, bs)
     k_new = paging.scatter_token(cache["k"], blk, off, k[:, 0])
     v_new = paging.scatter_token(cache["v"], blk, off, v[:, 0])

@@ -131,12 +131,39 @@ def mla_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
 
     # ---- decode with weight absorption --------------------------------
     B, S, R = cache["c_kv"].shape
+    S_q = x.shape[1]
     window = cfg.sliding_window or 0
     cache_pos = jnp.asarray(cache_pos, jnp.int32)
     per_row = cache_pos.ndim == 1    # [B] per-slot positions
     slot = (cache_pos % S) if window else cache_pos
-    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
+    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,S',H,*]
     c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
+    if S_q > 1:
+        # Multi-token (speculative verify) decode — same scatter/mask
+        # generalization as attention.py: all S' latents land at
+        # pos..pos+S'-1 and query s sees `idx <= pos + s`.
+        if window:
+            raise ValueError("multi-token (speculative) decode does not "
+                             "support sliding-window attention")
+        if not per_row:
+            raise ValueError("multi-token decode needs per-row cache_pos")
+        slots = cache_pos[:, None] + jnp.arange(S_q)[None, :]   # [B,S']
+        rows = jnp.arange(B)[:, None]
+        c_kv = cache["c_kv"].at[rows, slots].set(
+            c_new.astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, slots].set(
+            kr_new.astype(cache["k_rope"].dtype))
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv) +
+                  jnp.einsum("bshk,btk->bhst", q_rope, k_rope))
+        scores = scores.astype(jnp.float32) * scale
+        valid = jnp.arange(S)[None, None, :] <= slots[:, :, None]
+        scores = jnp.where(valid[:, None], scores, NEG_INF)  # [B,1,S',T]
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)
+        out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, {"c_kv": c_kv, "k_rope": k_rope}
     if per_row:
         rows = jnp.arange(B)
         c_kv = cache["c_kv"].at[rows, slot].set(
@@ -173,20 +200,31 @@ def _mla_paged_decode(params, cfg: ArchConfig, x, positions, cache,
     bit-identical to the contiguous per-row path."""
     NB, bs, R = cache["c_kv"].shape
     P = block_tables.shape[1]
+    S_q = x.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)
-    blk, off = paging.tail_refs(block_tables, pos, bs)
-    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,1,H,*]
+    q_nope, q_rope = _project_q(params, cfg, x, positions)   # [B,S',H,*]
     c_new, kr_new = _project_kv_latent(params, cfg, x, positions)
-    c_kv = paging.scatter_token(cache["c_kv"], blk, off, c_new[:, 0])
-    k_rope = paging.scatter_token(cache["k_rope"], blk, off, kr_new[:, 0])
+    if S_q > 1:
+        # speculative verify window: see attention._paged_decode
+        pos_s = pos[:, None] + jnp.arange(S_q)[None, :]       # [B,S']
+        blk, off = paging.tail_refs(block_tables, pos_s, bs)
+        c_kv = paging.scatter_token(cache["c_kv"], blk, off, c_new)
+        k_rope = paging.scatter_token(cache["k_rope"], blk, off, kr_new)
+        valid = jnp.arange(P * bs)[None, None, :] <= pos_s[:, :, None]
+        mask = valid[:, None]                             # [B,1,S',T]
+    else:
+        blk, off = paging.tail_refs(block_tables, pos, bs)
+        c_kv = paging.scatter_token(cache["c_kv"], blk, off, c_new[:, 0])
+        k_rope = paging.scatter_token(cache["k_rope"], blk, off,
+                                      kr_new[:, 0])
+        mask = paging.valid_mask(P * bs, pos)[:, None, None, :]
     c_seq = paging.gather_pages(c_kv, block_tables)
     kr_seq = paging.gather_pages(k_rope, block_tables)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["wk_b"])
     scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_seq) +
               jnp.einsum("bshk,btk->bhst", q_rope, kr_seq))
     scores = scores.astype(jnp.float32) * scale
-    valid = paging.valid_mask(P * bs, pos)
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out_lat = jnp.einsum("bhst,btr->bshr", probs, c_seq)
     out = jnp.einsum("bshr,rhk->bshk", out_lat, params["wv_b"])

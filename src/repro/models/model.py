@@ -44,9 +44,10 @@ class Model:
 
     def decode_step(self, params, tokens, cache, cache_pos,
                     flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS,
-                    block_tables=None):
+                    block_tables=None, all_logits: bool = False):
         return tf.decode_step(params, self.cfg, tokens, cache, cache_pos,
-                              flags, block_tables=block_tables)
+                              flags, block_tables=block_tables,
+                              all_logits=all_logits)
 
     def prefill_extend(self, params, tokens, cache, prefix_ref,
                        prefix_len: int, max_cache_len: int,

@@ -44,18 +44,24 @@ PrefixRef = Union[PagedPrefix, SlotPrefix]
 
 def tail_refs(block_tables: jax.Array, pos: jax.Array,
               block_size: int) -> Tuple[jax.Array, jax.Array]:
-    """(block ids, in-block offsets) of each row's write position.
+    """(block ids, in-block offsets) of each row's write position(s).
 
-    Rows whose table entry is the trash block 0 (inactive slots,
-    padding) resolve to block 0 — writes there are harmless and reads
-    from it are always masked."""
+    ``pos`` is [B] (one write per row — plain decode) or [B, S']
+    (speculative verify: S' consecutive write positions per row).  Rows
+    whose table entry is the trash block 0 (inactive slots, padding)
+    resolve to block 0 — writes there are harmless and reads from it are
+    always masked."""
     rows = jnp.arange(pos.shape[0])
+    if pos.ndim == 2:
+        rows = rows[:, None]
     return block_tables[rows, pos // block_size], pos % block_size
 
 
 def scatter_token(leaf: jax.Array, blk: jax.Array, off: jax.Array,
                   new: jax.Array) -> jax.Array:
-    """Write one new token's cache entry per row into its tail block."""
+    """Write new cache entries into their tail blocks.  ``blk``/``off``
+    are [B] with ``new`` [B, ...] (one token per row), or [B, S'] with
+    ``new`` [B, S', ...] (a speculative verify window)."""
     return leaf.at[blk, off].set(new.astype(leaf.dtype))
 
 

@@ -605,12 +605,19 @@ def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
 def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 cache, cache_pos: jax.Array,
                 flags: RuntimeFlags = DEFAULT_FLAGS,
-                block_tables: Optional[jax.Array] = None):
-    """One decode step. tokens: [B, 1]. Returns (logits [B,V], new_cache).
+                block_tables: Optional[jax.Array] = None,
+                all_logits: bool = False):
+    """One decode step. tokens: [B, S'] (S' = 1 for plain decode; S' > 1
+    scores a speculative verify window — the last emitted token plus
+    drafted continuations — in one pass).  Returns (logits, new_cache):
+    logits are [B, V] at the first window position by default, or
+    [B, S', V] at every window position with ``all_logits=True`` (the
+    speculative verification read-out).
 
     ``cache_pos`` is either a scalar (all rows at the same offset — the
     classic static batch) or a [B] vector of per-row offsets (continuous
-    batching: every row is an independent request/slot).
+    batching: every row is an independent request/slot); window token s
+    of row b sits at absolute position ``cache_pos[b] + s``.
 
     ``block_tables`` ([B, P] int32) switches to the paged path: ``cache``
     holds block-pool arenas and each row's K/V is reached through its
@@ -618,10 +625,11 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
     dt = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens, dt)
     x = constrain_batch(x, flags)
-    B = x.shape[0]
+    B, S_q = x.shape[0], x.shape[1]
     cache_pos = jnp.asarray(cache_pos, jnp.int32)
-    positions = cache_pos[:, None] if cache_pos.ndim == 1 \
-        else jnp.broadcast_to(cache_pos, (B, 1))
+    positions = cache_pos[:, None] + jnp.arange(S_q)[None, :] \
+        if cache_pos.ndim == 1 \
+        else jnp.broadcast_to(cache_pos + jnp.arange(S_q), (B, S_q))
     head, pattern, R = group_structure(cfg)
 
     new_cache: Dict[str, Any] = {}
@@ -672,5 +680,5 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
         new_cache["blocks"] = blocks_cache
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
-    logits = _logits(params, cfg, x)[:, 0]
-    return logits, new_cache
+    logits = _logits(params, cfg, x)
+    return (logits if all_logits else logits[:, 0]), new_cache

@@ -163,6 +163,52 @@ def make_serve_decode_step(model: Model,
     return slot_decode_step
 
 
+def make_verify_step(model: Model,
+                     flags: RuntimeFlags = DEFAULT_FLAGS,
+                     pad_id: int = 0, paged: bool = False):
+    """Speculative verification: score a ``[N, 1+k]`` token window per
+    slot — each row's last emitted token followed by ``k`` drafted
+    tokens — in ONE forward pass, and return the greedy argmax at every
+    window position (``[N, 1+k]`` int32; inactive rows forced to
+    ``pad_id``).
+
+    This is :func:`make_serve_decode_step` generalized from one query
+    token to a window: K/V for all ``1+k`` tokens is written at
+    positions ``pos..pos+k`` of each row, and window token ``s`` attends
+    under the causal mask ``idx <= pos + s`` — exactly what ``1+k``
+    successive one-token decode steps would compute, which is why the
+    host can accept the longest drafted prefix matching the argmax chain
+    and stay bit-identical to plain greedy decode
+    (docs/SPECULATIVE.md).  Rejected tail writes are rolled back by the
+    scheduler/backend (``positions`` rewind + paged ``truncate``).
+
+    With ``k = 0`` the window degenerates to the plain serve decode
+    step; the scheduler uses that path directly so non-speculative
+    serving never pays the generalization."""
+    def mask_tok(logits, active):
+        return jnp.where(
+            active[:, None],
+            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+            jnp.asarray(pad_id, jnp.int32))
+
+    if paged:
+        def paged_verify_step(params, tokens, cache, positions, active,
+                              block_tables):
+            logits, new_cache = model.decode_step(
+                params, tokens, cache, positions, flags=flags,
+                block_tables=block_tables, all_logits=True)
+            return mask_tok(logits, active), new_cache
+        return paged_verify_step
+
+    def slot_verify_step(params, tokens, cache, positions, active):
+        logits, new_cache = model.decode_step(params, tokens, cache,
+                                              positions, flags=flags,
+                                              all_logits=True)
+        return mask_tok(logits, active), new_cache
+
+    return slot_verify_step
+
+
 # ---------------------------------------------------------------------------
 # cache-row insert / extend (continuous batching)
 # ---------------------------------------------------------------------------

@@ -1,3 +1,30 @@
+"""LLM serving on the graph runtime — the public serving API.
+
+The stack, bottom-up (``pydoc`` each module for reference docs):
+
+* :class:`LLMEngine` (``engine.py``) — jitted prefill / decode /
+  extend / verify over a model from the zoo, dispatched on a cache
+  backend's layout.
+* :class:`CacheBackend` / :class:`SlotBackend` / :class:`PagedBackend`
+  (``kvcache/``) — the memory layer: contiguous slot rows vs a paged
+  block-pool arena with ref-counted prefix sharing
+  (docs/KV_CACHE.md).
+* :class:`Scheduler` (``batching.py``) — continuous batching policy:
+  priority admission, chunked prefill, preemption, self-speculative
+  decoding (docs/SCHEDULER.md, docs/SPECULATIVE.md).
+* :class:`GraphServer` (``server.py``) — the whole thing wired as a
+  MediaPipe-style graph with flow-limited admission and streamed
+  responses (docs/ARCHITECTURE.md §5).
+
+Quickstart::
+
+    from repro.configs import get_config
+    from repro.serving import GraphServer, LLMEngine
+
+    engine = LLMEngine(get_config("minicpm_2b").reduced(), max_len=128)
+    with GraphServer(engine, num_slots=4, speculate_k=4) as server:
+        tokens = server.submit([1, 2, 3, 4]).result()
+"""
 from .engine import LLMEngine
 from .batching import Request, Scheduler, TokenEvent
 from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
@@ -8,6 +35,7 @@ from .kvcache import (BlockPool, BlockPoolError, CacheBackend,
                       SlotBackend, make_backend)
 from .pipeline import build_continuous_serving_graph, build_serving_graph
 from .server import GraphServer, RequestHandle
+from .speculative import lookup_draft
 
 __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "UnbatchCalculator", "LLMPrefillCalculator",
@@ -15,4 +43,4 @@ __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "BlockPool", "BlockPoolError", "CacheBackend", "CachePressure",
            "PagedBackend", "PrefixIndex", "SlotBackend", "make_backend",
            "build_serving_graph", "build_continuous_serving_graph",
-           "GraphServer", "RequestHandle"]
+           "GraphServer", "RequestHandle", "lookup_draft"]

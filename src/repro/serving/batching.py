@@ -8,13 +8,17 @@ layout difference lives entirely behind the request's
 :class:`~repro.serving.kvcache.CacheBackend`.  The scheduler owns policy:
 the priority queue, slot assignment, **chunked prefill** (long prompts
 ingested in fixed-token chunks interleaved with decode ticks, so a long
-arrival no longer stalls every active request's next token) and
+arrival no longer stalls every active request's next token),
 **preemption** (when the paged backend runs out of blocks, the
-least-important request is evicted and recomputed on readmission).
+least-important request is evicted and recomputed on readmission) and
+**self-speculative decoding** (``speculate_k``: prompt-lookup drafts
+verified in one batched pass, ``accepted + 1`` tokens emitted per tick
+— docs/SPECULATIVE.md).
 
 Determinism: greedy decode stays bit-identical to
 ``LLMEngine.generate`` one request at a time under every schedule —
-admission order, chunk boundaries and preemptions included.  Prefill
+admission order, chunk boundaries, speculative drafts and preemptions
+included.  Prefill
 batches group only equal-length prompts (no padding perturbs positions),
 every decode-batch row op is row-independent, chunked/prefix extension
 reproduces exactly the cold prefill's K/V (see the model-layer
@@ -31,12 +35,16 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import functools
 import itertools
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from .kvcache.backend import CacheBackend, CachePressure
+from .speculative import lookup_draft
+
+_EMPTY_DRAFT = np.zeros(0, np.int32)
 
 
 @dataclasses.dataclass(eq=False)
@@ -48,6 +56,7 @@ class Request:
     eos_id: Optional[int] = None
     priority: int = 0                  # higher value = more important
     arrival: int = 0                   # monotone submission order
+    speculate_k: int = 0               # max drafted tokens per decode tick
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     ingested: int = 0                  # tokens of `seq` already in cache
@@ -104,11 +113,23 @@ class Scheduler:
     chunk is ingested one chunk per ``admit`` tick while other slots keep
     decoding (the backend aligns the chunk — paged rounds up to a whole
     number of blocks).  ``None`` ingests whole prompts at admission.
+
+    ``speculate_k`` enables self-speculative decoding (the default for
+    requests that don't override it): each decode tick drafts up to
+    ``k`` continuation tokens by prompt lookup
+    (:func:`repro.serving.speculative.lookup_draft`, n-gram size
+    ``spec_ngram``), verifies the whole window in one batched forward
+    pass, and emits ``accepted + 1`` tokens — bit-identical to plain
+    greedy decode under every acceptance pattern (docs/SPECULATIVE.md).
+    ``draft_fn(context, k)`` swaps in a custom drafting policy.
     """
 
     def __init__(self, backend: CacheBackend, *,
                  max_new_tokens: int = 16, eos_id: Optional[int] = None,
                  pad_id: int = 0, chunk_size: Optional[int] = None,
+                 speculate_k: int = 0, spec_ngram: int = 3,
+                 draft_fn: Optional[Callable[[np.ndarray, int],
+                                             np.ndarray]] = None,
                  trace=None):
         engine = backend.engine
         if engine.cfg.is_encoder_decoder:
@@ -125,6 +146,12 @@ class Scheduler:
         if chunk_size is not None:
             engine.check_extend_support()
             self.chunk = backend.align_chunk(chunk_size)
+        self.default_spec_k = int(speculate_k)
+        self.draft_fn = draft_fn if draft_fn is not None else \
+            functools.partial(lookup_draft, max_ngram=int(spec_ngram))
+        self._spec_checked = False
+        if self.default_spec_k > 0:
+            self._check_spec()
         self.waiting: List[Request] = []      # sorted by sort_key()
         self.ingesting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * self.num_slots
@@ -140,12 +167,24 @@ class Scheduler:
             "extend_prefills": 0, "chunked_prefill_ticks": 0,
             "preemptions": 0, "replayed_tokens": 0,
             "evictions_eos": 0, "evictions_length": 0,
+            # speculative decoding: verify ticks, drafted/accepted draft
+            # tokens, and tokens emitted on verify ticks (accepted + 1
+            # bonus each) — acceptance rate = spec_accepted/spec_drafted
+            "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0,
+            "spec_emitted": 0,
             "max_active_slots": 0,
             # peak requests inside the subsystem (waiting + active): with a
             # FlowLimiter upstream this must never exceed max_in_flight
             "max_outstanding": 0,
         }
+        self._trace = trace if trace is not None else \
+            (lambda name, value: None)
         backend.bind(self.stats, trace)
+
+    def _check_spec(self) -> None:
+        if not self._spec_checked:
+            self.engine.check_spec_support()
+            self._spec_checked = True
 
     # -- backend conveniences (servers, benchmarks, tests) ---------------
     @property
@@ -167,10 +206,10 @@ class Scheduler:
     # -- request intake ---------------------------------------------------
     def submit(self, payload: Dict[str, Any]) -> Request:
         """payload: {'tokens': [S] ints, 'id': any, 'max_new_tokens': int?,
-        'eos_id': int?, 'priority': int?}.  Validated against the
-        backend's REAL capacity (paged: arena blocks, not just
-        engine.max_len) so an unservable request fails here instead of
-        starving the queue."""
+        'eos_id': int?, 'priority': int?, 'speculate_k': int?}.
+        Validated against the backend's REAL capacity (paged: arena
+        blocks, not just engine.max_len) so an unservable request fails
+        here instead of starving the queue."""
         prompt = np.asarray(payload["tokens"], np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -181,12 +220,19 @@ class Scheduler:
                 f"request {payload.get('id')!r}: prompt ({prompt.size}) + "
                 f"max_new_tokens ({max_new}) exceeds "
                 f"{self.backend.capacity_desc()}")
+        spec_k = int(payload.get("speculate_k", self.default_spec_k))
+        if spec_k < 0:
+            raise ValueError(f"request {payload.get('id')!r}: "
+                             f"speculate_k must be >= 0, got {spec_k}")
+        if spec_k > 0:
+            self._check_spec()
         req = Request(
             id=payload.get("id"),
             prompt=prompt,
             max_new_tokens=max_new,
             eos_id=payload.get("eos_id", self.default_eos),
             priority=int(payload.get("priority", 0)),
+            speculate_k=spec_k,
             arrival=next(self._arrival))
         bisect.insort(self.waiting, req, key=Request.sort_key)
         self.stats["submitted"] += 1
@@ -316,19 +362,29 @@ class Scheduler:
     def step(self) -> List[TokenEvent]:
         if not self._decoding():
             return []
-        # back every write position with memory, preempting if needed
+        drafts = self._make_drafts()
+        # back every write position with memory, preempting if needed;
+        # a speculating row backs its whole kept window [pos, pos+|draft|]
+        # (the +1 bonus token is emitted but not written this tick)
         for req in list(self._decoding()):
             if req.slot < 0 or self.slots[req.slot] is not req:
                 continue                    # preempted by an earlier grow
-            while (req.slot >= 0 and self.slots[req.slot] is req
-                   and not self.backend.grow(
-                       req, int(self.positions[req.slot]))):
-                self._preempt(self._pick_victim())
+            lo = int(self.positions[req.slot])
+            for p in range(lo, lo + drafts.get(req, _EMPTY_DRAFT).size + 1):
+                while (req.slot >= 0 and self.slots[req.slot] is req
+                       and not self.backend.grow(req, p)):
+                    self._preempt(self._pick_victim())
+                if req.slot < 0 or self.slots[req.slot] is not req:
+                    break
         active = np.zeros(self.num_slots, bool)
         for req in self._decoding():
             active[req.slot] = True
         if not active.any():
             return []
+        drafts = {r: d for r, d in drafts.items()
+                  if r.slot >= 0 and self.slots[r.slot] is r}
+        if drafts:
+            return self._verify_tick(drafts, active)
         next_tok = self.backend.decode(self.last_tokens, self.positions,
                                        active)
         self.stats["decode_steps"] += 1
@@ -337,6 +393,85 @@ class Scheduler:
             req = self.slots[slot]
             self.positions[slot] += 1
             events.append(self._record(req, int(next_tok[slot])))
+        return events
+
+    # -- speculative decoding ---------------------------------------------
+    def _make_drafts(self) -> Dict[Request, np.ndarray]:
+        """Draft continuation tokens for every speculating decode row.
+        Empty dict = plain decode tick (nobody speculates, nobody pays)."""
+        decoding = self._decoding()
+        if not any(r.speculate_k > 0 for r in decoding):
+            return {}
+        # The verify window writes at EVERY occupied slot's frontier
+        # (row ops are row-independent, not row-skipping), so the batch
+        # window must stay inside every row's cache bounds — clamp the
+        # draft budget to the most-advanced frontier.  Free slots sit at
+        # position 0 and cannot bind tighter.
+        frontier = max(int(self.positions[r.slot]) for r in self.slots
+                       if r is not None)
+        cap = self.engine.max_len - 1 - frontier
+        drafts: Dict[Request, np.ndarray] = {}
+        for r in decoding:
+            # remaining - 1: the window emits at most |draft| + 1 tokens,
+            # which must not overshoot the request's max_new_tokens
+            k = min(r.speculate_k,
+                    r.max_new_tokens - len(r.tokens) - 1, cap)
+            if k <= 0:
+                continue
+            ctx = np.concatenate([r.prompt,
+                                  np.asarray(r.tokens, np.int32)])
+            d = np.asarray(self.draft_fn(ctx, k), np.int32).reshape(-1)
+            if d.size:
+                drafts[r] = d[:k]
+        return drafts
+
+    def _verify_tick(self, drafts: Dict[Request, np.ndarray],
+                     active: np.ndarray) -> List[TokenEvent]:
+        """One speculative decode tick: score every row's window (last
+        emitted token ++ draft, padded to the batch-wide width) in one
+        forward pass, accept each row's longest drafted prefix matching
+        the greedy argmax chain, emit ``accepted + 1`` tokens per row,
+        and roll back the rejected tail (rewind ``positions``; paged
+        backends also free now-empty tail blocks via ``truncate``)."""
+        K = max(d.size for d in drafts.values())
+        window = np.full((self.num_slots, K + 1), self.pad_id, np.int32)
+        window[:, 0] = self.last_tokens
+        for r, d in drafts.items():
+            window[r.slot, 1:1 + d.size] = d
+        guess = self.backend.verify(window, self.positions, active)
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        events: List[TokenEvent] = []
+        drafted = accepted = emitted = 0
+        for slot in np.nonzero(active)[0]:
+            req = self.slots[slot]
+            d = drafts.get(req, _EMPTY_DRAFT)
+            g = guess[slot]
+            a = 0
+            while a < d.size and int(d[a]) == int(g[a]):
+                a += 1
+            drafted += int(d.size)
+            accepted += a
+            pos0 = int(self.positions[slot])
+            # g[i] is the greedy token after ...··t0·d[0..i-1]; emitting
+            # g[0..a] therefore reproduces exactly what a+1 plain decode
+            # steps would have emitted (g[i] == d[i] for i < a)
+            for i in range(a + 1):
+                events.append(self._record(req, int(g[i])))
+                emitted += 1
+                if req.finished:        # EOS / length: drop the rest
+                    break
+            if req.finished:
+                continue                # _evict released slot + memory
+            self.positions[slot] = pos0 + a + 1
+            self.backend.truncate(req, pos0 + a + 1)
+        self.stats["spec_drafted"] += drafted
+        self.stats["spec_accepted"] += accepted
+        self.stats["spec_emitted"] += emitted
+        if drafted:
+            self._trace("spec.acceptance_pct",
+                        int(round(100 * accepted / drafted)))
+        self._trace("spec.tokens_per_tick", emitted)
         return events
 
     # -- preemption -------------------------------------------------------

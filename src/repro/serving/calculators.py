@@ -145,6 +145,11 @@ class ContinuousBatchCalculator(Calculator):
         num_slots (default 4), max_new_tokens (default 16), eos_id.
         chunk_size — chunked prefill: ingest long prompts this many
         tokens per tick, interleaved with decode steps.
+        speculate_k — self-speculative decoding: draft up to k tokens
+        per tick by prompt lookup and verify them in one pass
+        (docs/SPECULATIVE.md); acceptance is recorded into the graph
+        tracer as ``spec.*`` gauges.  spec_ngram sets the largest
+        lookup n-gram (default 3).
         paged (default False) — use the paged KV cache
         (:class:`~repro.serving.kvcache.PagedBackend`) with
         num_blocks / block_size / prefix_sharing / admission
@@ -183,6 +188,8 @@ class ContinuousBatchCalculator(Calculator):
             max_new_tokens=int(opts.get("max_new_tokens", 16)),
             eos_id=opts.get("eos_id"),
             chunk_size=int(chunk) if chunk else None,
+            speculate_k=int(opts.get("speculate_k", 0)),
+            spec_ngram=int(opts.get("spec_ngram", 3)),
             trace=ctx.trace_gauge)
         self._tick_pending = False
         self._ts = {"TOKEN": 0, "RESPONSE": 0, "TICK_OUT": 0}

@@ -10,12 +10,14 @@ Two decode modes:
 * :meth:`generate` — classic static batch: prefill a [B, S] batch, then
   greedy-decode all rows in lockstep (scalar ``cache_pos``).
 * the serving API — continuous batching over a
-  :class:`~repro.serving.kvcache.CacheBackend`: one
+  :class:`~repro.serving.kvcache.CacheBackend`:
   :meth:`new_cache` / :meth:`insert` / :meth:`decode` / :meth:`extend`
-  quartet dispatched on the backend's cache layout (contiguous slot rows
-  or a paged block-pool arena).  Jitted steps are cached per layout, so
-  one engine can serve slot and paged backends at the same time.  Used
-  by :class:`repro.serving.batching.Scheduler` and the GraphServer.
+  / :meth:`verify` dispatched on the backend's cache layout (contiguous
+  slot rows or a paged block-pool arena).  Jitted steps are cached per
+  layout, so one engine can serve slot and paged backends at the same
+  time.  Used by :class:`repro.serving.batching.Scheduler` and the
+  GraphServer.  ``verify`` is the speculative-decoding scoring pass
+  (docs/SPECULATIVE.md).
 """
 from __future__ import annotations
 
@@ -31,7 +33,8 @@ from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
                                   check_paged_support)
 from ..runtime.steps import (make_decode_step, make_extend_step,
                              make_paged_insert, make_prefill_step,
-                             make_serve_decode_step, make_slot_insert)
+                             make_serve_decode_step, make_slot_insert,
+                             make_verify_step)
 
 
 class LLMEngine:
@@ -49,9 +52,11 @@ class LLMEngine:
                                                   flags))
         self._decode = jax.jit(make_decode_step(self.model, flags))
         # serving jits, built lazily per cache layout: key is
-        # (backend.kind, block_size); extend steps add prefix_len
+        # (backend.kind, block_size); extend steps add prefix_len,
+        # verify steps add the window width 1+k
         self._serve: Dict[Tuple, Dict[str, Any]] = {}
         self._extend_steps: Dict[Tuple, Any] = {}
+        self._verify_steps: Dict[Tuple, Any] = {}
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -118,6 +123,20 @@ class LLMEngine:
                              "(prefix-extend attention is not "
                              "sequence-parallel)")
 
+    def check_spec_support(self) -> None:
+        """Speculative decoding verifies a multi-token window through the
+        decode path, which exists for pure-attention decoder stacks only
+        (recurrent mixers update O(1) state one token at a time), has no
+        sliding-window mask, and reads paged K/V through the page gather
+        (the Pallas paged kernel is single-query)."""
+        check_paged_support(self.cfg)
+        if getattr(self.flags, "use_paged_kernel", False):
+            raise ValueError("speculative decode reads paged K/V through "
+                             "the page-gather path; drop use_paged_kernel "
+                             "(the Pallas kernel is single-query only)")
+        if getattr(self.flags, "model_size", 1) > 1:
+            raise ValueError("speculative decode is single-host for now")
+
     def _serve_steps(self, backend) -> Dict[str, Any]:
         key = (backend.kind, getattr(backend, "block_size", 0))
         steps = self._serve.get(key)
@@ -177,6 +196,38 @@ class LLMEngine:
         else:
             next_tok, cache = step(*args)
         return np.asarray(next_tok[:, 0]), cache
+
+    def verify(self, backend, cache, tokens: np.ndarray,
+               positions: np.ndarray, active: np.ndarray,
+               block_tables: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, Dict]:
+        """Speculative verification: score a [N, 1+k] token window per
+        slot (each row: last emitted token ++ k drafted tokens, padded
+        with the pad id) in one forward pass.
+
+        Returns ([N, 1+k] greedy argmax at every window position, cache).
+        Row ``b``'s window occupies cache positions
+        ``positions[b]..positions[b]+k`` — the caller must guarantee
+        ``positions[b] + k < max_len`` for every slot (free slots
+        included: their stray writes must stay in bounds) and, on paged
+        backends, must have backed every position it intends to keep
+        (unbacked pages trash-route their writes).  Compiled once per
+        (layout, window width)."""
+        width = int(np.asarray(tokens).shape[1])
+        key = (backend.kind, getattr(backend, "block_size", 0), width)
+        step = self._verify_steps.get(key)
+        if step is None:
+            step = jax.jit(make_verify_step(
+                self.model, self.flags, paged=backend.kind == "paged"))
+            self._verify_steps[key] = step
+        args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
+                jnp.asarray(positions, jnp.int32),
+                jnp.asarray(active, bool))
+        if backend.kind == "paged":
+            guess, cache = step(*args, jnp.asarray(block_tables, jnp.int32))
+        else:
+            guess, cache = step(*args)
+        return np.asarray(guess), cache
 
     def extend(self, backend, cache, suffix_tokens: np.ndarray,
                prefix_len: int, ref) -> Tuple[np.ndarray, Dict]:

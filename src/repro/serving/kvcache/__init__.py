@@ -1,7 +1,8 @@
 """KV-cache subsystem: the CacheBackend protocol (contiguous slot rows
-vs paged block-pool arena behind one interface), the block-pool
+vs paged block-pool arena behind one interface — allocation, insert,
+decode, extend, speculative verify/truncate), the block-pool
 allocator, and ref-counted prompt-prefix sharing (see
-docs/KV_CACHE.md + docs/SCHEDULER.md)."""
+docs/KV_CACHE.md + docs/SCHEDULER.md + docs/SPECULATIVE.md)."""
 from .allocator import BlockPool, BlockPoolError
 from .backend import (CacheBackend, CachePressure, PagedBackend,
                       SlotBackend, make_backend, max_request_tokens)

@@ -14,7 +14,11 @@ decode batch:
   (``cache_pos`` rows vs block tables);
 * **extension** — chunked/prefix prefill of a prompt *suffix* against
   already-cached K/V, which is what makes chunked prefill work on both
-  layouts (it generalizes PR 3's paged-only ``prefill_extend``).
+  layouts (it generalizes PR 3's paged-only ``prefill_extend``);
+* **speculative verify / truncate** — scoring a drafted token window in
+  one pass and rolling the cache back behind the rejected tail (the
+  slot layout rewinds its write position; the paged layout frees
+  now-empty tail blocks — docs/SPECULATIVE.md).
 
 The scheduler (:class:`repro.serving.batching.Scheduler`) is backend
 agnostic: it talks queueing, slots, chunking and preemption policy; the
@@ -136,6 +140,29 @@ class CacheBackend:
         """One greedy decode step across all slots; returns [N] tokens."""
         raise NotImplementedError
 
+    # -- speculative decoding (verify / truncate seam) --------------------
+    def verify(self, tokens: np.ndarray, positions: np.ndarray,
+               active: np.ndarray) -> np.ndarray:
+        """Score a speculative window — ``tokens`` is [N, 1+k] (each
+        row's last emitted token ++ k drafted tokens) — in one batched
+        forward pass; returns the [N, 1+k] greedy argmax at every window
+        position.  K/V for the whole window is written at
+        ``positions[slot]..positions[slot]+k``; the scheduler then keeps
+        the accepted prefix (rewinding ``positions``) and calls
+        :meth:`truncate` so the backend can reclaim memory behind the
+        rejected tail."""
+        raise NotImplementedError
+
+    def truncate(self, req, new_len: int) -> None:
+        """Roll ``req``'s cache memory back to ``new_len`` tokens after
+        speculative verification rejected drafted tail tokens.
+
+        The slot layout needs no action: the scheduler's rewound
+        ``positions[slot]`` masks the stale tail K/V, and the next
+        verify/decode window overwrites it before it can ever become
+        readable.  The paged layout overrides this to free now-empty
+        tail blocks back to the :class:`BlockPool`."""
+
 
 class SlotBackend(CacheBackend):
     """Contiguous layout: one max_len cache row per slot.
@@ -193,6 +220,11 @@ class SlotBackend(CacheBackend):
         next_tok, self.cache = self.engine.decode(
             self, self.cache, last_tokens, positions, active)
         return next_tok
+
+    def verify(self, tokens, positions, active) -> np.ndarray:
+        guess, self.cache = self.engine.verify(
+            self, self.cache, tokens, positions, active)
+        return guess
 
 
 class PagedBackend(CacheBackend):
@@ -407,6 +439,42 @@ class PagedBackend(CacheBackend):
         self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
         self._trace_pool()
         return next_tok
+
+    def verify(self, tokens, positions, active) -> np.ndarray:
+        guess, self.cache = self.engine.verify(
+            self, self.cache, tokens, positions, active,
+            block_tables=self.tables)
+        self.stats["blocks_peak"] = self.pool.stats["peak_in_use"]
+        self._trace_pool()
+        return guess
+
+    def truncate(self, req, new_len: int) -> None:
+        """Trim ``req``'s block table to ``ceil(new_len / block_size)``
+        pages, freeing tail blocks that held only rejected draft tokens.
+
+        Safe by construction w.r.t. sharing: the verify window starts at
+        or past the request's generation frontier, which always lies
+        beyond its shared/registered prefix blocks — so a freed tail
+        block has ref 1 and is unregistered (the prefix-index unregister
+        mirrors :meth:`release` for defense in depth).  In
+        ``admission="reserve"`` mode each freed page returns to the
+        request's reservation, preserving the never-fail-mid-flight
+        guarantee."""
+        keep = -(-int(new_len) // self.block_size)
+        if keep < req.registered:
+            raise RuntimeError(
+                f"request {req.id!r}: truncate to {new_len} tokens would "
+                f"drop registered prefix blocks ({req.registered} pages)")
+        while req.n_pages > keep:
+            blk = req.blocks.pop()
+            req.n_pages -= 1
+            self.tables[req.slot, req.n_pages] = 0
+            if self.pool.free(blk) and self.prefix is not None:
+                self.prefix.unregister_block(blk)
+            if self.admission == "reserve":
+                self.pool.reserve(1)
+                req.reserved_left += 1
+        self._trace_pool()
 
     def _trace_pool(self) -> None:
         self._trace("kvcache.blocks_in_use", self.pool.blocks_in_use)

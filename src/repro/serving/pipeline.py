@@ -80,6 +80,8 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
                                    eos_id: Optional[int] = None,
                                    enable_tracer: bool = True,
                                    chunk_size: Optional[int] = None,
+                                   speculate_k: int = 0,
+                                   spec_ngram: int = 3,
                                    paged: bool = False,
                                    num_blocks: int = 0,
                                    block_size: int = 16,
@@ -100,6 +102,10 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     sharing unless ``prefix_sharing=False``).  The GraphServer derives a
     memory-aware ``max_in_flight`` default in that mode — see
     :class:`repro.serving.server.GraphServer`.
+
+    ``speculate_k > 0`` turns on self-speculative decoding as the
+    default for every request (prompt-lookup drafting with n-grams up
+    to ``spec_ngram``; see docs/SPECULATIVE.md).
     """
     if max_in_flight <= 0:
         max_in_flight = 2 * num_slots
@@ -109,7 +115,8 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     b.executor("inference", 1)
 
     engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens,
-                   "eos_id": eos_id, "chunk_size": chunk_size}
+                   "eos_id": eos_id, "chunk_size": chunk_size,
+                   "speculate_k": speculate_k, "spec_ngram": spec_ngram}
     if paged:
         engine_opts.update({"paged": True, "num_blocks": num_blocks,
                             "block_size": block_size,

@@ -120,11 +120,15 @@ class GraphServer:
                  max_new_tokens: int = 16, eos_id: Optional[int] = None,
                  drop_on_overload: bool = False, enable_tracer: bool = True,
                  chunk_size: Optional[int] = None,
+                 speculate_k: int = 0, spec_ngram: int = 3,
                  paged: bool = False, num_blocks: int = 0,
                  block_size: int = 16, prefix_sharing: bool = True,
                  admission: str = "preempt", watermark: int = 0):
         self.engine = engine
         self._default_max_new = max_new_tokens
+        if speculate_k:
+            # fail in the caller's thread, not inside the graph run
+            engine.check_spec_support()
         self._paged = paged
         self._block_size = block_size
         if paged:
@@ -151,6 +155,7 @@ class GraphServer:
             queue_size=queue_size, max_new_tokens=max_new_tokens,
             eos_id=eos_id, drop_on_overload=drop_on_overload,
             enable_tracer=enable_tracer, chunk_size=chunk_size,
+            speculate_k=speculate_k, spec_ngram=spec_ngram,
             paged=paged, num_blocks=num_blocks, block_size=block_size,
             prefix_sharing=prefix_sharing, admission=admission,
             watermark=watermark)
@@ -173,17 +178,28 @@ class GraphServer:
     # -- client API ----------------------------------------------------
     def submit(self, tokens, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, priority: int = 0,
+               speculate_k: Optional[int] = None,
                request_id: Any = None) -> RequestHandle:
         """Enqueue one generation request; returns immediately.
 
         ``priority``: higher values are admitted first and preempted
         last (paged backend under block pressure).
 
+        ``speculate_k``: per-request speculative draft budget (overrides
+        the server default; 0 disables speculation for this request —
+        see docs/SPECULATIVE.md).
+
         Invalid requests are rejected here, client-side — an error thrown
         inside a graph node would terminate the whole run.  The check
         mirrors ``Scheduler.submit``: the cap is the backend's REAL
         capacity (paged: arena blocks, not just engine max_len)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if speculate_k is not None:
+            if int(speculate_k) < 0:
+                raise ValueError(f"speculate_k must be >= 0, "
+                                 f"got {int(speculate_k)}")
+            if int(speculate_k) > 0:
+                self.engine.check_spec_support()
         new = self._default_max_new if max_new_tokens is None \
             else int(max_new_tokens)
         if tokens.size == 0:
@@ -217,6 +233,8 @@ class GraphServer:
                 payload["eos_id"] = int(eos_id)
             if priority:
                 payload["priority"] = int(priority)
+            if speculate_k is not None:
+                payload["speculate_k"] = int(speculate_k)
             # feed the graph under the server lock: stream timestamps must
             # be added in allocation order or a faster thread would trip
             # the monotonicity check.  (The requests edge is unbounded, so

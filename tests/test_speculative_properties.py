@@ -1,0 +1,158 @@
+"""Hypothesis property tests for self-speculative decoding: random
+schedules × random acceptance patterns (drafts that flip from exact
+continuation to garbage at fuzzer-chosen positions) × forced preemptions
+on BOTH cache backends must leave every request's output bit-identical
+to sequential greedy decode, with BlockPool invariants intact after
+every tick and zero blocks leaked at the end.
+
+A deterministic sweep of the same property lives in test_speculative.py
+so tier-1 always covers it; this file is the exhaustive version,
+importorskip-guarded like the other property suites.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import repro.calculators  # noqa: F401
+from repro.configs import get_config
+from repro.serving import LLMEngine, PagedBackend, Scheduler, SlotBackend
+
+MAX_LEN = 32
+
+
+def tiny_cfg():
+    cfg = get_config("minicpm_2b").reduced()
+    return dataclasses.replace(cfg, num_layers=1, d_model=64,
+                               vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return LLMEngine(tiny_cfg(), max_len=MAX_LEN, seed=11)
+
+
+_ref_cache = {}
+
+
+def reference(engine, prompt, max_new):
+    key = (prompt.tobytes(), max_new)
+    if key not in _ref_cache:
+        _ref_cache[key] = engine.generate(prompt[None],
+                                          max_new_tokens=max_new)[0]
+    return _ref_cache[key]
+
+
+def make_draft_fn(engine, prompts, max_new, corrupt_seed, corrupt_prob):
+    """Oracle continuation drafts, corrupted at random positions — the
+    fuzzer controls the acceptance pattern end to end (corrupt_prob 0 =
+    always fully accepted, 1 = always rejected at the first token)."""
+    paths = [np.concatenate([p, reference(engine, p, max_new)])
+             .astype(np.int32) for p in prompts]
+    rng = np.random.RandomState(corrupt_seed)
+
+    def draft(context, k):
+        n = context.size
+        for full in paths:
+            if n < full.size and np.array_equal(full[:n], context):
+                d = full[n:n + k].copy()
+                bad = rng.rand(d.size) < corrupt_prob
+                d[bad] = (d[bad] + 1 + rng.randint(
+                    0, 200, size=int(bad.sum()))) % 256
+                return d
+        return np.zeros(0, np.int32)
+
+    return draft
+
+
+schedule = st.fixed_dictionaries({
+    "kind": st.sampled_from(["slot", "paged"]),
+    "num_slots": st.integers(2, 4),
+    "num_blocks": st.integers(8, 20),
+    "max_new": st.integers(2, 8),
+    "chunk": st.sampled_from([None, 4, 8]),
+    "speculate_k": st.integers(1, 6),
+    "corrupt_seed": st.integers(0, 999),
+    "corrupt_prob": st.sampled_from([0.0, 0.2, 0.5, 1.0]),
+    "prompts": st.lists(
+        st.tuples(st.integers(1, 20),       # prompt length
+                  st.integers(0, 2),        # priority
+                  st.integers(0, 999)),     # content seed
+        min_size=1, max_size=6),
+    "drive": st.lists(st.integers(0, 9), min_size=4, max_size=60),
+})
+
+
+@settings(max_examples=25, deadline=None)
+@given(schedule)
+def test_random_speculative_schedules_bit_identical(engine, sched_def):
+    max_new = sched_def["max_new"]
+    entries = [(L, prio, seed) for L, prio, seed in sched_def["prompts"]
+               if L + max_new <= MAX_LEN]
+    prompts = [np.random.RandomState(seed).randint(0, 256, size=L)
+               .astype(np.int32) for L, _, seed in entries]
+    prios = [prio for _, prio, _ in entries]
+    if not prompts:
+        return
+    if sched_def["kind"] == "paged":
+        backend = PagedBackend(engine, sched_def["num_slots"],
+                               num_blocks=sched_def["num_blocks"],
+                               block_size=4)
+        cap = backend.max_request_tokens()
+        keep = [i for i, p in enumerate(prompts)
+                if p.size + max_new <= cap]
+        prompts = [prompts[i] for i in keep]
+        prios = [prios[i] for i in keep]
+        if not prompts:
+            return
+    else:
+        backend = SlotBackend(engine, sched_def["num_slots"])
+    refs = [reference(engine, p, max_new) for p in prompts]
+    draft_fn = make_draft_fn(engine, prompts, max_new,
+                             sched_def["corrupt_seed"],
+                             sched_def["corrupt_prob"])
+    sched = Scheduler(backend, max_new_tokens=max_new,
+                      chunk_size=sched_def["chunk"],
+                      speculate_k=sched_def["speculate_k"],
+                      draft_fn=draft_fn)
+    got = {}
+    pending = list(enumerate(prompts))
+
+    def pump():
+        for ev in sched.admit() + sched.step():
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+        if sched.pool is not None:
+            sched.pool.check_invariants()
+
+    for op in sched_def["drive"]:
+        if op <= 3 and pending:                      # submit next request
+            i, p = pending.pop(0)
+            sched.submit({"tokens": p, "id": i, "priority": prios[i]})
+            continue
+        if op == 9:                                  # forced preemption
+            holders = [r for r in sched.slots if r is not None]
+            if holders:
+                sched.preempt(holders[op % len(holders)])
+                if sched.pool is not None:
+                    sched.pool.check_invariants()
+                continue
+        pump()
+    while sched.has_work() or pending:
+        if pending:
+            i, p = pending.pop(0)
+            sched.submit({"tokens": p, "id": i, "priority": prios[i]})
+        pump()
+
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(got[i], ref)
+    if sched.pool is not None:
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+        assert sched.pool.reserved_blocks == 0
+        assert len(sched.prefix) == 0
+    assert sorted(sched.free) == list(range(sched.num_slots))

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Docs freshness checker — fails CI when documentation rots.
+
+Validates, over ``README.md`` and every ``docs/*.md``:
+
+1. **Intra-repo markdown links** ``[text](target)`` resolve to real
+   files (external ``http(s)``/``mailto`` links and pure ``#anchors``
+   are skipped; a link's ``#fragment`` suffix is ignored).
+2. **Cited repo paths** exist in the tree.  A citation is any token
+   that looks like a repo file path — ``src/repro/serving/engine.py``,
+   ``docs/SCHEDULER.md``, ``benchmarks/serve_bench.py``, or the
+   shorthand forms docs use for modules, ``core/packet.py`` /
+   ``transformer.py`` (resolved under ``src/repro``, by suffix or
+   basename).  A ``::symbol`` suffix additionally requires the symbol's
+   name to appear in that file (catches renamed functions/classes).
+3. **Cited CLI flags** ``--flag`` are defined somewhere in the tree via
+   ``argparse`` ``add_argument("--flag" ...)``.
+
+Run locally::
+
+    python tools/check_docs.py
+
+Exit status is non-zero with one line per violation — the docs-check CI
+job runs exactly this.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# tokens that look like flags but are not repo CLI flags (CLI options of
+# external tools quoted in prose, long-dash artifacts, ...)
+FLAG_ALLOWLIST = set()
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# a path-looking token: at least one '/', slash-separated identifier
+# segments, ending in a known source/doc extension; optional ::symbol
+PATH_RE = re.compile(
+    r"(?<![\w/.-])((?:[A-Za-z_][\w.-]*/)+[A-Za-z_][\w.-]*"
+    r"\.(?:py|md|json|txt|yml|ini))(?:::([A-Za-z_]\w*))?")
+# bare module citation like `transformer.py::prefill_extend`
+BARE_RE = re.compile(r"(?<![\w/.-])([A-Za-z_]\w*\.py)::([A-Za-z_]\w*)")
+FLAG_RE = re.compile(r"(?<![\w-])(--[a-z][a-z0-9]*(?:-[a-z0-9]+)*)\b")
+ADD_ARG_RE = re.compile(r"add_argument\(\s*['\"](--[a-z0-9-]+)['\"]")
+
+
+def doc_files():
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def defined_flags():
+    flags = set(FLAG_ALLOWLIST)
+    for py in REPO.rglob("*.py"):
+        if "__pycache__" in py.parts or ".git" in py.parts:
+            continue
+        try:
+            flags.update(ADD_ARG_RE.findall(py.read_text()))
+        except OSError:
+            continue
+    return flags
+
+
+def resolve_path(token: str):
+    """Find the repo file a doc citation refers to, or None."""
+    candidates = [REPO / token, REPO / "src" / token,
+                  REPO / "src" / "repro" / token]
+    for c in candidates:
+        if c.exists():
+            return c
+    # suffix match anywhere under src/repro (docs cite module paths
+    # relative to the package, e.g. `core/packet.py`)
+    suffix = Path(token)
+    for f in (REPO / "src" / "repro").rglob(suffix.name):
+        if f.as_posix().endswith(token):
+            return f
+    return None
+
+
+def resolve_bare(name: str):
+    hits = [f for f in (REPO / "src" / "repro").rglob(name)
+            if "__pycache__" not in f.parts]
+    return hits[0] if hits else None
+
+
+def main() -> int:
+    errors = []
+    flags = defined_flags()
+    for doc in doc_files():
+        text = doc.read_text()
+        rel = doc.relative_to(REPO)
+
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (doc.parent / path).exists() and \
+                    not (REPO / path).exists():
+                errors.append(f"{rel}: broken link -> {target}")
+
+        seen = set()
+        for m in PATH_RE.finditer(text):
+            token, symbol = m.group(1), m.group(2)
+            if (token, symbol) in seen:
+                continue
+            seen.add((token, symbol))
+            f = resolve_path(token)
+            if f is None:
+                errors.append(f"{rel}: cited path does not exist -> "
+                              f"{token}")
+            elif symbol and symbol not in f.read_text():
+                errors.append(f"{rel}: {token} no longer defines "
+                              f"'{symbol}'")
+        for m in BARE_RE.finditer(text):
+            name, symbol = m.group(1), m.group(2)
+            if (name, symbol) in seen:
+                continue
+            seen.add((name, symbol))
+            f = resolve_bare(name)
+            if f is None:
+                errors.append(f"{rel}: cited module does not exist -> "
+                              f"{name}")
+            elif symbol not in f.read_text():
+                errors.append(f"{rel}: {name} no longer defines "
+                              f"'{symbol}'")
+
+        for flag in set(FLAG_RE.findall(text)):
+            if flag not in flags:
+                errors.append(f"{rel}: cited CLI flag not defined "
+                              f"anywhere -> {flag}")
+
+    for e in sorted(errors):
+        print(e)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        return 1
+    print(f"check_docs: {len(doc_files())} docs OK "
+          f"({len(flags)} known CLI flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
