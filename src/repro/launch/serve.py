@@ -1,13 +1,18 @@
-"""Serving launcher: the continuous-batching GraphServer (default) or the
-original fixed-batch flow-limited graph (``--fixed-batch``) around an
-LLMEngine.
+"""Serving launcher: the continuous-batching GraphServer (default), the
+asyncio streaming front door (``--frontend async``; see
+docs/FRONTEND.md), or the original fixed-batch flow-limited graph
+(``--fixed-batch``) around an LLMEngine.
 
     python -m repro.launch.serve --arch qwen3_32b --reduced \
         --requests 32 --clients 8
+
+    python -m repro.launch.serve --frontend async --ttft-ms 500 \
+        --cancel-frac 0.25 --retries 1
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import sys
 import threading
 import time
@@ -16,7 +21,8 @@ import numpy as np
 
 from ..configs import get_config
 from ..core import Graph
-from ..serving import (GraphServer, LLMEngine, build_serving_graph)
+from ..serving import (AsyncFrontend, GraphServer, LLMEngine, Policy,
+                       build_serving_graph)
 from .. import calculators  # noqa: F401 - registers basics
 
 
@@ -97,6 +103,80 @@ def run_continuous(args, cfg, engine) -> int:
     return 0 if done == args.requests else 1
 
 
+def run_async(args, cfg, engine) -> int:
+    """Async streaming demo: every request is one ``async for`` over
+    :meth:`AsyncFrontend.stream`; a ``--cancel-frac`` slice of clients
+    disconnects after two tokens (server-side cancellation frees their
+    cache memory); ``--deadline-ms`` / ``--ttft-ms`` attach SLO budgets
+    (docs/FRONTEND.md)."""
+    rng = np.random.RandomState(args.seed)
+    prompts = _make_prompts(rng, args.requests, cfg.vocab_size)
+    cancel = [rng.rand() < args.cancel_frac for _ in range(args.requests)]
+    slo = {}
+    if args.deadline_ms:
+        slo["deadline_ms"] = args.deadline_ms
+    if args.ttft_ms:
+        slo["ttft_ms"] = args.ttft_ms
+    ttft = [None] * args.requests
+    ntok = [0] * args.requests
+    reasons = [None] * args.requests
+
+    paged = args.paged or args.backend == "paged"
+    with GraphServer(engine, num_slots=args.num_slots,
+                     max_in_flight=args.max_in_flight,
+                     max_new_tokens=args.max_new_tokens,
+                     chunk_size=args.chunk_size or None,
+                     speculate_k=args.speculate,
+                     paged=paged, num_blocks=args.num_blocks,
+                     block_size=args.block_size,
+                     admission=args.admission) as srv:
+        front = AsyncFrontend(srv, policy=Policy(
+            timeout_ms=args.timeout_ms, retries=args.retries))
+        t0 = time.time()
+
+        async def client(i):
+            hbox = []
+            agen = front.stream(prompts[i], request_id=f"req{i}",
+                                on_handle=hbox.append, **slo)
+            try:
+                async for _tok in agen:
+                    if ttft[i] is None:
+                        ttft[i] = time.time() - t0
+                    ntok[i] += 1
+                    if cancel[i] and ntok[i] >= 2:
+                        reasons[i] = "disconnect"
+                        break
+            finally:
+                await agen.aclose()
+            if reasons[i] is None:
+                reasons[i] = hbox[-1].finish_reason or "length"
+
+        async def run_all():
+            await asyncio.gather(*(client(i)
+                                   for i in range(args.requests)))
+
+        asyncio.run(run_all())
+        wall = time.time() - t0
+        stats = srv.stats()
+
+    toks = sum(ntok)
+    ts = sorted(t for t in ttft if t is not None)
+    print(f"async: streamed {toks} tokens from {args.requests} requests "
+          f"in {wall:.2f}s ({toks / wall:.1f} tok/s)")
+    if ts:
+        print(f"ttft p50={ts[len(ts)//2]*1e3:.0f}ms "
+              f"p95={ts[int(len(ts)*0.95)]*1e3:.0f}ms")
+    by_reason = {}
+    for r in reasons:
+        by_reason[r] = by_reason.get(r, 0) + 1
+    sched = stats.get("scheduler", {})
+    print(f"finish reasons: {by_reason}  "
+          f"cancelled={sched.get('requests_cancelled')} "
+          f"deadline_missed={sched.get('deadline_missed')} "
+          f"preemptions={sched.get('preemptions')}")
+    return 0
+
+
 def run_fixed_batch(args, cfg, engine) -> int:
     """The original batch-and-drain pipeline (kept for comparison)."""
     graph_cfg = build_serving_graph(batch_size=args.batch_size,
@@ -175,6 +255,25 @@ def main(argv=None) -> int:
                          "worst-case rows)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block")
+    ap.add_argument("--frontend", choices=["threads", "async"],
+                    default="threads",
+                    help="client driver: blocking handles from worker "
+                         "threads, or the asyncio streaming front door "
+                         "(docs/FRONTEND.md)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="whole-request SLO budget; expired requests "
+                         "finish with reason 'deadline' (0 = off)")
+    ap.add_argument("--ttft-ms", type=float, default=0,
+                    help="first-token SLO budget; also lets the request "
+                         "preempt a lower-priority decoder (0 = off)")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="async frontend: fraction of clients that "
+                         "disconnect after two tokens")
+    ap.add_argument("--timeout-ms", type=float, default=120_000.0,
+                    help="frontend policy timeout per request")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="frontend policy: resubmissions for requests "
+                         "that failed before their first token")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -184,6 +283,8 @@ def main(argv=None) -> int:
     engine = LLMEngine(cfg, max_len=128, seed=args.seed)
     if args.fixed_batch:
         return run_fixed_batch(args, cfg, engine)
+    if args.frontend == "async":
+        return run_async(args, cfg, engine)
     return run_continuous(args, cfg, engine)
 
 

@@ -15,6 +15,9 @@ The stack, bottom-up (``pydoc`` each module for reference docs):
 * :class:`GraphServer` (``server.py``) — the whole thing wired as a
   MediaPipe-style graph with flow-limited admission and streamed
   responses (docs/ARCHITECTURE.md §5).
+* :class:`AsyncFrontend` (``frontend.py``) — the asyncio front door:
+  per-token async streaming, client disconnect → cancellation,
+  deadlines/TTFT targets, retry/timeout policy (docs/FRONTEND.md).
 
 Quickstart::
 
@@ -26,10 +29,11 @@ Quickstart::
         tokens = server.submit([1, 2, 3, 4]).result()
 """
 from .engine import LLMEngine
-from .batching import Request, Scheduler, TokenEvent
+from .batching import DeadlineExceeded, Request, Scheduler, TokenEvent
 from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
                           UnbatchCalculator, LLMPrefillCalculator,
                           LLMDecodeLoopCalculator)
+from .frontend import AsyncFrontend, Policy, RequestTimeout
 from .kvcache import (BlockPool, BlockPoolError, CacheBackend,
                       CachePressure, PagedBackend, PrefixIndex,
                       SlotBackend, make_backend)
@@ -40,6 +44,7 @@ from .speculative import lookup_draft
 __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "UnbatchCalculator", "LLMPrefillCalculator",
            "LLMDecodeLoopCalculator", "Request", "Scheduler", "TokenEvent",
+           "DeadlineExceeded", "AsyncFrontend", "Policy", "RequestTimeout",
            "BlockPool", "BlockPoolError", "CacheBackend", "CachePressure",
            "PagedBackend", "PrefixIndex", "SlotBackend", "make_backend",
            "build_serving_graph", "build_continuous_serving_graph",

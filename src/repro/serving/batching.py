@@ -34,9 +34,11 @@ the graph scheduler interleave admission with decode steps) lives in
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
 import functools
 import itertools
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -45,6 +47,19 @@ from .kvcache.backend import CacheBackend, CachePressure
 from .speculative import lookup_draft
 
 _EMPTY_DRAFT = np.zeros(0, np.int32)
+
+#: ids whose cancel arrived before the request itself (a CONTROL packet
+#: overtaking its REQUEST through the flow limiter) are remembered up to
+#: this many entries; older entries age out (a cancel for an id that
+#: never arrives — e.g. shed upstream — must not pin memory forever).
+_CANCEL_BACKLOG = 1024
+
+
+class DeadlineExceeded(ValueError):
+    """A request's deadline was already expired at submission time.
+
+    Typed (rather than a bare ``ValueError``) so front ends can map it to
+    a distinct client-visible rejection without string matching."""
 
 
 @dataclasses.dataclass(eq=False)
@@ -57,6 +72,12 @@ class Request:
     priority: int = 0                  # higher value = more important
     arrival: int = 0                   # monotone submission order
     speculate_k: int = 0               # max drafted tokens per decode tick
+    # SLO fields (absolute times on the scheduler's clock; None = no SLO)
+    deadline: Optional[float] = None        # whole request must finish by
+    ttft_deadline: Optional[float] = None   # first token must be out by
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    cancelled: bool = False            # cancel requested (or applied)
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     ingested: int = 0                  # tokens of `seq` already in cache
@@ -89,9 +110,13 @@ class Request:
 
 @dataclasses.dataclass
 class TokenEvent:
-    """One generated token (or the request's completion)."""
+    """One generated token (or the request's completion).
+
+    ``token is None`` marks a token-less completion: the request left the
+    system by cancellation or a missed deadline instead of generating a
+    final token (``request.finish_reason`` says which)."""
     request: Request
-    token: int
+    token: Optional[int]
     index: int                          # 0-based position in the generation
     finished: bool
 
@@ -130,6 +155,7 @@ class Scheduler:
                  speculate_k: int = 0, spec_ngram: int = 3,
                  draft_fn: Optional[Callable[[np.ndarray, int],
                                              np.ndarray]] = None,
+                 clock: Callable[[], float] = time.monotonic,
                  trace=None):
         engine = backend.engine
         if engine.cfg.is_encoder_decoder:
@@ -152,6 +178,11 @@ class Scheduler:
         self._spec_checked = False
         if self.default_spec_k > 0:
             self._check_spec()
+        self.clock = clock
+        self._has_slo = False          # any live request carries a deadline
+        # cancels that arrived before their request (id -> True), capped
+        self._cancelled_ids: "collections.OrderedDict[Any, bool]" = \
+            collections.OrderedDict()
         self.waiting: List[Request] = []      # sorted by sort_key()
         self.ingesting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * self.num_slots
@@ -172,6 +203,10 @@ class Scheduler:
             # bonus each) — acceptance rate = spec_accepted/spec_drafted
             "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0,
             "spec_emitted": 0,
+            # front-door lifecycle: requests cancelled (client disconnect
+            # / explicit cancel) and requests terminated for a missed
+            # deadline or TTFT target — both count toward `completed`
+            "requests_cancelled": 0, "deadline_missed": 0,
             "max_active_slots": 0,
             # peak requests inside the subsystem (waiting + active): with a
             # FlowLimiter upstream this must never exceed max_in_flight
@@ -206,10 +241,21 @@ class Scheduler:
     # -- request intake ---------------------------------------------------
     def submit(self, payload: Dict[str, Any]) -> Request:
         """payload: {'tokens': [S] ints, 'id': any, 'max_new_tokens': int?,
-        'eos_id': int?, 'priority': int?, 'speculate_k': int?}.
+        'eos_id': int?, 'priority': int?, 'speculate_k': int?,
+        'deadline_ms': float?, 'ttft_ms': float?, 'deadline': float?,
+        'ttft_deadline': float?}.
         Validated against the backend's REAL capacity (paged: arena
         blocks, not just engine.max_len) so an unservable request fails
-        here instead of starving the queue."""
+        here instead of starving the queue.
+
+        SLO fields: ``deadline_ms`` / ``ttft_ms`` are relative to now
+        (this submit) and raise :class:`DeadlineExceeded` when already
+        non-positive — a request that cannot possibly meet its deadline
+        is rejected up front rather than admitted to fail.  ``deadline``
+        / ``ttft_deadline`` are absolute times on the scheduler's clock
+        (used by the GraphServer, which validates at ITS submit time and
+        must not crash the graph when time in the admission queue eats
+        the budget — that becomes a `deadline_missed`, not an error)."""
         prompt = np.asarray(payload["tokens"], np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -226,6 +272,23 @@ class Scheduler:
                              f"speculate_k must be >= 0, got {spec_k}")
         if spec_k > 0:
             self._check_spec()
+        deadline = payload.get("deadline")
+        ttft_deadline = payload.get("ttft_deadline")
+        now = None
+        for rel_key, abs_val in (("deadline_ms", deadline),
+                                 ("ttft_ms", ttft_deadline)):
+            if payload.get(rel_key) is None:
+                continue
+            rel = float(payload[rel_key])
+            if rel <= 0:
+                raise DeadlineExceeded(
+                    f"request {payload.get('id')!r}: {rel_key}={rel:g} "
+                    f"is already expired at submit")
+            now = self.clock() if now is None else now
+            if rel_key == "deadline_ms":
+                deadline = now + rel / 1e3
+            else:
+                ttft_deadline = now + rel / 1e3
         req = Request(
             id=payload.get("id"),
             prompt=prompt,
@@ -233,13 +296,137 @@ class Scheduler:
             eos_id=payload.get("eos_id", self.default_eos),
             priority=int(payload.get("priority", 0)),
             speculate_k=spec_k,
+            deadline=deadline,
+            ttft_deadline=ttft_deadline,
             arrival=next(self._arrival))
+        req.submitted_at = now if now is not None else self.clock()
+        if deadline is not None or ttft_deadline is not None:
+            self._has_slo = True
+        if self._cancelled_ids.pop(req.id, None):
+            # the cancel overtook the request through the admission path:
+            # mark it now, the next admit() sweep completes it
+            req.cancelled = True
         bisect.insort(self.waiting, req, key=Request.sort_key)
         self.stats["submitted"] += 1
         self.stats["max_outstanding"] = max(
             self.stats["max_outstanding"],
             self.stats["submitted"] - self.stats["completed"])
         return req
+
+    # -- cancellation + deadlines -----------------------------------------
+    def cancel(self, target: Any) -> List[TokenEvent]:
+        """Cancel a request at ANY point of its lifecycle; returns the
+        completion event (empty list when there is nothing to cancel).
+
+        ``target`` is a :class:`Request` or a request id.  Semantics per
+        state:
+
+        * **waiting / preempted-and-requeued** — dequeued and completed;
+          it holds no cache resources (``release`` ran at preemption), so
+          nothing else happens.  In particular a preempted-then-cancelled
+          request does NOT take another ``preemptions`` count — cancel is
+          its own path, never routed through :meth:`preempt`.
+        * **active (mid-ingest / mid-decode / between verify ticks)** —
+          the backend's :meth:`~repro.serving.kvcache.CacheBackend.cancel`
+          seam releases the slot's memory (paged: blocks freed, trie refs
+          dropped, reservations returned) and the slot returns to the
+          free list.  Scheduler ticks are atomic, so a "mid-verify"
+          cancel lands between ticks, when positions/truncate already
+          rolled the rejected tail back — abandoning a speculative
+          window is always safe.
+        * **unknown id** — remembered (bounded backlog) so a cancel that
+          overtakes its own request through the admission path still
+          lands; the request completes as cancelled at its first
+          ``admit`` tick.  A cancel for an id that already finished is a
+          no-op beyond that bookkeeping (the post-EOS race).
+
+        Already-streamed tokens stay valid; the completion event carries
+        ``token=None`` and ``finish_reason='cancelled'``."""
+        req = target if isinstance(target, Request) else self._find(target)
+        if req is None:
+            self._cancelled_ids[target] = True
+            while len(self._cancelled_ids) > _CANCEL_BACKLOG:
+                self._cancelled_ids.popitem(last=False)
+            return []
+        if req.finished:
+            return []
+        req.cancelled = True
+        return [self._finish_empty(req, "cancelled")]
+
+    def _find(self, rid: Any) -> Optional[Request]:
+        for r in self.slots:
+            if r is not None and r.id == rid:
+                return r
+        for r in self.waiting:
+            if r.id == rid:
+                return r
+        return None
+
+    def _finish_empty(self, req: Request, reason: str) -> TokenEvent:
+        """Terminate ``req`` without a token (cancel / missed deadline),
+        releasing whatever it holds."""
+        if req.slot >= 0 and self.slots[req.slot] is req:
+            if req in self.ingesting:
+                self.ingesting.remove(req)
+            slot = req.slot
+            self.backend.cancel(req)
+            self.slots[slot] = None
+            self.positions[slot] = 0
+            self.last_tokens[slot] = self.pad_id
+            self.free.append(slot)
+            req.slot = -1
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        req.finished = True
+        req.finish_reason = reason
+        self.stats["completed"] += 1
+        key = "requests_cancelled" if reason == "cancelled" \
+            else "deadline_missed"
+        self.stats[key] += 1
+        self._trace(f"serve.{key}", self.stats[key])
+        return TokenEvent(req, None, len(req.tokens), True)
+
+    def _lifecycle_sweep(self) -> List[TokenEvent]:
+        """Complete pending cancellations and expire missed deadlines —
+        runs at the top of every :meth:`admit` tick."""
+        events: List[TokenEvent] = []
+        for req in [r for r in self.waiting if r.cancelled]:
+            events.append(self._finish_empty(req, "cancelled"))
+        if not self._has_slo:
+            return events
+        now = self.clock()
+        live = [r for r in self.waiting] + \
+               [r for r in self.slots if r is not None]
+        for req in live:
+            if req.finished:
+                continue
+            missed = (req.deadline is not None and now >= req.deadline) \
+                or (req.first_token_at is None
+                    and req.ttft_deadline is not None
+                    and now >= req.ttft_deadline)
+            if missed:
+                events.append(self._finish_empty(req, "deadline"))
+        return events
+
+    def _slo_preempt(self) -> bool:
+        """SLO-aware admission: when no slot is free, a waiting request
+        with a TTFT target may preempt a strictly-lower-priority active
+        request (lowest priority, youngest arrival — same victim rule as
+        cache pressure).  Equal priority never preempts, so plain
+        priority admission keeps its no-preemption behaviour."""
+        if self.free or not self.waiting:
+            return bool(self.free)
+        head = self.waiting[0]
+        if head.ttft_deadline is None:
+            return False
+        candidates = [r for r in self.slots if r is not None]
+        if not candidates:
+            return False
+        victim = min(candidates, key=lambda r: (r.priority, -r.arrival))
+        if victim.priority >= head.priority:
+            return False
+        self._preempt(victim)
+        return True
 
     # -- admission + chunked prefill --------------------------------------
     def admit(self) -> List[TokenEvent]:
@@ -251,13 +438,21 @@ class Scheduler:
         (dynamic prefill batching; padding rows are row-independent).
         Otherwise each newly-admitted request ingests its first chunk
         immediately — one at a time, so a request can share prefix
-        blocks registered by the one admitted just before it."""
-        events: List[TokenEvent] = []
+        blocks registered by the one admitted just before it.
+
+        Before admission the tick sweeps lifecycle state: pending
+        cancellations complete (resources released), expired deadlines
+        and missed TTFT targets terminate their requests, and a waiting
+        request with a TTFT target may preempt a strictly-lower-priority
+        active request when no slot is free (SLO-aware admission — the
+        deadline feeds the same priority+preemption machinery pressure
+        uses)."""
+        events: List[TokenEvent] = self._lifecycle_sweep()
         # continue in-flight chunked ingests first (FIFO fairness)
         for req in list(self.ingesting):
             events.extend(self._ingest_tick(req))
         group: List[Request] = []
-        while self.waiting and self.free:
+        while self.waiting and (self.free or self._slo_preempt()):
             req = self.waiting[0]
             if not self.backend.can_admit(req, req.seq, self.chunk):
                 break
@@ -513,6 +708,10 @@ class Scheduler:
         req.tokens.append(token)
         self.last_tokens[req.slot] = token
         index = len(req.tokens) - 1
+        if req.first_token_at is None:
+            req.first_token_at = self.clock()
+            self._trace("serve.ttft_ms", int(
+                (req.first_token_at - req.submitted_at) * 1e3))
         if req.eos_id is not None and token == req.eos_id:
             req.finished, req.finish_reason = True, "eos"
             self.stats["evictions_eos"] += 1

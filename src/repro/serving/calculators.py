@@ -30,7 +30,7 @@ from ..core.calculator import Calculator, CalculatorContext
 from ..core.contract import AnyType, contract
 from ..core.registry import register_calculator
 from ..core.timestamp import Timestamp
-from .batching import Scheduler, TokenEvent
+from .batching import DeadlineExceeded, Scheduler, TokenEvent
 from .kvcache.backend import make_backend
 
 
@@ -128,16 +128,29 @@ class ContinuousBatchCalculator(Calculator):
     Inputs:
         REQUEST  — admitted request packets
                    ({'tokens', 'id', 'max_new_tokens'?, 'eos_id'?,
-                     'priority'?})
+                     'priority'?, 'deadline'?, 'ttft_deadline'?})
+        CONTROL  — optional out-of-band control packets.  NOT routed
+                   through the flow limiter: a cancel must reach the
+                   scheduler even when the admission queue is full
+                   (that is exactly when clients give up).
+                   {'op': 'cancel', 'id': request-id} cancels at any
+                   lifecycle point; unknown ids are remembered so a
+                   cancel racing ahead of its own queued REQUEST still
+                   lands (and a cancel for an already-finished id — the
+                   post-EOS race — is a no-op).
         TICK     — self-loopback (back edge): each tick packet drives one
                    admission round + one decode step.  The graph scheduler
                    interleaves REQUEST packets between ticks, which is what
                    lets new requests join the running batch.
     Outputs:
         TOKEN    — one packet per generated token
-                   {'id', 'token', 'index', 'finished'}
+                   {'id', 'token', 'index', 'finished'} (``token`` is
+                   None on a token-less completion: cancelled or missed
+                   deadline — ``finish_reason`` says which)
         RESPONSE — one packet per finished request
                    {'id', 'tokens': np int32 [n], 'finish_reason'}
+                   (emitted for cancelled/expired requests too, so the
+                   FINISHED loopback always returns limiter budget)
         TICK_OUT — loop back to TICK while work remains
     Side packets:
         engine   — an LLMEngine (pin this node to a dedicated executor).
@@ -164,6 +177,7 @@ class ContinuousBatchCalculator(Calculator):
 
     CONTRACT = (contract()
                 .add_input("REQUEST", AnyType)
+                .add_input("CONTROL", AnyType, optional=True)
                 .add_input("TICK", AnyType, optional=True)
                 .add_output("TOKEN")
                 .add_output("RESPONSE")
@@ -218,7 +232,26 @@ class ContinuousBatchCalculator(Calculator):
     def process(self, ctx: CalculatorContext) -> None:
         req = ctx.inputs["REQUEST"]
         if not req.is_empty():
-            self.sched.submit(req.payload)
+            try:
+                self.sched.submit(req.payload)
+            except DeadlineExceeded:
+                # A relative deadline that expired while the request sat
+                # in the admission queue: not the submitter's error (they
+                # validated at THEIR submit time), so complete it as
+                # deadline_missed instead of erroring the whole graph.
+                self.sched.stats["deadline_missed"] += 1
+                rid = req.payload.get("id")
+                self._emit(ctx, "TOKEN", {
+                    "id": rid, "token": None, "index": 0,
+                    "finished": True, "finish_reason": "deadline"})
+                self._emit(ctx, "RESPONSE", {
+                    "id": rid, "tokens": np.zeros(0, np.int32),
+                    "finish_reason": "deadline"})
+        ctrl = ctx.inputs["CONTROL"]
+        if not ctrl.is_empty():
+            msg = ctrl.payload
+            if msg.get("op") == "cancel":
+                self._emit_events(ctx, self.sched.cancel(msg.get("id")))
         tick = ctx.inputs["TICK"]
         if not tick.is_empty():
             self._tick_pending = False

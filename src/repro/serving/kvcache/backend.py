@@ -108,6 +108,19 @@ class CacheBackend:
         """Return every resource ``acquire``/``ingest``/``grow`` took —
         called on eviction AND on preemption."""
 
+    def cancel(self, req) -> None:
+        """Abandon ``req`` mid-flight (client disconnect / missed
+        deadline): the cancel seam next to ``verify``/``truncate``.
+
+        The base behaviour is exactly :meth:`release` — blocks freed,
+        trie refs dropped, reservations returned — because scheduler
+        ticks are atomic: a cancel always lands between ticks, when a
+        speculative window has already been verified and truncated, so
+        there is never half-written state to unwind.  A backend with
+        asynchronous device work would override this to also fence or
+        abandon in-flight operations for the slot."""
+        self.release(req)
+
     # -- prompt ingestion -----------------------------------------------
     def align_chunk(self, chunk: int) -> int:
         return int(chunk)

@@ -11,7 +11,8 @@ Continuous-batching pipeline (:func:`build_continuous_serving_graph`):
 
     requests -> FlowLimiter -> ContinuousBatch -+-> tokens
                      ^              ^    |      +-> responses
-                     |              +-tick loop      |
+    control ---------|--------------+    |           |
+    (cancel)         |              +-tick loop      |
                      +--------- FINISHED loopback ---+
 
 The flow limiter bounds in-flight requests so bursts do not queue unbounded
@@ -111,6 +112,9 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
         max_in_flight = 2 * num_slots
     b = GraphBuilder(num_threads=4, enable_tracer=enable_tracer)
     requests = b.input("requests")
+    # control bypasses the flow limiter on purpose: a cancel must reach
+    # the scheduler even (especially) when the admission queue is full
+    control = b.input("control")
     engine_sp = b.side_input("engine")
     b.executor("inference", 1)
 
@@ -134,6 +138,7 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     engine = b.add_node(
         "ContinuousBatchCalculator", name="engine",
         inputs={"REQUEST": limiter.out("OUT", name="admitted"),
+                "CONTROL": control,
                 "TICK": tick},
         side_inputs={"engine": engine_sp},
         options=engine_opts,

@@ -27,26 +27,38 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
-from typing import Any, Dict, Iterator, List, Optional
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
 from ..core.graph import Graph, OutputStreamPoller
+from .batching import DeadlineExceeded
 from .engine import LLMEngine
 from .kvcache.backend import max_request_tokens
 from .pipeline import build_continuous_serving_graph
 
 
 class RequestHandle:
-    """Client-side handle to one in-flight generation request."""
+    """Client-side handle to one in-flight generation request.
+
+    A request can end without a final token: cancellation
+    (:meth:`cancel` / server-side disconnect) or a missed deadline.
+    :meth:`stream` then simply ends and :meth:`result` returns the
+    tokens generated so far — check :attr:`finish_reason`
+    (``"cancelled"`` / ``"deadline"`` vs ``"eos"`` / ``"length"``)."""
 
     _END = object()
 
-    def __init__(self, request_id: Any):
+    def __init__(self, request_id: Any, server: "GraphServer" = None):
         self.id = request_id
+        self._server = server
         self._events: "queue.Queue" = queue.Queue()
         self._done = threading.Event()
+        self._mutex = threading.Lock()
         self._tokens: List[int] = []
+        self._listeners: List[Callable[[Optional[int], bool, str],
+                                       None]] = []
         self._result: Optional[np.ndarray] = None
         self._finish_reason = ""
         self._error: Optional[BaseException] = None
@@ -54,20 +66,48 @@ class RequestHandle:
     # -- fed by the server's dispatcher thread (one thread: the TOKEN
     # stream is the single source of truth, so tokens and completion can
     # never be observed out of order) ----------------------------------
-    def _on_token(self, token: int, finished: bool, reason: str) -> None:
-        self._tokens.append(token)
-        self._events.put(token)
-        if finished:
-            self._result = np.asarray(self._tokens, np.int32)
-            self._finish_reason = reason
-            self._events.put(self._END)
-            self._done.set()
+    def _on_token(self, token: Optional[int], finished: bool,
+                  reason: str) -> None:
+        with self._mutex:
+            if token is not None:
+                self._tokens.append(token)
+                self._events.put(token)
+            if finished:
+                self._result = np.asarray(self._tokens, np.int32)
+                self._finish_reason = reason
+                self._events.put(self._END)
+                self._done.set()
+            for fn in self._listeners:
+                fn(token, finished, reason)
 
     def _on_error(self, err: BaseException) -> None:
-        if not self._done.is_set():
+        with self._mutex:
+            if self._done.is_set():
+                return
             self._error = err
             self._events.put(self._END)
             self._done.set()
+            for fn in self._listeners:
+                fn(None, True, "error")
+
+    def add_listener(self, fn: Callable[[Optional[int], bool, str],
+                                        None]) -> None:
+        """Register ``fn(token, finished, reason)`` to be called for
+        every event on this request (from the server's dispatcher
+        thread — keep it non-blocking, e.g. ``call_soon_threadsafe``).
+        Events that arrived before registration are replayed first, so a
+        listener attached after :meth:`GraphServer.submit` returns never
+        misses a token; a replayed completion arrives as a token-less
+        ``(None, True, reason)`` event."""
+        with self._mutex:
+            for t in self._tokens:
+                fn(t, False, "")
+            if self._done.is_set():
+                fn(None, True,
+                   "error" if self._error is not None
+                   else self._finish_reason)
+                return
+            self._listeners.append(fn)
 
     # -- client API ----------------------------------------------------
     def stream(self, timeout: Optional[float] = 120.0) -> Iterator[int]:
@@ -96,6 +136,14 @@ class RequestHandle:
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def cancel(self) -> bool:
+        """Ask the server to cancel this request (idempotent; safe after
+        completion — the post-EOS race is a no-op).  Returns True if the
+        request was still pending when the cancel was sent."""
+        if self._server is None or self._done.is_set():
+            return False
+        return self._server.cancel(self.id)
 
 
 class GraphServer:
@@ -164,6 +212,7 @@ class GraphServer:
         self._handles: Dict[Any, RequestHandle] = {}
         self._lock = threading.Lock()
         self._ts = itertools.count()
+        self._ctrl_ts = itertools.count()
         self._auto_id = itertools.count()
         self._closed = False
         self._final_stats: Dict[str, Any] = {}
@@ -179,6 +228,8 @@ class GraphServer:
     def submit(self, tokens, max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None, priority: int = 0,
                speculate_k: Optional[int] = None,
+               deadline_ms: Optional[float] = None,
+               ttft_ms: Optional[float] = None,
                request_id: Any = None) -> RequestHandle:
         """Enqueue one generation request; returns immediately.
 
@@ -189,11 +240,37 @@ class GraphServer:
         the server default; 0 disables speculation for this request —
         see docs/SPECULATIVE.md).
 
+        ``deadline_ms`` / ``ttft_ms``: SLO budgets relative to this call
+        — the whole request / the first token must land within that many
+        milliseconds or the request is terminated with
+        ``finish_reason="deadline"`` (tokens streamed so far stay
+        valid).  A TTFT target also lets the request preempt a
+        strictly-lower-priority active one when no slot is free
+        (docs/FRONTEND.md).  A non-positive budget raises
+        :class:`DeadlineExceeded` here, client-side; the graph payload
+        carries the *absolute* times, so a budget that expires while the
+        request sits in the admission queue becomes a ``deadline``
+        completion, never a graph error.
+
         Invalid requests are rejected here, client-side — an error thrown
         inside a graph node would terminate the whole run.  The check
         mirrors ``Scheduler.submit``: the cap is the backend's REAL
         capacity (paged: arena blocks, not just engine max_len)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
+        slo: Dict[str, float] = {}
+        now = None
+        for key, rel in (("deadline", deadline_ms),
+                         ("ttft_deadline", ttft_ms)):
+            if rel is None:
+                continue
+            rel = float(rel)
+            if rel <= 0:
+                raise DeadlineExceeded(
+                    f"request {request_id!r}: "
+                    f"{'deadline_ms' if key == 'deadline' else 'ttft_ms'}"
+                    f"={rel:g} is already expired at submit")
+            now = time.monotonic() if now is None else now
+            slo[key] = now + rel / 1e3
         if speculate_k is not None:
             if int(speculate_k) < 0:
                 raise ValueError(f"speculate_k must be >= 0, "
@@ -224,9 +301,10 @@ class GraphServer:
                 request_id = f"req-{next(self._auto_id)}"
             if request_id in self._handles:
                 raise ValueError(f"duplicate request id {request_id!r}")
-            handle = RequestHandle(request_id)
+            handle = RequestHandle(request_id, self)
             self._handles[request_id] = handle
             payload = {"tokens": tokens, "id": request_id}
+            payload.update(slo)
             if max_new_tokens is not None:
                 payload["max_new_tokens"] = int(max_new_tokens)
             if eos_id is not None:
@@ -248,6 +326,29 @@ class GraphServer:
                  timeout: Optional[float] = 120.0) -> np.ndarray:
         """Blocking convenience wrapper: submit + result."""
         return self.submit(tokens, max_new_tokens, eos_id).result(timeout)
+
+    def cancel(self, request_id: Any) -> bool:
+        """Cancel a request at any lifecycle point (queued in the
+        limiter, waiting for a slot, mid-prefill-chunk, mid-decode,
+        between speculative verify ticks).  The cancel travels on the
+        graph's ``control`` input stream, which bypasses the flow
+        limiter — it gets through even (especially) when the admission
+        queue is full.  The request's handle completes with
+        ``finish_reason="cancelled"`` and whatever tokens were already
+        streamed; all of its cache memory (slot row / blocks / trie
+        refs) is released.  Idempotent; cancelling an id that already
+        finished (the post-EOS race) is a no-op.  Returns True if the
+        request was still pending when the cancel was sent."""
+        with self._lock:
+            if self._closed:
+                return False
+            pending = request_id in self._handles
+            # under the lock for the same timestamp-monotonicity reason
+            # as submit (the control edge is unbounded: never blocks)
+            self.graph.add_packet_to_input_stream(
+                "control", {"op": "cancel", "id": request_id},
+                next(self._ctrl_ts))
+        return pending
 
     def stats(self) -> Dict[str, Any]:
         """Limiter + scheduler counters (live)."""

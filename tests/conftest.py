@@ -1,0 +1,60 @@
+"""Shared fixtures: the GraphServer leak check.
+
+Every test that drives a :class:`repro.serving.GraphServer` implicitly
+asserts, at server close, that the cache arena returned to baseline:
+
+* every slot is back on the free list,
+* (paged) zero blocks in use, zero reserved, pool invariants hold,
+* (paged, prefix sharing) the prefix index holds zero registered chains.
+
+The check is autouse via a ``GraphServer.close`` wrapper — no test has
+to opt in, so every current and future server test (continuous
+batching, speculative, frontend, integration) proves the
+no-leak property for free, including every cancellation / deadline /
+preemption path it happens to exercise.
+"""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def graphserver_leak_check(monkeypatch):
+    from repro.serving.server import GraphServer
+
+    real_close = GraphServer.close
+    leaks = []
+
+    def checked_close(self, timeout=300.0):
+        first_close = not self._closed
+        stats = real_close(self, timeout=timeout)
+        if not first_close:
+            return stats
+        for node in self.graph.nodes:
+            if node.name != "engine":
+                continue
+            sched = getattr(node.calculator, "sched", None)
+            if sched is None:
+                continue
+            if sorted(sched.free) != list(range(sched.num_slots)):
+                leaks.append(f"slots leaked: free={sorted(sched.free)} "
+                             f"of {sched.num_slots}")
+            pool = sched.pool
+            if pool is not None:
+                try:
+                    pool.check_invariants()
+                except Exception as e:          # noqa: BLE001
+                    leaks.append(f"pool invariants broken: {e}")
+                if pool.blocks_in_use != 0:
+                    leaks.append(f"{pool.blocks_in_use} blocks still "
+                                 f"in use after close")
+                if pool.reserved_blocks != 0:
+                    leaks.append(f"{pool.reserved_blocks} blocks still "
+                                 f"reserved after close")
+            if sched.prefix is not None and len(sched.prefix) != 0:
+                leaks.append(f"prefix index still holds "
+                             f"{len(sched.prefix)} chains after close")
+        return stats
+
+    monkeypatch.setattr(GraphServer, "close", checked_close)
+    yield
+    assert not leaks, "GraphServer leak check failed:\n  " + \
+        "\n  ".join(leaks)

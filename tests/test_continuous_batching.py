@@ -9,6 +9,10 @@ schedule, chunk boundary, and preemption.  Prefill groups only
 equal-length prompts (no padding), every decode-batch row op is
 row-independent, chunk/prefix extension reproduces the cold prefill's
 K/V, and a preempted request deterministically replays its own history.
+
+Every GraphServer test in this file also runs under the autouse
+leak-check fixture (tests/conftest.py): at server close, slots, blocks,
+reservations and prefix-trie refs must all be back at baseline.
 """
 import dataclasses
 import threading

@@ -1,0 +1,604 @@
+"""The serving front door: cancellation-point sweeps, deadline/SLO
+scheduling, the asyncio streaming frontend, and retry/timeout policy.
+
+The load-bearing invariants:
+
+* cancelling a request at ANY lifecycle point — queued, waiting,
+  mid-chunked-prefill, mid-decode, between speculative verify ticks,
+  after EOS (the race) — frees every resource it held (slot, blocks,
+  trie refs, reservations) and leaves every *surviving* request's
+  output BIT-IDENTICAL to an uncancelled run;
+* a request's deadline / TTFT target terminates it (``finish_reason ==
+  "deadline"``) without perturbing survivors, and an already-expired
+  relative deadline is rejected at submit with a typed error;
+* the asyncio frontend propagates client disconnects into the
+  scheduler (nothing keeps decoding for a client that left) and its
+  policy bounds every await (pytest-timeout never has to fire).
+
+A hypothesis fuzz of cancellation x preemption x speculation lives in
+test_frontend_properties.py (importorskip-guarded); the deterministic
+seeded sweep here keeps tier-1 covering the same oracles.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401
+from repro.configs import get_config
+from repro.serving import (AsyncFrontend, DeadlineExceeded, GraphServer,
+                           LLMEngine, PagedBackend, Policy, RequestTimeout,
+                           Scheduler, SlotBackend)
+
+
+def small_cfg(arch="minicpm_2b"):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=128,
+                               vocab_size=512)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return LLMEngine(small_cfg(), max_len=64, seed=7)
+
+
+def make_prompts(rng, lengths):
+    return [rng.randint(0, 512, size=L).astype(np.int32) for L in lengths]
+
+
+def make_backend(engine, kind, num_slots, **kw):
+    if kind == "paged":
+        kw.setdefault("num_blocks", 65)
+        kw.setdefault("block_size", 8)
+        return PagedBackend(engine, num_slots, **kw)
+    return SlotBackend(engine, num_slots)
+
+
+def drain(sched, got=None, reasons=None):
+    got = {} if got is None else got
+    while sched.has_work():
+        for ev in sched.admit() + sched.step():
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+                if reasons is not None:
+                    reasons[ev.request.id] = ev.request.finish_reason
+    return got
+
+
+def assert_baseline(sched):
+    """The no-leak oracle: slots, blocks, reservations and trie refs all
+    back where they started."""
+    assert sorted(sched.free) == list(range(sched.num_slots))
+    if sched.pool is not None:
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+        assert sched.pool.reserved_blocks == 0
+    if sched.prefix is not None:
+        assert len(sched.prefix) == 0
+
+
+class TestCancellationPoints:
+    """Deterministic sweep: cancel at every lifecycle point, on both
+    backends; survivors bit-identical, arena back to baseline."""
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cancel_while_queued(self, engine, kind):
+        rng = np.random.RandomState(10)
+        keep, victim = make_prompts(rng, [7, 9])
+        ref = engine.generate(keep[None], max_new_tokens=6)[0]
+        sched = Scheduler(make_backend(engine, kind, 1), max_new_tokens=6)
+        sched.submit({"tokens": keep, "id": "keep"})
+        sched.submit({"tokens": victim, "id": "victim"})
+        sched.admit()                       # keep takes the only slot
+        assert sched.waiting and sched.waiting[0].id == "victim"
+        evs = sched.cancel("victim")
+        assert [(e.request.id, e.token, e.finished) for e in evs] == \
+            [("victim", None, True)]
+        assert evs[0].request.finish_reason == "cancelled"
+        got = drain(sched)
+        np.testing.assert_array_equal(got["keep"], ref)
+        assert sched.stats["requests_cancelled"] == 1
+        assert sched.stats["completed"] == 2
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cancel_mid_chunked_prefill(self, engine, kind):
+        rng = np.random.RandomState(11)
+        victim, keep = make_prompts(rng, [30, 8])
+        ref = engine.generate(keep[None], max_new_tokens=5)[0]
+        sched = Scheduler(make_backend(engine, kind, 2), max_new_tokens=5,
+                          chunk_size=8)
+        sched.submit({"tokens": victim, "id": "victim"})
+        sched.submit({"tokens": keep, "id": "keep"})
+        sched.admit()                       # one chunk each
+        vreq = next(r for r in sched.ingesting if r.id == "victim")
+        assert 0 < vreq.ingested < victim.size   # genuinely mid-prefill
+        sched.cancel("victim")
+        assert vreq.finished and vreq.finish_reason == "cancelled"
+        assert vreq not in sched.ingesting and vreq.slot == -1
+        got = drain(sched)
+        np.testing.assert_array_equal(got["keep"], ref)
+        assert sched.stats["requests_cancelled"] == 1
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cancel_mid_decode_keeps_streamed_prefix(self, engine, kind):
+        rng = np.random.RandomState(12)
+        victim, keep = make_prompts(rng, [6, 11])
+        ref_v = engine.generate(victim[None], max_new_tokens=8)[0]
+        ref_k = engine.generate(keep[None], max_new_tokens=8)[0]
+        sched = Scheduler(make_backend(engine, kind, 2), max_new_tokens=8)
+        vreq = sched.submit({"tokens": victim, "id": "victim"})
+        sched.submit({"tokens": keep, "id": "keep"})
+        sched.admit()
+        sched.step()
+        sched.step()                        # victim mid-decode, 3 tokens
+        assert vreq.slot >= 0 and not vreq.finished
+        n_streamed = len(vreq.tokens)
+        evs = sched.cancel(vreq)
+        got = {e.request.id: np.asarray(e.request.tokens, np.int32)
+               for e in evs if e.finished}
+        drain(sched, got)
+        # already-streamed tokens stay valid: an exact prefix of the
+        # uncancelled reference
+        np.testing.assert_array_equal(got["victim"],
+                                      ref_v[:n_streamed])
+        np.testing.assert_array_equal(got["keep"], ref_k)
+        assert sched.stats["requests_cancelled"] == 1
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cancel_mid_verify_window(self, engine, kind):
+        """Cancel between speculative verify ticks: the abandoned window
+        must not perturb the surviving speculating request."""
+        rng = np.random.RandomState(13)
+        victim, keep = make_prompts(rng, [16, 15])
+        ref_k = engine.generate(keep[None], max_new_tokens=10)[0]
+        # injected draft_fn: every decode tick is a verify tick, no
+        # dependence on prompt-lookup finding an n-gram
+        sched = Scheduler(make_backend(engine, kind, 2),
+                          max_new_tokens=10, speculate_k=4,
+                          draft_fn=lambda ctx, k: (ctx[-k:] + 1) % 512)
+        vreq = sched.submit({"tokens": victim, "id": "victim"})
+        sched.submit({"tokens": keep, "id": "keep"})
+        sched.admit()
+        sched.step()                        # one verify tick done
+        assert sched.stats["spec_steps"] >= 1
+        if vreq.finished:                   # spec burst finished it early
+            pytest.skip("victim finished before a mid-verify cancel "
+                        "point existed")
+        sched.cancel("victim")
+        got = drain(sched)
+        np.testing.assert_array_equal(got["keep"], ref_k)
+        assert sched.stats["requests_cancelled"] == 1
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cancel_post_eos_race(self, engine, kind):
+        """A cancel that loses the race against normal completion is a
+        no-op: no double completion, no stat pollution."""
+        rng = np.random.RandomState(14)
+        p = make_prompts(rng, [9])[0]
+        ref = engine.generate(p[None], max_new_tokens=4)[0]
+        sched = Scheduler(make_backend(engine, kind, 2), max_new_tokens=4)
+        sched.submit({"tokens": p, "id": "r"})
+        got = drain(sched)
+        np.testing.assert_array_equal(got["r"], ref)
+        completed = sched.stats["completed"]
+        assert sched.cancel("r") == []      # id now unknown: backlog only
+        assert sched.stats["requests_cancelled"] == 0
+        assert sched.stats["completed"] == completed
+        assert_baseline(sched)
+
+    def test_cancel_overtaking_its_request(self, engine):
+        """A cancel that arrives before its own request (CONTROL bypasses
+        the flow limiter) still lands: the request dies at admission."""
+        sched = Scheduler(make_backend(engine, "paged", 2),
+                          max_new_tokens=4)
+        assert sched.cancel("early") == []
+        req = sched.submit({"tokens": [1, 2, 3], "id": "early"})
+        assert req.cancelled
+        evs = sched.admit()
+        assert req.finished and req.finish_reason == "cancelled"
+        assert any(e.request.id == "early" and e.finished for e in evs)
+        assert sched.stats["requests_cancelled"] == 1
+        assert_baseline(sched)
+
+    def test_cancel_backlog_is_bounded(self, engine):
+        from repro.serving.batching import _CANCEL_BACKLOG
+        sched = Scheduler(make_backend(engine, "slot", 2))
+        for i in range(_CANCEL_BACKLOG + 100):
+            sched.cancel(f"ghost-{i}")
+        assert len(sched._cancelled_ids) == _CANCEL_BACKLOG
+        # oldest aged out, newest kept
+        assert f"ghost-0" not in sched._cancelled_ids
+        assert f"ghost-{_CANCEL_BACKLOG + 99}" in sched._cancelled_ids
+
+    def test_preempted_then_cancelled_not_double_counted(self, engine):
+        """Satellite: cancelling a preempted (requeued) request must not
+        take another `preemptions` count — and must count exactly once
+        in `requests_cancelled` and `completed`."""
+        rng = np.random.RandomState(15)
+        victim, keep = make_prompts(rng, [8, 8])
+        ref = engine.generate(keep[None], max_new_tokens=6)[0]
+        sched = Scheduler(make_backend(engine, "paged", 2),
+                          max_new_tokens=6)
+        vreq = sched.submit({"tokens": victim, "id": "victim"})
+        sched.submit({"tokens": keep, "id": "keep"})
+        sched.admit()
+        sched.step()
+        sched.preempt(vreq)                 # forced: victim back to queue
+        assert sched.stats["preemptions"] == 1 and vreq.slot == -1
+        sched.cancel("victim")
+        got = drain(sched)
+        np.testing.assert_array_equal(got["keep"], ref)
+        assert sched.stats["preemptions"] == 1      # NOT double-counted
+        assert sched.stats["requests_cancelled"] == 1
+        assert sched.stats["completed"] == 2
+        assert_baseline(sched)
+
+
+class TestDeadlines:
+    """SLO scheduling, on an injected fake clock — fully deterministic."""
+
+    def _sched(self, engine, num_slots=1, **kw):
+        t = [0.0]
+        sched = Scheduler(make_backend(engine, "paged", num_slots),
+                          max_new_tokens=6, clock=lambda: t[0], **kw)
+        return sched, t
+
+    def test_expired_relative_deadline_rejected_typed(self, engine):
+        sched, _ = self._sched(engine)
+        for field in ("deadline_ms", "ttft_ms"):
+            with pytest.raises(DeadlineExceeded):
+                sched.submit({"tokens": [1, 2], "id": "x", field: 0})
+            with pytest.raises(DeadlineExceeded):
+                sched.submit({"tokens": [1, 2], "id": "x", field: -3.5})
+        assert sched.stats["submitted"] == 0    # rejected before intake
+        # DeadlineExceeded is a ValueError: existing except-ValueError
+        # rejection handling keeps working unchanged
+        assert issubclass(DeadlineExceeded, ValueError)
+
+    def test_tight_ttft_preempts_lower_priority_decoder(self, engine):
+        """Satellite: a waiting request with a TTFT target and higher
+        priority evicts an active lower-priority decoder when no slot is
+        free; plain priority (no TTFT) still never preempts."""
+        rng = np.random.RandomState(16)
+        lo_p, hi_p = make_prompts(rng, [6, 7])
+        sched, _ = self._sched(engine, num_slots=1)
+        lo = sched.submit({"tokens": lo_p, "id": "lo", "priority": 0})
+        sched.admit()
+        sched.step()                        # lo is mid-decode
+        hi = sched.submit({"tokens": hi_p, "id": "hi", "priority": 2,
+                           "ttft_ms": 10_000})
+        sched.admit()
+        assert hi.slot >= 0                 # admitted via SLO preemption
+        assert lo.slot == -1 and lo.preemptions == 1
+        assert sched.stats["preemptions"] == 1
+        got, reasons = {}, {}
+        drain(sched, got, reasons)
+        # both still complete exactly (preemption replays lo)
+        np.testing.assert_array_equal(
+            got["lo"], engine.generate(lo_p[None], max_new_tokens=6)[0])
+        np.testing.assert_array_equal(
+            got["hi"], engine.generate(hi_p[None], max_new_tokens=6)[0])
+        assert reasons == {"lo": "length", "hi": "length"}
+        assert_baseline(sched)
+
+    def test_ttft_without_higher_priority_does_not_preempt(self, engine):
+        rng = np.random.RandomState(17)
+        a_p, b_p = make_prompts(rng, [6, 7])
+        sched, _ = self._sched(engine, num_slots=1)
+        a = sched.submit({"tokens": a_p, "id": "a", "priority": 1})
+        sched.admit()
+        sched.step()
+        b = sched.submit({"tokens": b_p, "id": "b", "priority": 1,
+                          "ttft_ms": 10_000})
+        sched.admit()
+        assert a.slot >= 0 and b.slot == -1
+        assert sched.stats["preemptions"] == 0
+        drain(sched)
+        assert_baseline(sched)
+
+    def test_waiting_request_deadline_expires(self, engine):
+        rng = np.random.RandomState(18)
+        busy_p, late_p = make_prompts(rng, [6, 7])
+        sched, t = self._sched(engine, num_slots=1)
+        sched.submit({"tokens": busy_p, "id": "busy"})
+        sched.admit()
+        late = sched.submit({"tokens": late_p, "id": "late",
+                             "deadline_ms": 50})
+        t[0] = 0.2                          # 200ms later: budget blown
+        evs = sched.admit()
+        assert late.finished and late.finish_reason == "deadline"
+        assert any(e.request.id == "late" and e.token is None
+                   for e in evs)
+        assert sched.stats["deadline_missed"] == 1
+        drain(sched)
+        assert_baseline(sched)
+
+    def test_active_deadline_expires_mid_decode(self, engine):
+        rng = np.random.RandomState(19)
+        p = make_prompts(rng, [6])[0]
+        ref = engine.generate(p[None], max_new_tokens=6)[0]
+        sched, t = self._sched(engine, num_slots=1)
+        req = sched.submit({"tokens": p, "id": "r", "deadline_ms": 100})
+        sched.admit()
+        sched.step()                        # some tokens streamed
+        streamed = len(req.tokens)
+        assert 0 < streamed < 6
+        t[0] = 0.5
+        sched.admit()                       # sweep kills it
+        assert req.finished and req.finish_reason == "deadline"
+        # streamed prefix stays valid
+        np.testing.assert_array_equal(np.asarray(req.tokens, np.int32),
+                                      ref[:streamed])
+        assert sched.stats["deadline_missed"] == 1
+        assert_baseline(sched)
+
+    def test_ttft_target_met_is_forgotten(self, engine):
+        """Once the first token is out, a TTFT target must not kill the
+        request — only a whole-request deadline can."""
+        rng = np.random.RandomState(20)
+        p = make_prompts(rng, [6])[0]
+        sched, t = self._sched(engine, num_slots=1)
+        req = sched.submit({"tokens": p, "id": "r", "ttft_ms": 100})
+        sched.admit()                       # whole-prompt prefill: token 1
+        assert req.first_token_at is not None
+        t[0] = 10.0                         # way past the TTFT target
+        got, reasons = {}, {}
+        drain(sched, got, reasons)
+        assert reasons["r"] == "length"
+        assert len(got["r"]) == 6
+        assert sched.stats["deadline_missed"] == 0
+        assert_baseline(sched)
+
+
+class TestGraphFrontDoor:
+    """Cancellation + deadlines through the full graph (control stream,
+    flow limiter, dispatcher threads).  The autouse conftest fixture
+    additionally asserts the arena is leak-free at server close."""
+
+    def test_cancel_mid_stream_survivor_bit_identical(self, engine):
+        rng = np.random.RandomState(21)
+        v_p, k_p = make_prompts(rng, [8, 12])
+        ref_k = engine.generate(k_p[None], max_new_tokens=10)[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=10,
+                         paged=True, num_blocks=33, block_size=8) as srv:
+            # long-running victim: cancel-after-2-tokens deterministically
+            # lands while it is still mid-decode
+            hv = srv.submit(v_p, max_new_tokens=48, request_id="victim")
+            hk = srv.submit(k_p, request_id="keep")
+            it = hv.stream(timeout=60.0)
+            got_before = [next(it), next(it)]   # stream is live
+            assert hv.cancel()
+            leftover = list(it)                 # ends at the cancel
+            np.testing.assert_array_equal(hk.result(timeout=120), ref_k)
+            assert hv.result(timeout=120).tolist() == \
+                got_before + leftover
+            assert hv.finish_reason == "cancelled"
+            stats = srv.stats()["scheduler"]
+            assert stats["requests_cancelled"] == 1
+            assert stats["preemptions"] == 0
+
+    def test_cancel_unknown_id_is_noop(self, engine):
+        rng = np.random.RandomState(22)
+        p = make_prompts(rng, [7])[0]
+        ref = engine.generate(p[None], max_new_tokens=5)[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=5) as srv:
+            assert srv.cancel("never-submitted") is False
+            np.testing.assert_array_equal(srv.generate(p), ref)
+
+    def test_expired_deadline_rejected_client_side(self, engine):
+        with GraphServer(engine, num_slots=2) as srv:
+            with pytest.raises(DeadlineExceeded):
+                srv.submit([1, 2, 3], deadline_ms=0)
+            with pytest.raises(DeadlineExceeded):
+                srv.submit([1, 2, 3], ttft_ms=-1)
+        # post-close snapshot: node open/close are guaranteed to have
+        # run by then (stats() right after construction can race the
+        # engine node's open on the executor)
+        assert srv.close()["scheduler"]["submitted"] == 0
+
+    def test_deadline_missed_inside_graph(self, engine):
+        """A microscopic (but positive) TTFT budget passes client-side
+        validation, then expires in the scheduler — the graph survives
+        and concurrent work is untouched."""
+        rng = np.random.RandomState(23)
+        doomed_p, keep_p = make_prompts(rng, [8, 9])
+        ref = engine.generate(keep_p[None], max_new_tokens=6)[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=6) as srv:
+            doomed = srv.submit(doomed_p, ttft_ms=1e-6,
+                                request_id="doomed")
+            keep = srv.submit(keep_p, request_id="keep")
+            assert doomed.result(timeout=120).size == 0
+            assert doomed.finish_reason == "deadline"
+            np.testing.assert_array_equal(keep.result(timeout=120), ref)
+            assert srv.stats()["scheduler"]["deadline_missed"] == 1
+
+
+class TestAsyncFrontend:
+    """The asyncio surface.  asyncio.run inside sync tests (no plugin
+    dependency); every await inside the frontend is policy-bounded, so
+    a wedged stream fails fast instead of eating the pytest timeout."""
+
+    def test_stream_matches_reference(self, engine):
+        rng = np.random.RandomState(24)
+        prompts = make_prompts(rng, [6, 9, 6, 11])
+        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        with GraphServer(engine, num_slots=2, max_new_tokens=6) as srv:
+            front = AsyncFrontend(srv, policy=Policy(timeout_ms=120_000))
+
+            async def main():
+                outs = await asyncio.gather(
+                    *[front.generate(p) for p in prompts])
+                return outs
+
+            outs = asyncio.run(main())
+        for out, ref in zip(outs, refs):
+            np.testing.assert_array_equal(out, ref)
+
+    def test_disconnect_cancels_server_side(self, engine):
+        rng = np.random.RandomState(25)
+        v_p, k_p = make_prompts(rng, [8, 10])
+        ref_k = engine.generate(k_p[None], max_new_tokens=10)[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=10,
+                         paged=True, num_blocks=33, block_size=8) as srv:
+            front = AsyncFrontend(srv)
+
+            async def main():
+                handles = []
+                got = []
+                agen = front.stream(v_p, max_new_tokens=48,
+                                    on_handle=handles.append)
+                async for tok in agen:
+                    got.append(tok)
+                    if len(got) == 2:
+                        break               # client hangs up
+                await agen.aclose()
+                keep = await front.generate(k_p)
+                return handles[0], got, keep
+
+            handle, got, keep = asyncio.run(main())
+            assert handle.result(timeout=120) is not None
+            assert handle.finish_reason == "cancelled"
+            # the two consumed tokens are a prefix of what the server
+            # recorded for the cancelled request
+            assert handle.result().tolist()[:2] == got
+            np.testing.assert_array_equal(keep, ref_k)
+            assert srv.stats()["scheduler"]["requests_cancelled"] == 1
+
+    def test_policy_timeout_raises_and_cancels(self, engine):
+        rng = np.random.RandomState(26)
+        p = make_prompts(rng, [8])[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=16) as srv:
+            # 0.05ms: expires long before the first graph tick can land
+            front = AsyncFrontend(srv, policy=Policy(timeout_ms=0.05))
+
+            async def main():
+                handles = []
+                with pytest.raises(RequestTimeout):
+                    await front.generate(p, on_handle=handles.append)
+                return handles
+
+            handles = asyncio.run(main())
+            assert len(handles) == 1        # retries=0: one attempt
+            handles[0].result(timeout=120)  # frontend cancelled it
+            assert handles[0].finish_reason == "cancelled"
+
+    def test_policy_retries_before_first_token(self, engine):
+        rng = np.random.RandomState(27)
+        p = make_prompts(rng, [8])[0]
+        with GraphServer(engine, num_slots=2, max_new_tokens=16) as srv:
+            front = AsyncFrontend(
+                srv, policy=Policy(timeout_ms=0.05, retries=2))
+
+            async def main():
+                handles = []
+                with pytest.raises(RequestTimeout):
+                    await front.generate(p, request_id="flaky",
+                                         on_handle=handles.append)
+                return handles
+
+            handles = asyncio.run(main())
+            assert len(handles) == 3        # original + 2 retries
+            assert [h.id for h in handles] == \
+                ["flaky", "flaky~retry1", "flaky~retry2"]
+            for h in handles:
+                h.result(timeout=120)
+                assert h.finish_reason == "cancelled"
+
+    def test_expired_deadline_raises_before_submission(self, engine):
+        with GraphServer(engine, num_slots=2) as srv:
+            front = AsyncFrontend(srv)
+
+            async def main():
+                with pytest.raises(DeadlineExceeded):
+                    await front.generate([1, 2, 3], ttft_ms=0)
+
+            asyncio.run(main())
+            assert srv.stats()["scheduler"]["submitted"] == 0
+
+    def test_bad_policy_rejected(self, engine):
+        with pytest.raises(ValueError):
+            Policy(timeout_ms=0)
+        with pytest.raises(ValueError):
+            Policy(retries=-1)
+
+
+class TestDeterministicFuzz:
+    """Seeded cancellation x preemption x speculation sweep — the
+    tier-1 (hypothesis-free) twin of test_frontend_properties.py.
+    Oracles: pool invariants after every tick, arena baseline at the
+    end, survivors bit-identical, cancelled/expired requests' streamed
+    tokens are exact prefixes of their references."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_cancel_preempt_spec_interleavings(self, engine, seed):
+        rng = np.random.RandomState(100 + seed)
+        n_req = 8
+        max_new = 5
+        prompts = make_prompts(rng, rng.randint(4, 24, size=n_req))
+        refs = [engine.generate(p[None], max_new_tokens=max_new)[0]
+                for p in prompts]
+        t = [0.0]
+        sched = Scheduler(
+            make_backend(engine, "paged", 3, num_blocks=22, block_size=8),
+            max_new_tokens=max_new, chunk_size=8,
+            speculate_k=int(rng.randint(0, 4)), clock=lambda: t[0])
+        pending = list(range(n_req))
+        got, reasons = {}, {}
+
+        def flush(evs):
+            for ev in evs:
+                if ev.finished:
+                    got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                    np.int32)
+                    reasons[ev.request.id] = ev.request.finish_reason
+
+        for _ in range(400):
+            if not (sched.has_work() or pending):
+                break
+            op = rng.randint(0, 10)
+            if op <= 3 and pending:
+                i = pending.pop(0)
+                payload = {"tokens": prompts[i], "id": i,
+                           "priority": int(rng.randint(0, 3))}
+                if rng.rand() < 0.3:
+                    payload["deadline_ms"] = float(rng.randint(1, 400))
+                sched.submit(payload)
+            elif op == 4:
+                # cancel a random live (or random bogus) id
+                live = [r.id for r in sched.slots if r is not None] + \
+                       [r.id for r in sched.waiting]
+                target = (live[rng.randint(len(live))] if live
+                          and rng.rand() < 0.8 else f"bogus-{op}")
+                flush(sched.cancel(target))
+            elif op == 5:
+                holders = [r for r in sched.slots if r is not None]
+                if holders:
+                    sched.preempt(holders[rng.randint(len(holders))])
+            elif op == 6 and rng.rand() < 0.5:
+                t[0] += float(rng.rand()) * 0.2     # time marches on
+            else:
+                flush(sched.admit())
+                flush(sched.step())
+            sched.pool.check_invariants()
+        for i in pending:                   # anything the drive missed
+            sched.submit({"tokens": prompts[i], "id": i})
+        flush(drain(sched))
+
+        assert len(got) == n_req            # every request completed
+        for i in range(n_req):
+            if reasons[i] == "length":
+                np.testing.assert_array_equal(got[i], refs[i])
+            else:
+                assert reasons[i] in ("cancelled", "deadline")
+                # streamed tokens stay a bit-exact reference prefix
+                np.testing.assert_array_equal(
+                    got[i], refs[i][:len(got[i])])
+        assert sched.stats["completed"] == n_req
+        assert_baseline(sched)

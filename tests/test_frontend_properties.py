@@ -1,0 +1,153 @@
+"""Hypothesis property suite for the front door: random interleavings
+of cancellation x preemption x speculation x deadlines on the paged
+backend must (a) keep the BlockPool invariants after every operation,
+(b) return the arena to baseline (zero blocks in use, zero reserved,
+empty prefix index, all slots free) once drained, (c) leave every
+normally-finished request's output bit-identical to sequential greedy
+decode, and (d) leave every cancelled/expired request's streamed tokens
+an exact prefix of its reference.
+
+A deterministic seeded sweep of the same oracles lives in
+test_frontend.py (TestDeterministicFuzz) so tier-1 always covers them;
+this file is the exhaustive version, importorskip-guarded like the
+other property suites.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import repro.calculators  # noqa: F401
+from repro.configs import get_config
+from repro.serving import LLMEngine, PagedBackend, Scheduler
+
+MAX_LEN = 32
+
+
+def tiny_cfg():
+    cfg = get_config("minicpm_2b").reduced()
+    return dataclasses.replace(cfg, num_layers=1, d_model=64,
+                               vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return LLMEngine(tiny_cfg(), max_len=MAX_LEN, seed=11)
+
+
+_ref_cache = {}
+
+
+def reference(engine, prompt, max_new):
+    key = (prompt.tobytes(), max_new)
+    if key not in _ref_cache:
+        _ref_cache[key] = engine.generate(prompt[None],
+                                          max_new_tokens=max_new)[0]
+    return _ref_cache[key]
+
+
+# ops: 0-3 submit, 4 cancel, 5 preempt, 6 advance clock, 7-9 tick
+frontier = st.fixed_dictionaries({
+    "num_slots": st.integers(2, 4),
+    "num_blocks": st.integers(8, 20),
+    "max_new": st.integers(2, 6),
+    "chunk": st.sampled_from([None, 4, 8]),
+    "speculate_k": st.integers(0, 3),
+    "prompts": st.lists(
+        st.tuples(st.integers(1, 20),       # prompt length
+                  st.integers(0, 2),        # priority
+                  st.booleans(),            # carries a deadline?
+                  st.integers(1, 400),      # deadline budget (ms)
+                  st.integers(0, 999)),     # content seed
+        min_size=1, max_size=6),
+    "drive": st.lists(st.integers(0, 9), min_size=4, max_size=60),
+    "choices": st.lists(st.integers(0, 9999), min_size=64, max_size=64),
+})
+
+
+@settings(max_examples=25, deadline=None)
+@given(frontier)
+def test_cancel_preempt_spec_interleavings(engine, plan):
+    max_new = plan["max_new"]
+    backend = PagedBackend(engine, plan["num_slots"],
+                           num_blocks=plan["num_blocks"], block_size=4)
+    cap = backend.max_request_tokens()
+    entries = [(L, prio, has_dl, dl, seed)
+               for L, prio, has_dl, dl, seed in plan["prompts"]
+               if L + max_new <= min(MAX_LEN, cap)]
+    if not entries:
+        return
+    prompts = [np.random.RandomState(seed).randint(0, 256, size=L)
+               .astype(np.int32) for L, _, _, _, seed in entries]
+    refs = [reference(engine, p, max_new) for p in prompts]
+
+    t = [0.0]
+    sched = Scheduler(backend, max_new_tokens=max_new,
+                      chunk_size=plan["chunk"],
+                      speculate_k=plan["speculate_k"],
+                      clock=lambda: t[0])
+    choices = list(plan["choices"])
+
+    def pick(seq):
+        if not choices:
+            return seq[0]
+        return seq[choices.pop() % len(seq)]
+
+    pending = list(range(len(prompts)))
+    got, reasons = {}, {}
+
+    def flush(evs):
+        for ev in evs:
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+                reasons[ev.request.id] = ev.request.finish_reason
+
+    def submit(i):
+        L, prio, has_dl, dl, _ = entries[i]
+        payload = {"tokens": prompts[i], "id": i, "priority": prio}
+        if has_dl:
+            payload["deadline_ms"] = float(dl)
+        sched.submit(payload)
+
+    def tick(op):
+        if op <= 3 and pending:
+            submit(pending.pop(0))
+        elif op == 4:
+            live = [r.id for r in sched.slots if r is not None] + \
+                   [r.id for r in sched.waiting]
+            flush(sched.cancel(pick(live) if live else "bogus"))
+        elif op == 5:
+            holders = [r for r in sched.slots if r is not None]
+            if holders:
+                sched.preempt(pick(holders))
+        elif op == 6:
+            t[0] += (pick(range(10)) + 1) / 50.0    # 20..200 ms
+        else:
+            flush(sched.admit())
+            flush(sched.step())
+        sched.pool.check_invariants()
+
+    for op in plan["drive"]:
+        tick(op)
+    for i in pending:
+        submit(i)
+    while sched.has_work():
+        flush(sched.admit())
+        flush(sched.step())
+
+    assert len(got) == len(prompts)
+    for i, ref in enumerate(refs):
+        if reasons[i] == "length":
+            np.testing.assert_array_equal(got[i], ref)
+        else:
+            assert reasons[i] in ("cancelled", "deadline")
+            np.testing.assert_array_equal(got[i], ref[:len(got[i])])
+    sched.pool.check_invariants()
+    assert sched.pool.blocks_in_use == 0
+    assert sched.pool.reserved_blocks == 0
+    assert len(sched.prefix) == 0
+    assert sorted(sched.free) == list(range(sched.num_slots))

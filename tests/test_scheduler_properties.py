@@ -129,3 +129,98 @@ def test_random_schedules_bit_identical(engine, sched_def):
         assert sched.pool.reserved_blocks == 0
         assert len(sched.prefix) == 0
     assert sorted(sched.free) == list(range(sched.num_slots))
+
+
+# -- the deadline dimension -------------------------------------------
+# Random SLO budgets (whole-request deadlines and TTFT targets) on a
+# fake clock that only advances when the schedule says so: every
+# deadline kill is deterministic, survivors stay bit-identical, nothing
+# leaks, and a preempted-then-expired request is not double-counted.
+
+deadline_schedule = st.fixed_dictionaries({
+    "kind": st.sampled_from(["slot", "paged"]),
+    "num_slots": st.integers(1, 3),
+    "num_blocks": st.integers(8, 20),
+    "max_new": st.integers(2, 5),
+    "prompts": st.lists(
+        st.tuples(st.integers(1, 16),               # prompt length
+                  st.integers(0, 2),                # priority
+                  st.sampled_from([None, "deadline_ms", "ttft_ms"]),
+                  st.integers(1, 500),              # budget (ms)
+                  st.integers(0, 999)),             # content seed
+        min_size=1, max_size=5),
+    "drive": st.lists(st.integers(0, 9), min_size=4, max_size=40),
+})
+
+
+@settings(max_examples=25, deadline=None)
+@given(deadline_schedule)
+def test_deadline_schedules_exact_and_leak_free(engine, sched_def):
+    max_new = sched_def["max_new"]
+    if sched_def["kind"] == "paged":
+        backend = PagedBackend(engine, sched_def["num_slots"],
+                               num_blocks=sched_def["num_blocks"],
+                               block_size=4)
+    else:
+        backend = SlotBackend(engine, sched_def["num_slots"])
+    cap = backend.max_request_tokens()
+    entries = [e for e in sched_def["prompts"]
+               if e[0] + max_new <= min(MAX_LEN, cap)]
+    if not entries:
+        return
+    prompts = [np.random.RandomState(seed).randint(0, 256, size=L)
+               .astype(np.int32) for L, _, _, _, seed in entries]
+    refs = [reference(engine, p, max_new) for p in prompts]
+
+    t = [0.0]
+    sched = Scheduler(backend, max_new_tokens=max_new,
+                      clock=lambda: t[0])
+    pending = list(range(len(prompts)))
+    got, reasons = {}, {}
+
+    def flush(evs):
+        for ev in evs:
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+                reasons[ev.request.id] = ev.request.finish_reason
+
+    def submit(i):
+        L, prio, slo, budget, _ = entries[i]
+        payload = {"tokens": prompts[i], "id": i, "priority": prio}
+        if slo is not None:
+            payload[slo] = float(budget)
+        sched.submit(payload)
+
+    for op in sched_def["drive"]:
+        if op <= 3 and pending:
+            submit(pending.pop(0))
+        elif op == 9:
+            t[0] += 0.1                              # time marches on
+        else:
+            flush(sched.admit())
+            flush(sched.step())
+        if sched.pool is not None:
+            sched.pool.check_invariants()
+    for i in pending:
+        submit(i)
+    while sched.has_work():
+        flush(sched.admit())
+        flush(sched.step())
+
+    assert len(got) == len(prompts)
+    for i, ref in enumerate(refs):
+        if reasons[i] == "length":
+            np.testing.assert_array_equal(got[i], ref)
+        else:
+            assert reasons[i] == "deadline"
+            np.testing.assert_array_equal(got[i], ref[:len(got[i])])
+    assert sched.stats["deadline_missed"] == \
+        sum(1 for i in reasons if reasons[i] == "deadline")
+    assert sched.stats["completed"] == len(prompts)
+    if sched.pool is not None:
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+        assert sched.pool.reserved_blocks == 0
+        assert len(sched.prefix) == 0
+    assert sorted(sched.free) == list(range(sched.num_slots))

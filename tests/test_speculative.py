@@ -10,6 +10,11 @@ continuations, garbage, and mixtures that flip from right to wrong at
 random positions — far beyond what honest prompt lookup would propose.
 The hypothesis version fuzzes schedules and acceptance patterns
 together; a deterministic sweep of the same property always runs.
+
+Every GraphServer test in this file also runs under the autouse
+leak-check fixture (tests/conftest.py): at server close, slots, blocks,
+reservations and prefix-trie refs must all be back at baseline —
+including after mid-speculation cancellations (test_frontend.py).
 """
 import dataclasses
 
