@@ -21,13 +21,23 @@ plus the four serving-acceptance measurements:
   drafting exploits, standing in for the copy/repetition-rich traffic
   real deployments see), self-speculative decoding emits several
   verified tokens per tick and lifts decode tok/s >= 1.2x over plain
-  greedy with bit-identical output.
+  greedy with bit-identical output;
+* **state/hybrid** — recurrent (xLSTM) and Jamba-style mixed stacks
+  serve through ``StateBackend`` / ``HybridBackend`` bit-identically to
+  sequential greedy, and the O(1)-state capacity headline is measured:
+  a state slab's bytes are FIXED, so at equal cache memory the slab
+  arena holds every slot at any context length while a paged attention
+  arena of the same bytes holds ``floor(tokens / L)`` requests of
+  length ``L``.
 
 All modes run the SAME engine and greedy decode, so generated tokens are
 bit-identical everywhere; the deltas are pure scheduling and memory
 layout.  Results land in ``BENCH_serve.json`` (``--out``) with run
 provenance (git SHA, config, seed) so the cross-PR bench trajectory is
-comparable; ``--smoke`` shrinks everything for the CI smoke job.
+comparable; ``--smoke`` shrinks everything for the CI smoke job, and
+``--backend {slot,paged,state,hybrid}`` restricts the run to that
+single layout's section (CI smokes the state backend via
+``--smoke --backend state``).
 
     PYTHONPATH=src python benchmarks/serve_bench.py \
         --requests 8 --num-slots 4 --max-new-tokens 32
@@ -36,8 +46,11 @@ Exits non-zero unless (a) the slot server beats sequential throughput,
 (b) prefix sharing reduces computed prefill tokens, (c) the paged
 server's concurrency at fixed memory exceeds the contiguous equivalent,
 (d) chunked prefill cuts p50 inter-token latency, (e) preemptive
-admission beats reservation concurrency, and (f) speculative decoding
-beats plain greedy by >= 1.2x on the lookup-friendly workload.
+admission beats reservation concurrency, (f) speculative decoding
+beats plain greedy by >= 1.2x on the lookup-friendly workload, and
+(g) state/hybrid serving is bit-identical and the state-slab arena
+holds more concurrent 512-token requests than the equal-memory paged
+arena.
 """
 from __future__ import annotations
 
@@ -55,8 +68,9 @@ sys.path.insert(0, "src")
 
 import repro.calculators  # noqa: F401,E402
 from repro.configs import get_config  # noqa: E402
-from repro.serving import (GraphServer, LLMEngine, PagedBackend,  # noqa: E402
-                           Scheduler, SlotBackend)
+from repro.serving import (GraphServer, HybridBackend,  # noqa: E402
+                           LLMEngine, PagedBackend, Scheduler,
+                           SlotBackend, StateBackend)
 
 
 def percentile(xs, q):
@@ -75,7 +89,8 @@ def provenance(args) -> dict:
     return {
         "git_sha": sha,
         "seed": args.seed,
-        "backends": ["slot", "paged"],
+        "backends": [args.backend] if args.backend
+        else ["slot", "paged", "state", "hybrid"],
         "argv": sys.argv[1:],
         "jax": jax.__version__,
         "python": platform.python_version(),
@@ -379,6 +394,143 @@ def bench_speculative(args, report):
     return exact, slot_up >= 1.2 and paged_up >= 1.2
 
 
+def cache_nbytes(tree) -> int:
+    import jax
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def bench_state_hybrid(args, report, which=None):
+    """Recurrent (xLSTM → ``StateBackend``) and Jamba-style mixed
+    (→ ``HybridBackend``) stacks served through the SAME GraphServer
+    harness as everything above.
+
+    Throughput: sequential vs continuous batching, bit-identity checked
+    per layout.  Capacity: the O(1)-state headline — a state slab's
+    bytes never grow with context, so at EQUAL cache memory the slab
+    arena holds all its slots at any request length, while a paged
+    attention arena of the same bytes holds ``usable_blocks /
+    ceil(L / block_size)`` requests of length ``L`` (per-block bytes
+    measured from two real PagedBackend arenas, not estimated).
+
+    ``which`` restricts the section to one layout (``--backend state``
+    is the CI smoke entry point; ``None`` runs both)."""
+    bs = args.block_size
+    max_len = -(-64 // bs) * bs          # hybrid needs max_len % bs == 0
+    max_new = min(args.max_new_tokens, max_len - 16)
+    n = args.requests
+    rng = np.random.RandomState(args.seed + 6)
+    prompts = [rng.randint(0, 512, size=6 + i % 3).astype(np.int32)
+               for i in range(n)]
+    out = {"max_len": max_len, "max_new_tokens": max_new}
+    exact = True
+    fast = True
+    cap_ok = True
+
+    def one_layout(key, engine, **server_kw):
+        nonlocal exact, fast
+        run_sequential(engine, prompts, max_new)     # warm: compile
+        run_server(engine, prompts, max_new, args.num_slots,
+                   **server_kw)
+        seq_res, seq_tps, _, _ = run_sequential(engine, prompts, max_new)
+        res, tps, _, wall, stats = run_server(
+            engine, prompts, max_new, args.num_slots, **server_kw)
+        same = all(np.array_equal(a, b) for a, b in zip(seq_res, res))
+        exact = exact and same
+        fast = fast and tps > seq_tps
+        sched = stats["scheduler"]
+        out[key] = {
+            "arch": engine.cfg.name,
+            "block_pattern": list(engine.cfg.block_pattern),
+            "sequential_tok_per_s": round(seq_tps, 1),
+            "tok_per_s": round(tps, 1), "wall_s": round(wall, 2),
+            "speedup": round(tps / max(1e-9, seq_tps), 2),
+            "state_slabs_peak": sched["state_slabs_peak"],
+            "outputs_identical": same,
+        }
+        if "blocks_peak" in sched:
+            out[key]["blocks_peak"] = sched["blocks_peak"]
+        print(f"{key}: {seq_tps:.1f} -> {tps:.1f} tok/s "
+              f"({out[key]['speedup']:.2f}x, arch={engine.cfg.name}, "
+              f"slabs peak {sched['state_slabs_peak']}), "
+              f"outputs identical: {same}")
+        return engine
+
+    if which in (None, "state"):
+        cfg = get_config("xlstm_1_3b").reduced()
+        # the stock reduced pattern is all-mLSTM at 2 layers; force one
+        # of each so both cell kinds are in the measured stack
+        cfg = dataclasses.replace(cfg, num_layers=2,
+                                  d_model=args.d_model, vocab_size=512,
+                                  block_pattern=("mlstm", "slstm"))
+        eng = one_layout(
+            "state", LLMEngine(cfg, max_len=max_len, seed=args.seed),
+            backend="state")
+
+        # ---- equal-memory capacity: slabs vs paged attention -------
+        # slab arena sized for n concurrent requests
+        sb = StateBackend(eng, num_slots=n)
+        Scheduler(sb, max_new_tokens=2)             # binds the cache
+        slab_bytes = cache_nbytes(sb.cache)
+        # per-block bytes of a REAL paged arena for an attention stack
+        # of the same depth/width: diff two pool sizes so fixed
+        # non-block leaves cancel out
+        acfg = get_config("minicpm_2b").reduced()
+        acfg = dataclasses.replace(acfg, num_layers=2,
+                                   d_model=args.d_model, vocab_size=512)
+        aeng = LLMEngine(acfg, max_len=max_len, seed=args.seed)
+        sizes = []
+        for nb in (9, 17):
+            pb = PagedBackend(aeng, num_slots=n, num_blocks=nb,
+                              block_size=bs)
+            Scheduler(pb, max_new_tokens=2)
+            sizes.append(cache_nbytes(pb.cache))
+        per_block = (sizes[1] - sizes[0]) / 8
+        per_token = per_block / bs
+        equiv_tokens = slab_bytes / n / per_token
+        usable_blocks = max(0, int(slab_bytes // per_block) - 1)
+
+        def paged_cc(length):
+            return usable_blocks // -(-length // bs)
+
+        cap = {
+            "state_arena_bytes": slab_bytes,
+            "state_bytes_per_request": slab_bytes // n,
+            "attn_bytes_per_token": round(per_token, 1),
+            "state_request_equiv_attn_tokens": round(equiv_tokens, 1),
+            "attn_arch": acfg.name,
+            "concurrent_at_equal_memory": {
+                str(L): {"state": n, "paged": paged_cc(L)}
+                for L in (512, 4096)},
+        }
+        out["capacity"] = cap
+        cap_ok = paged_cc(512) < n and equiv_tokens < 512
+        print(f"state capacity: {slab_bytes} slab bytes hold {n} "
+              f"requests at ANY length (one slab = "
+              f"{equiv_tokens:.0f} attn tokens); the equal-memory "
+              f"paged arena holds {paged_cc(512)} at L=512, "
+              f"{paged_cc(4096)} at L=4096")
+
+    if which in (None, "hybrid"):
+        cfg = get_config("jamba_1_5_large_398b").reduced()
+        cfg = dataclasses.replace(cfg, d_model=args.d_model,
+                                  vocab_size=512)
+        num_blocks = 1 + args.num_slots * (max_len // bs)
+        eng = one_layout(
+            "hybrid", LLMEngine(cfg, max_len=max_len, seed=args.seed),
+            backend="hybrid", block_size=bs, num_blocks=num_blocks)
+        hb = HybridBackend(eng, num_slots=args.num_slots,
+                           num_blocks=num_blocks, block_size=bs)
+        Scheduler(hb, max_new_tokens=2)
+        slb = SlotBackend(eng, args.num_slots)
+        Scheduler(slb, max_new_tokens=2)
+        out["hybrid"]["arena_bytes"] = cache_nbytes(hb.cache)
+        out["hybrid"]["slot_layout_bytes"] = cache_nbytes(slb.cache)
+
+    report["state_hybrid"] = out
+    return {"exact": exact, "capacity": cap_ok, "fast": fast}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm_2b")
@@ -390,6 +542,10 @@ def main(argv=None) -> int:
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--backend", default=None,
+                    choices=["slot", "paged", "state", "hybrid"],
+                    help="run only this layout's section "
+                         "(default: the full suite)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for the CI smoke job")
     args = ap.parse_args(argv)
@@ -400,6 +556,40 @@ def main(argv=None) -> int:
         args.d_model = 64
     if args.requests < 4:
         ap.error("--requests must be >= 4 (concurrency acceptance gate)")
+
+    if args.backend in ("state", "hybrid"):
+        # recurrent/hybrid layouts never touch the attention-only main
+        # engine — build just their section (the CI entry point is
+        # ``--smoke --backend state``)
+        report = {"provenance": provenance(args),
+                  "config": {"requests": args.requests,
+                             "num_slots": args.num_slots,
+                             "d_model": args.d_model,
+                             "block_size": args.block_size,
+                             "smoke": args.smoke}}
+        gates = bench_state_hybrid(args, report, which=args.backend)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"serve_bench[{args.backend}] -> {args.out}")
+        ok = True
+        if not gates["exact"]:
+            print(f"FAIL: {args.backend} server diverged from "
+                  "sequential baseline")
+            ok = False
+        if not gates["capacity"]:
+            print("FAIL: state slab arena did not beat the "
+                  "equal-memory paged arena's concurrency")
+            ok = False
+        if not gates["fast"]:
+            if args.smoke:
+                print("note: smoke shapes are overhead-bound; "
+                      "throughput gate not enforced")
+            else:
+                print(f"FAIL: {args.backend} server not faster than "
+                      "sequential baseline")
+                ok = False
+        return 0 if ok else 1
 
     cfg = get_config(args.arch).reduced()
     cfg = dataclasses.replace(cfg, num_layers=args.num_layers,
@@ -430,9 +620,11 @@ def main(argv=None) -> int:
         for w in widths if i == 0 else widths[1:]:
             _, rows = engine.prefill(np.tile(p[None], (w, 1)))  # prefill[w]
             engine.insert(warm_backend, warm_backend.cache, rows, 0, 0)
-    run_server(engine, prompts[:args.num_slots], 2, args.num_slots)
-    run_server(engine, prompts[:args.num_slots], 2, args.num_slots,
-               paged=True, block_size=args.block_size)
+    if args.backend != "paged":
+        run_server(engine, prompts[:args.num_slots], 2, args.num_slots)
+    if args.backend != "slot":
+        run_server(engine, prompts[:args.num_slots], 2, args.num_slots,
+                   paged=True, block_size=args.block_size)
 
     report = {
         "provenance": provenance(args),
@@ -448,50 +640,69 @@ def main(argv=None) -> int:
     # ---- throughput: sequential vs slot vs paged, one run -------------
     seq_res, seq_tps, seq_lat, seq_wall = run_sequential(
         engine, prompts, args.max_new_tokens)
-    srv_res, srv_tps, srv_lat, srv_wall, _ = run_server(
-        engine, prompts, args.max_new_tokens, args.num_slots)
-    pg_res, pg_tps, pg_lat, pg_wall, pg_stats = run_server(
-        engine, prompts, args.max_new_tokens, args.num_slots, paged=True,
-        block_size=args.block_size)
-    report["config"]["arena_blocks"] = \
-        pg_stats["block_pool"]["num_blocks"]
-
-    for a, b, c in zip(seq_res, srv_res, pg_res):
-        assert np.array_equal(a, b), "slot server diverged from baseline"
-        assert np.array_equal(a, c), "paged server diverged from baseline"
-
     print(f"requests={args.requests} num_slots={args.num_slots} "
           f"max_new_tokens={args.max_new_tokens} arch={cfg.name} (reduced)")
-    rows = (("sequential", seq_tps, seq_lat, seq_wall),
-            ("slot", srv_tps, srv_lat, srv_wall),
-            ("paged", pg_tps, pg_lat, pg_wall))
+    rows = [("sequential", seq_tps, seq_lat, seq_wall)]
+    report["throughput"] = {"sequential_tok_per_s": round(seq_tps, 1)}
+    speedup = None
+    if args.backend != "paged":
+        srv_res, srv_tps, srv_lat, srv_wall, _ = run_server(
+            engine, prompts, args.max_new_tokens, args.num_slots)
+        for a, b in zip(seq_res, srv_res):
+            assert np.array_equal(a, b), \
+                "slot server diverged from baseline"
+        rows.append(("slot", srv_tps, srv_lat, srv_wall))
+        speedup = srv_tps / seq_tps
+        report["throughput"].update({
+            "slot_tok_per_s": round(srv_tps, 1),
+            "slot_speedup": round(speedup, 2),
+        })
+    if args.backend != "slot":
+        pg_res, pg_tps, pg_lat, pg_wall, pg_stats = run_server(
+            engine, prompts, args.max_new_tokens, args.num_slots,
+            paged=True, block_size=args.block_size)
+        for a, c in zip(seq_res, pg_res):
+            assert np.array_equal(a, c), \
+                "paged server diverged from baseline"
+        rows.append(("paged", pg_tps, pg_lat, pg_wall))
+        report["config"]["arena_blocks"] = \
+            pg_stats["block_pool"]["num_blocks"]
+        report["throughput"].update({
+            "paged_tok_per_s": round(pg_tps, 1),
+            "paged_speedup": round(pg_tps / seq_tps, 2),
+            "paged_blocks_peak": pg_stats["scheduler"]["blocks_peak"],
+        })
+        if speedup is None:
+            speedup = pg_tps / seq_tps
     for name, tps, lat, wall in rows:
         print(f"{name:12s} {tps:8.1f} tok/s  wall={wall:6.2f}s  "
               f"p50={percentile(lat, 0.50)*1e3:7.0f}ms  "
               f"p95={percentile(lat, 0.95)*1e3:7.0f}ms")
-    speedup = srv_tps / seq_tps
-    report["throughput"] = {
-        "sequential_tok_per_s": round(seq_tps, 1),
-        "slot_tok_per_s": round(srv_tps, 1),
-        "paged_tok_per_s": round(pg_tps, 1),
-        "slot_speedup": round(speedup, 2),
-        "paged_speedup": round(pg_tps / seq_tps, 2),
-        "paged_blocks_peak": pg_stats["scheduler"]["blocks_peak"],
-    }
-    print(f"speedup      {speedup:8.2f}x (slot), "
-          f"{pg_tps / seq_tps:.2f}x (paged)")
+    print("speedup      " + ", ".join(
+        f"{report['throughput'][k + '_speedup']:.2f}x ({k})"
+        for k in ("slot", "paged")
+        if k + "_speedup" in report["throughput"]))
 
-    # ---- acceptance: prefix / capacity / chunked / admission / spec ---
-    prefix_ok = bench_shared_prefix(engine, args, report)
-    capacity_ok = bench_capacity(engine, args, report)
-    chunked_ok = bench_chunked_prefill(engine, args, report)
-    admission_ok = bench_admission(engine, args, report)
-    spec_exact, spec_fast = bench_speculative(args, report)
+    # ---- acceptance: prefix / capacity / chunked / admission / spec /
+    # state-hybrid (single-layout runs stop at the throughput check) ---
+    if args.backend is None:
+        prefix_ok = bench_shared_prefix(engine, args, report)
+        capacity_ok = bench_capacity(engine, args, report)
+        chunked_ok = bench_chunked_prefill(engine, args, report)
+        admission_ok = bench_admission(engine, args, report)
+        spec_exact, spec_fast = bench_speculative(args, report)
+        sh = bench_state_hybrid(args, report)
+    else:
+        prefix_ok = capacity_ok = chunked_ok = admission_ok = True
+        spec_exact = spec_fast = True
+        sh = {"exact": True, "capacity": True, "fast": True}
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"serve_bench,{srv_tps:.1f},speedup={speedup:.2f}x "
+    srv_line = report["throughput"].get(
+        "slot_tok_per_s", report["throughput"].get("paged_tok_per_s"))
+    print(f"serve_bench,{srv_line:.1f},speedup={speedup:.2f}x "
           f"-> {args.out}")
 
     ok = True
@@ -533,6 +744,22 @@ def main(argv=None) -> int:
         else:
             print("FAIL: speculative decoding did not reach 1.2x over "
                   "plain greedy on the lookup-friendly workload")
+            ok = False
+    if not sh["exact"]:
+        print("FAIL: state/hybrid server diverged from sequential "
+              "baseline")
+        ok = False
+    if not sh["capacity"]:
+        print("FAIL: state slab arena did not beat the equal-memory "
+              "paged arena's concurrency")
+        ok = False
+    if not sh["fast"]:
+        if args.smoke:
+            print("note: smoke shapes are overhead-bound; state/hybrid "
+                  "throughput gate not enforced")
+        else:
+            print("FAIL: state/hybrid server not faster than "
+                  "sequential baseline")
             ok = False
     return 0 if ok else 1
 

@@ -7,8 +7,11 @@ running decode batch as slots free up; tokens stream back per step).
 
 Useful knobs (all forwarded to repro.launch.serve):
 
-* ``--backend {slot,paged}`` — contiguous slot rows or the paged KV
-  cache with ref-counted prefix sharing (docs/SCHEDULER.md).
+* ``--backend {slot,paged,state,hybrid}`` — contiguous slot rows, the
+  paged KV cache with ref-counted prefix sharing (docs/SCHEDULER.md),
+  or the state-slab layouts for recurrent / Jamba-style stacks
+  (docs/STATE_CACHE.md; pass a matching ``--arch``, e.g.
+  ``--arch jamba_1_5_large_398b --backend hybrid``).
 * ``--chunk-size N`` — chunked prefill: long prompts ingest N tokens per
   scheduler tick, interleaved with everyone else's decode steps.
 * ``--speculate K`` — self-speculative decoding: draft up to K tokens

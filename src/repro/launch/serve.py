@@ -40,15 +40,16 @@ def run_continuous(args, cfg, engine) -> int:
     lat = [None] * args.requests
     results = [None] * args.requests
 
-    paged = args.paged or args.backend == "paged"
     with GraphServer(engine, num_slots=args.num_slots,
                      max_in_flight=args.max_in_flight,
                      max_new_tokens=args.max_new_tokens,
                      chunk_size=args.chunk_size or None,
                      speculate_k=args.speculate,
-                     paged=paged, num_blocks=args.num_blocks,
+                     paged=args.paged, num_blocks=args.num_blocks,
                      block_size=args.block_size,
-                     admission=args.admission) as srv:
+                     admission=args.admission,
+                     backend=args.backend,
+                     spec_window=args.spec_window) as srv:
         t0 = time.time()
 
         def client(worker: int) -> None:
@@ -100,6 +101,9 @@ def run_continuous(args, cfg, engine) -> int:
               f"peak_in_use={bp['peak_in_use']} "
               f"prefill_tokens_saved="
               f"{sched.get('prefill_tokens_saved', 0)}")
+    if sched.get("state_slabs_peak") is not None:
+        print(f"state slabs: peak_in_use={sched['state_slabs_peak']} "
+              f"in_use={sched['state_slabs_in_use']}")
     return 0 if done == args.requests else 1
 
 
@@ -121,15 +125,16 @@ def run_async(args, cfg, engine) -> int:
     ntok = [0] * args.requests
     reasons = [None] * args.requests
 
-    paged = args.paged or args.backend == "paged"
     with GraphServer(engine, num_slots=args.num_slots,
                      max_in_flight=args.max_in_flight,
                      max_new_tokens=args.max_new_tokens,
                      chunk_size=args.chunk_size or None,
                      speculate_k=args.speculate,
-                     paged=paged, num_blocks=args.num_blocks,
+                     paged=args.paged, num_blocks=args.num_blocks,
                      block_size=args.block_size,
-                     admission=args.admission) as srv:
+                     admission=args.admission,
+                     backend=args.backend,
+                     spec_window=args.spec_window) as srv:
         front = AsyncFrontend(srv, policy=Policy(
             timeout_ms=args.timeout_ms, retries=args.retries))
         t0 = time.time()
@@ -230,11 +235,20 @@ def main(argv=None) -> int:
     ap.add_argument("--max-in-flight", type=int, default=0)
     ap.add_argument("--fixed-batch", action="store_true",
                     help="use the original batch-and-drain pipeline")
-    ap.add_argument("--backend", choices=["slot", "paged"], default="slot",
-                    help="KV-cache backend (see docs/SCHEDULER.md)")
+    ap.add_argument("--backend",
+                    choices=["slot", "paged", "state", "hybrid"],
+                    default=None,
+                    help="cache backend: contiguous slot rows, the paged "
+                         "block pool, O(1) recurrent state slabs, or the "
+                         "Jamba-style per-layer hybrid (attention pages + "
+                         "state slabs; see docs/STATE_CACHE.md)")
     ap.add_argument("--paged", action="store_true",
                     help="shorthand for --backend paged (ref-counted "
                          "prefix sharing; see docs/KV_CACHE.md)")
+    ap.add_argument("--spec-window", type=int, default=8,
+                    help="state/hybrid backends: cap on the speculative "
+                         "verify window (bounds per-position state "
+                         "snapshot memory; see docs/STATE_CACHE.md)")
     ap.add_argument("--chunk-size", type=int, default=0,
                     help="chunked prefill: ingest prompts this many "
                          "tokens per scheduler tick (0 = whole prompt)")

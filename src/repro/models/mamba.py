@@ -142,45 +142,65 @@ def mamba_decode(params, cfg: ArchConfig, x: jax.Array,
     return out, {"conv": conv_new, "h": h}
 
 
-def mamba_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
-    """Full-sequence forward AND final recurrent state for decode."""
-    B, S, d = x.shape
-    di = cfg.d_inner
+def _mamba_seq(params, cfg: ArchConfig, x: jax.Array,
+               state: Dict[str, jax.Array], want_stack: bool):
+    """Advance a recurrent state over x's positions one token at a time.
+
+    The per-token update replicates ``mamba_decode`` op-for-op, so the
+    state after position t is bit-identical to t+1 single-token decode
+    calls — and therefore invariant to how a prompt is split into
+    ingest chunks (the chunked ``lax.associative_scan`` in
+    ``mamba_apply`` reassociates fp sums and does not have this
+    property; training keeps it, serving state does not need it).
+
+    Returns (y [B,L,d], final_state, stack) where stack holds the state
+    *after* each position ({"conv": [B,L,wc-1,di], "h": [B,L,di,ds]})
+    when ``want_stack`` — the speculative verify/rewind machinery
+    selects a committed state out of it — else None.
+    """
     xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)
-    xc = jax.nn.silu(_causal_conv(params, x_in).astype(jnp.float32)
-                     ).astype(x.dtype)
-    chunk = min(cfg.ssm_chunk, S)
-    pad = (-S) % chunk
-    # padded positions must not perturb the final state: mask makes dt=0
-    # there (a=1, b=0 -> identity recurrence step).
-    mask = None
-    if pad:
-        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
-        mask = (jnp.arange(S + pad) < S).astype(jnp.float32)
-    Sp = S + pad
-    nc = Sp // chunk
+    xc = jax.nn.silu(
+        _causal_conv(params, x_in, prev=state["conv"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    a, b, Cm = _ssm_params(params, cfg, xc)
 
-    def chunk_step(h0, inputs):
-        xc_chunk, m_chunk = inputs
-        a, b, Cm = _ssm_params(params, cfg, xc_chunk)
-        if mask is not None:
-            mm = m_chunk[None, :, None, None]
-            a = a * mm + (1.0 - mm)          # a=1 on padded steps
-            b = b * mm                        # b=0 on padded steps
-        A_cum, B_cum = jax.lax.associative_scan(_scan_combine, (a, b), axis=1)
-        h = A_cum * h0[:, None] + B_cum
-        y = jnp.einsum("blds,bls->bld", h, Cm)
-        return h[:, -1], y
+    def step(carry, t_in):
+        h0, conv0 = carry
+        a_t, b_t, C_t, xin_t = t_in
+        h = a_t * h0 + b_t
+        y_t = jnp.einsum("bds,bs->bd", h, C_t)
+        conv = jnp.concatenate(
+            [conv0[:, 1:], xin_t[:, None].astype(conv0.dtype)], axis=1)
+        out = (y_t, h, conv) if want_stack else (y_t,)
+        return (h, conv), out
 
-    h0 = jnp.zeros((B, di, cfg.ssm_state_dim), jnp.float32)
-    xc_chunks = xc.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
-    m_chunks = (mask if mask is not None else
-                jnp.ones((Sp,), jnp.float32)).reshape(nc, chunk)
-    h_last, ys = jax.lax.scan(chunk_step, h0, (xc_chunks, m_chunks))
-    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S].astype(x.dtype)
-    y = y + params["D"].astype(x.dtype) * xc[:, :S]
+    ins = (a.transpose(1, 0, 2, 3), b.transpose(1, 0, 2, 3),
+           Cm.transpose(1, 0, 2), x_in.transpose(1, 0, 2))
+    (h_last, conv_last), ys = jax.lax.scan(
+        step, (state["h"], state["conv"]), ins)
+    y = ys[0].transpose(1, 0, 2).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype) * xc
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
-    conv_state = x_in[:, S - (cfg.ssm_conv_width - 1):, :]
-    return out, {"conv": conv_state, "h": h_last}
+    final = {"conv": conv_last, "h": h_last}
+    stack = ({"conv": ys[2].transpose(1, 0, 2, 3),
+              "h": ys[1].transpose(1, 0, 2, 3)} if want_stack else None)
+    return out, final, stack
+
+
+def mamba_window(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array], want_stack: bool = True):
+    """Multi-token continuation from a live state (chunked-prefill
+    ingest windows and speculative verify windows).  x: [B, L, d]."""
+    return _mamba_seq(params, cfg, x, cache, want_stack)
+
+
+def mamba_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                             initial_state=None):
+    """Full-sequence forward AND final recurrent state for decode."""
+    if initial_state is None:
+        initial_state = init_mamba_cache(cfg, x.shape[0], x.dtype)
+    out, final, _ = _mamba_seq(params, cfg, x, initial_state,
+                               want_stack=False)
+    return out, final

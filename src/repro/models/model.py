@@ -44,17 +44,20 @@ class Model:
 
     def decode_step(self, params, tokens, cache, cache_pos,
                     flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS,
-                    block_tables=None, all_logits: bool = False):
+                    block_tables=None, all_logits: bool = False,
+                    state_mask=None, want_state_stacks: bool = False):
         return tf.decode_step(params, self.cfg, tokens, cache, cache_pos,
                               flags, block_tables=block_tables,
-                              all_logits=all_logits)
+                              all_logits=all_logits, state_mask=state_mask,
+                              want_state_stacks=want_state_stacks)
 
     def prefill_extend(self, params, tokens, cache, prefix_ref,
                        prefix_len: int, max_cache_len: int,
-                       flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
+                       flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS,
+                       slots=None):
         return tf.prefill_extend(params, self.cfg, tokens, cache,
                                  prefix_ref, prefix_len, max_cache_len,
-                                 flags)
+                                 flags, slots=slots)
 
     def mtp_logits(self, params, hidden, tokens,
                    flags: tf.RuntimeFlags = tf.DEFAULT_FLAGS):
@@ -65,6 +68,14 @@ class Model:
 
     def abstract_paged_cache(self, num_blocks: int, block_size: int):
         return tf.abstract_paged_cache(self.cfg, num_blocks, block_size)
+
+    def abstract_hybrid_cache(self, num_slots: int, num_blocks: int,
+                              block_size: int):
+        return tf.abstract_hybrid_cache(self.cfg, num_slots, num_blocks,
+                                        block_size)
+
+    def layer_kind_of_path(self, path) -> str:
+        return tf.layer_kind_of_path(self.cfg, path)
 
     # ---- modality stubs -------------------------------------------------
     def input_shapes_for(self, shape: InputShape) -> Dict[str, Any]:

@@ -140,17 +140,42 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
                 want_cache: bool = False, max_cache_len: int = 0,
                 block_tables: Optional[jax.Array] = None,
                 prefix_kv: Optional[Dict] = None, prefix_len: int = 0,
+                state_mask: Optional[jax.Array] = None,
+                want_state_stack: bool = False,
                 ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
     """Returns (x_out, aux_loss, new_cache).
 
     block_tables: paged decode — ``cache`` holds block-pool arenas.
     prefix_kv/prefix_len: prefix-extend prefill — compute only the prompt
     suffix, attending over K/V gathered for the shared prefix.
+    state_mask: [B] bool — rows whose recurrent state may be committed.
+    Recurrent mixers overwrite their whole O(1) state on every step, so a
+    batched decode step would destroy the checkpointed ingest-frontier
+    state of rows that are *not* decoding; masked rows keep their old
+    state bit-for-bit (attention K/V needs no mask: stray row writes land
+    at that row's frontier and are overwritten on its next real step).
+    want_state_stack: recurrent decode windows additionally return the
+    state after *every* window position under a ``"stack"`` key of the
+    layer cache (and leave the live state uncommitted) — the speculative
+    verify/rewind machinery selects the accepted prefix's state out of it.
     """
     h = rms_norm(params["norm1"], x, cfg.norm_eps, flags.fused_rmsnorm)
     new_cache: Dict[str, Any] = {}
     decode = cache is not None
     extend = want_cache and prefix_kv is not None
+
+    def commit_state(c):
+        """Apply state_mask / want_state_stack to a recurrent mixer's
+        freshly computed state ``c`` (old state: cache["mixer"])."""
+        if want_state_stack:
+            c = cache["mixer"]                   # truncate() commits later
+        elif state_mask is not None:
+            c = jax.tree.map(
+                lambda nw, od: jnp.where(
+                    state_mask.reshape((-1,) + (1,) * (nw.ndim - 1)),
+                    nw, od.astype(nw.dtype)),
+                c, cache["mixer"])
+        return c
     if kind == "attn":
         if cfg.use_mla:
             if decode:
@@ -189,7 +214,14 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
                                             flags=flags)
     elif kind == "mamba":
         if decode:
-            y, c = mam.mamba_decode(params["mixer"], cfg, h, cache["mixer"])
+            if h.shape[1] == 1 and not want_state_stack:
+                y, c = mam.mamba_decode(params["mixer"], cfg, h,
+                                        cache["mixer"])
+            else:
+                y, c, stk = mam.mamba_window(params["mixer"], cfg, h,
+                                             cache["mixer"],
+                                             want_stack=want_state_stack)
+            c = commit_state(c)
         elif want_cache:
             y, c = mam.mamba_prefill_into_cache(params["mixer"], cfg, h)
         else:
@@ -198,7 +230,14 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
         # sequence-parallel scan pays off once S spans many model shards
         use_sp = flags.model_size > 1 and x.shape[1] >= 8192
         if decode:
-            y, c = xl.mlstm_decode(params["mixer"], cfg, h, cache["mixer"])
+            if h.shape[1] == 1 and not want_state_stack:
+                y, c = xl.mlstm_decode(params["mixer"], cfg, h,
+                                       cache["mixer"])
+            else:
+                y, c, stk = xl.mlstm_window(params["mixer"], cfg, h,
+                                            cache["mixer"],
+                                            want_stack=want_state_stack)
+            c = commit_state(c)
         elif use_sp:
             y, c = xl.mlstm_apply_sp(params["mixer"], cfg, h, flags,
                                      want_cache=want_cache)
@@ -208,7 +247,14 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
             y, c = xl.mlstm_apply(params["mixer"], cfg, h)
     elif kind == "slstm":
         if decode:
-            y, c = xl.slstm_decode(params["mixer"], cfg, h, cache["mixer"])
+            if h.shape[1] == 1 and not want_state_stack:
+                y, c = xl.slstm_decode(params["mixer"], cfg, h,
+                                       cache["mixer"])
+            else:
+                y, c, stk = xl.slstm_window(params["mixer"], cfg, h,
+                                            cache["mixer"],
+                                            want_stack=want_state_stack)
+            c = commit_state(c)
         elif want_cache:
             y, c = xl.slstm_prefill_into_cache(params["mixer"], cfg, h)
         else:
@@ -216,6 +262,15 @@ def layer_apply(params, cfg: ArchConfig, kind: str, ffn_kind: str,
     else:  # pragma: no cover
         raise ValueError(kind)
     new_cache["mixer"] = c
+    if want_state_stack and decode:
+        # Mirror the layer-cache structure so rewind can tree_map the
+        # stack against the live cache; non-recurrent leaves carry a
+        # zero-size placeholder.
+        if kind in ("mamba", "mlstm", "slstm"):
+            new_cache["stack"] = {"mixer": stk}
+        else:
+            new_cache["stack"] = {"mixer": jax.tree.map(
+                lambda _: jnp.zeros((0,), jnp.float32), cache["mixer"])}
     x = x + y
 
     if "cross" in params and memory_kv is not None:
@@ -489,6 +544,64 @@ def abstract_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int):
     return cache
 
 
+def check_hybrid_support(cfg: ArchConfig) -> None:
+    """The hybrid layout pages attention K/V and keeps recurrent layers
+    in O(1) state slabs; the per-layer composition rules out the same
+    attention variants the paged arena does."""
+    if cfg.is_encoder_decoder:
+        raise ValueError("hybrid cache: encoder-decoder models are not "
+                         "supported")
+    if cfg.sliding_window:
+        raise ValueError("hybrid cache: sliding-window attention is not "
+                         "supported (the window's rotating slot layout "
+                         "conflicts with block paging)")
+
+
+def abstract_hybrid_cache(cfg: ArchConfig, num_slots: int, num_blocks: int,
+                          block_size: int):
+    """ShapeDtypeStruct pytree of the hybrid layout: per layer, attention
+    K/V lives in a ``[num_blocks, block_size, ...]`` block-pool arena
+    (reached through block tables, exactly the paged layout) while
+    recurrent mixers live in ``[num_slots, ...]`` state slabs (slot i of
+    every slab belongs to the request in scheduler slot i)."""
+    check_hybrid_support(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    head, pattern, R = group_structure(cfg)
+
+    def layer(kind: str):
+        if kind == "attn":
+            c = mla_mod.abstract_paged_mla_cache(cfg, num_blocks,
+                                                 block_size, dt) \
+                if cfg.use_mla else \
+                attn.abstract_paged_kv_cache(cfg, num_blocks, block_size, dt)
+            return {"mixer": c}
+        return abstract_layer_cache(cfg, kind, num_slots, 0)
+
+    cache: Dict[str, Any] = {}
+    if head:
+        cache["head_layers"] = {f"layer{i}": layer(k)
+                                for i, (k, f) in enumerate(head)}
+    if R:
+        group = {f"l{j}": layer(k) for j, (k, f) in enumerate(pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype), group)
+    return cache
+
+
+def layer_kind_of_path(cfg: ArchConfig, path) -> str:
+    """Map a cache-pytree key path (as produced by
+    ``jax.tree_util.tree_map_with_path``) to its layer kind — the one
+    dispatch point mixed-layout cache writers need to decide whether a
+    leaf is a paged attention arena or a recurrent state slab."""
+    head, pattern, _ = group_structure(cfg)
+    k0 = getattr(path[0], "key", None)
+    if k0 == "head_layers":
+        return head[int(path[1].key[len("layer"):])][0]
+    if k0 == "blocks":
+        return pattern[int(path[1].key[1:])][0]
+    raise KeyError(f"not a layer cache path: {path}")
+
+
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
             prefix_embeds: Optional[jax.Array] = None,
             enc_embeds: Optional[jax.Array] = None,
@@ -538,10 +651,24 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_cache_len: int,
     return logits, cache
 
 
+def check_mixed_extend_support(cfg: ArchConfig) -> None:
+    """Prefix-extend limits that hold on *any* cache layout (per-layer
+    checks — paged attention arenas add :func:`check_paged_support` on
+    top, via the engine's layout gates)."""
+    if cfg.is_encoder_decoder:
+        raise ValueError("prefix extend: encoder-decoder models are not "
+                         "supported")
+    if cfg.sliding_window and "attn" in cfg.layer_kinds():
+        raise ValueError("prefix extend: sliding-window attention is not "
+                         "supported (the rotating slot layout has no "
+                         "stable prefix rows)")
+
+
 def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
                    cache, prefix_ref, prefix_len: int,
                    max_cache_len: int,
-                   flags: RuntimeFlags = DEFAULT_FLAGS):
+                   flags: RuntimeFlags = DEFAULT_FLAGS,
+                   slots: Optional[jax.Array] = None):
     """Prefill a prompt *suffix* against already-cached prefix K/V.
 
     tokens: [B, S'] — the prompt tokens from position ``prefix_len`` on.
@@ -550,12 +677,16 @@ def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
     a block table, ``prefix_len`` a static multiple of its block size —
     or :class:`~repro.models.paging.SlotPrefix` — contiguous slot rows).
     This one entry point serves both prefix-shared prefill and chunked
-    prefill on either cache layout.  Returns (last-token logits [B, V],
-    suffix cache rows padded to ``max_cache_len`` — write them back with
-    the layout's insert).  Suffix activations are bit-identical to a
-    cold prefill of the full prompt (row-independent attention; see
-    ``attn.prefill_extend_into_cache``)."""
-    check_paged_support(cfg)
+    prefill on any cache layout.  Attention layers attend over gathered
+    prefix K/V and emit suffix cache rows padded to ``max_cache_len``;
+    recurrent layers (mamba/mlstm/slstm) instead *continue the sequential
+    state scan* from their slab rows at ``slots`` ([B] int32, required
+    for such stacks) and emit the state after the last suffix token —
+    write both back with the layout's insert.  Returns (last-token
+    logits [B, V], per-layer outputs).  Suffix activations are
+    bit-identical to a cold prefill of the full prompt (row-independent
+    attention, chunk-invariant sequential state scans)."""
+    check_mixed_extend_support(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens, dt)
     x = constrain_batch(x, flags)
@@ -565,31 +696,35 @@ def prefill_extend(params, cfg: ArchConfig, tokens: jax.Array,
     def gather_prefix(mixer_cache):
         return paging.gather_prefix_kv(mixer_cache, prefix_ref, prefix_len)
 
+    def apply_layer(lp, k, f, x, arena_layer):
+        if k == "attn":
+            pkv = {"mixer": gather_prefix(arena_layer["mixer"])}
+            return layer_apply(lp, cfg, k, f, x, positions,
+                               want_cache=True,
+                               max_cache_len=max_cache_len, flags=flags,
+                               prefix_kv=pkv, prefix_len=prefix_len)
+        # recurrent: resume the state scan from the slab rows
+        init = {"mixer": jax.tree.map(lambda a: a[slots],
+                                      arena_layer["mixer"])}
+        return layer_apply(lp, cfg, k, f, x, positions, cache=init,
+                           cache_pos=positions[:, 0], flags=flags)
+
     head, pattern, R = group_structure(cfg)
     out_cache: Dict[str, Any] = {}
     if head:
         out_cache["head_layers"] = {}
         for i, (k, f) in enumerate(head):
             lp = params["head_layers"][f"layer{i}"]
-            pkv = {"mixer": gather_prefix(
-                cache["head_layers"][f"layer{i}"]["mixer"])}
-            x, _, c = layer_apply(lp, cfg, k, f, x, positions,
-                                  want_cache=True,
-                                  max_cache_len=max_cache_len, flags=flags,
-                                  prefix_kv=pkv, prefix_len=prefix_len)
+            x, _, c = apply_layer(lp, k, f, x,
+                                  cache["head_layers"][f"layer{i}"])
             out_cache["head_layers"][f"layer{i}"] = c
     if R:
         def group_step(x, scanned):
             group_params, group_arena = scanned
             caches = {}
             for j, (k, f) in enumerate(pattern):
-                lp = group_params[f"l{j}"]
-                pkv = {"mixer": gather_prefix(group_arena[f"l{j}"]["mixer"])}
-                x, _, c = layer_apply(lp, cfg, k, f, x, positions,
-                                      want_cache=True,
-                                      max_cache_len=max_cache_len,
-                                      flags=flags, prefix_kv=pkv,
-                                      prefix_len=prefix_len)
+                x, _, c = apply_layer(group_params[f"l{j}"], k, f, x,
+                                      group_arena[f"l{j}"])
                 caches[f"l{j}"] = c
             return x, caches
 
@@ -606,7 +741,9 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 cache, cache_pos: jax.Array,
                 flags: RuntimeFlags = DEFAULT_FLAGS,
                 block_tables: Optional[jax.Array] = None,
-                all_logits: bool = False):
+                all_logits: bool = False,
+                state_mask: Optional[jax.Array] = None,
+                want_state_stacks: bool = False):
     """One decode step. tokens: [B, S'] (S' = 1 for plain decode; S' > 1
     scores a speculative verify window — the last emitted token plus
     drafted continuations — in one pass).  Returns (logits, new_cache):
@@ -621,7 +758,14 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
 
     ``block_tables`` ([B, P] int32) switches to the paged path: ``cache``
     holds block-pool arenas and each row's K/V is reached through its
-    block table (bit-identical greedy tokens to the contiguous path)."""
+    block table (bit-identical greedy tokens to the contiguous path).
+
+    ``state_mask`` / ``want_state_stacks`` serve recurrent/hybrid cache
+    layouts (see :func:`layer_apply`); with ``want_state_stacks`` the
+    return becomes (logits, new_cache, stacks) where ``stacks`` mirrors
+    the cache tree, each recurrent state leaf grown to [..., S', ...]
+    (state after every window position) and every other leaf a
+    zero-size placeholder."""
     dt = jnp.dtype(cfg.dtype)
     x = embed_apply(params["embed"], tokens, dt)
     x = constrain_batch(x, flags)
@@ -633,14 +777,20 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
     head, pattern, R = group_structure(cfg)
 
     new_cache: Dict[str, Any] = {}
+    stacks: Dict[str, Any] = {}
     if head:
         new_cache["head_layers"] = {}
+        stacks["head_layers"] = {}
         for i, (k, f) in enumerate(head):
             lp = params["head_layers"][f"layer{i}"]
             x, _, c = layer_apply(lp, cfg, k, f, x, positions,
                                   cache=cache["head_layers"][f"layer{i}"],
                                   cache_pos=cache_pos, flags=flags,
-                                  block_tables=block_tables)
+                                  block_tables=block_tables,
+                                  state_mask=state_mask,
+                                  want_state_stack=want_state_stacks)
+            if want_state_stacks:
+                stacks["head_layers"][f"layer{i}"] = c.pop("stack")
             new_cache["head_layers"][f"layer{i}"] = c
     if R:
         # The stacked cache rides in the scan CARRY (updated in place per
@@ -657,6 +807,7 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                                                        keepdims=False),
                 blocks_cache)
             new_group = {}
+            group_stacks = {}
             for j, (k, f) in enumerate(pattern):
                 lp = group_params[f"l{j}"]
                 mkv = group_cache[f"l{j}"].get("cross")
@@ -664,7 +815,11 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                                       cache=group_cache[f"l{j}"],
                                       cache_pos=cache_pos,
                                       memory_kv=mkv, flags=flags,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      state_mask=state_mask,
+                                      want_state_stack=want_state_stacks)
+                if want_state_stacks:
+                    group_stacks[f"l{j}"] = c.pop("stack")
                 if mkv is not None:
                     c["cross"] = mkv
                 new_group[f"l{j}"] = c
@@ -672,13 +827,18 @@ def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
                 lambda full, new: jax.lax.dynamic_update_index_in_dim(
                     full, new.astype(full.dtype), idx, 0),
                 blocks_cache, new_group)
-            return (x, blocks_cache), None
+            return (x, blocks_cache), group_stacks
 
-        (x, blocks_cache), _ = jax.lax.scan(
+        (x, blocks_cache), block_stacks = jax.lax.scan(
             group_step, (x, blocks_cache),
             (params["blocks"], jnp.arange(R)))
         new_cache["blocks"] = blocks_cache
+        if want_state_stacks:
+            stacks["blocks"] = block_stacks
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps, flags.fused_rmsnorm)
     logits = _logits(params, cfg, x)
-    return (logits if all_logits else logits[:, 0]), new_cache
+    logits = logits if all_logits else logits[:, 0]
+    if want_state_stacks:
+        return logits, new_cache, stacks
+    return logits, new_cache

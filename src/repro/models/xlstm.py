@@ -136,8 +136,68 @@ def mlstm_apply(params, cfg: ArchConfig, x: jax.Array
     return y, None
 
 
-def mlstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
-    return _mlstm_forward(params, cfg, x, want_cache=True)
+def _mlstm_seq(params, cfg: ArchConfig, x: jax.Array, state, want_stack: bool):
+    """Advance (C, n, m) over x one token at a time — op-for-op the
+    ``mlstm_decode`` update, so the state after position t is
+    bit-identical to t+1 single-token decode calls and invariant to
+    ingest-chunk boundaries (the chunkwise ``_mlstm_chunk`` used by
+    training reassociates the gate accumulations and is not).
+
+    Returns (y, final_state, stack) — stack is the state *after* each
+    position ({"C": [B,L,H,hd,hd], "n": [B,L,H,hd], "m": [B,L,H]}) when
+    ``want_stack``, else None.
+    """
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    q, k, v, li, lf, z = _mlstm_qkv_gates(params, cfg, x)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def step(carry, t_in):
+        C0, n0, m0 = carry
+        q_t, k_t, v_t, li0, lf0 = t_in
+        qf, kf, vf = (a.astype(jnp.float32) for a in (q_t, k_t, v_t))
+        m = jnp.maximum(lf0 + m0, li0)
+        fw = jnp.exp(lf0 + m0 - m)[..., None]
+        iw = jnp.exp(li0 - m)[..., None]
+        C = fw[..., None] * C0 + jnp.einsum("bhd,bhe->bhde", iw * kf, vf)
+        n = fw * n0 + iw * kf
+        num = jnp.einsum("bhd,bhde->bhe", qf * scale, C)
+        den = jnp.einsum("bhd,bhd->bh", qf * scale, n)
+        h_t = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        out = (h_t, C, n, m) if want_stack else (h_t,)
+        return (C, n, m), out
+
+    ins = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), li.transpose(1, 0, 2),
+           lf.transpose(1, 0, 2))
+    carry, ys = jax.lax.scan(
+        step, (state["C"], state["n"], state["m"]), ins)
+    h = ys[0].transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", h, params["down_proj"])
+    final = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    stack = ({"C": ys[1].transpose(1, 0, 2, 3, 4),
+              "n": ys[2].transpose(1, 0, 2, 3),
+              "m": ys[3].transpose(1, 0, 2)} if want_stack else None)
+    return y, final, stack
+
+
+def mlstm_window(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array], want_stack: bool = True):
+    """Multi-token continuation from a live state (ingest / verify
+    windows).  x: [B, L, d]."""
+    return _mlstm_seq(params, cfg, x, cache, want_stack)
+
+
+def mlstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                             initial_state=None):
+    if initial_state is None:
+        initial_state = init_mlstm_cache(cfg, x.shape[0], x.dtype)
+    y, final, _ = _mlstm_seq(params, cfg, x, initial_state,
+                             want_stack=False)
+    return y, final
 
 
 def _mlstm_forward(params, cfg: ArchConfig, x: jax.Array, want_cache: bool,
@@ -271,8 +331,45 @@ def slstm_apply(params, cfg: ArchConfig, x: jax.Array
     return y, None
 
 
-def slstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array):
-    return _slstm_forward(params, cfg, x, want_cache=True)
+def _slstm_seq(params, cfg: ArchConfig, x: jax.Array, state, want_stack: bool):
+    """Sequential (c, n, h, m) advance — one ``_slstm_step`` per token,
+    exactly the ``slstm_decode`` update (the remat chunking in
+    ``_slstm_forward`` stays on the training path).  Returns
+    (y, final_state, stack-of-states-after-each-position | None)."""
+    xg = jnp.einsum("bsd,dk->bsk", x, params["w_x"]).transpose(1, 0, 2)
+
+    def step(carry, x_t):
+        carry2, h_new = _slstm_step(params, cfg, carry, x_t)
+        out = carry2 if want_stack else (h_new,)
+        return carry2, out
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carry, ys = jax.lax.scan(step, carry0, xg)
+    hs = ys[2] if want_stack else ys[0]                      # [S,B,d]
+    y = jnp.einsum("bsd,dk->bsk", hs.transpose(1, 0, 2).astype(x.dtype),
+                   params["out_proj"])
+    final = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    stack = None
+    if want_stack:
+        stack = {"c": ys[0].transpose(1, 0, 2), "n": ys[1].transpose(1, 0, 2),
+                 "h": ys[2].transpose(1, 0, 2), "m": ys[3].transpose(1, 0, 2)}
+    return y, final, stack
+
+
+def slstm_window(params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, jax.Array], want_stack: bool = True):
+    """Multi-token continuation from a live state (ingest / verify
+    windows).  x: [B, L, d]."""
+    return _slstm_seq(params, cfg, x, cache, want_stack)
+
+
+def slstm_prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
+                             initial_state=None):
+    if initial_state is None:
+        initial_state = init_slstm_cache(cfg, x.shape[0], x.dtype)
+    y, final, _ = _slstm_seq(params, cfg, x, initial_state,
+                             want_stack=False)
+    return y, final
 
 
 def _slstm_forward(params, cfg: ArchConfig, x: jax.Array, want_cache: bool):

@@ -121,7 +121,8 @@ def make_decode_step(model: Model, flags: RuntimeFlags = DEFAULT_FLAGS):
 
 def make_serve_decode_step(model: Model,
                            flags: RuntimeFlags = DEFAULT_FLAGS,
-                           pad_id: int = 0, paged: bool = False):
+                           pad_id: int = 0, paged: bool = False,
+                           masked_state: bool = False):
     """Decode one token for every *slot* of a continuous batch.
 
     Unlike :func:`make_decode_step`, the batch rows are independent
@@ -139,6 +140,12 @@ def make_serve_decode_step(model: Model,
     block 0).  One factory serves both cache layouts — the layout
     difference is entirely inside the model's block-table seam
     (:mod:`repro.models.paging`).
+
+    ``masked_state=True`` (the state/hybrid layouts) additionally passes
+    ``active`` as the model's ``state_mask``: recurrent mixers overwrite
+    their whole O(1) state every step, so without the mask a decode tick
+    would destroy the checkpointed ingest-frontier state of rows that
+    are mid-chunked-prefill.
     """
     def mask_tok(logits, active):
         return jnp.where(
@@ -151,13 +158,15 @@ def make_serve_decode_step(model: Model,
                               block_tables):
             logits, new_cache = model.decode_step(
                 params, tokens, cache, positions, flags=flags,
-                block_tables=block_tables)
+                block_tables=block_tables,
+                state_mask=active if masked_state else None)
             return mask_tok(logits, active), new_cache
         return paged_decode_step
 
     def slot_decode_step(params, tokens, cache, positions, active):
-        logits, new_cache = model.decode_step(params, tokens, cache,
-                                              positions, flags=flags)
+        logits, new_cache = model.decode_step(
+            params, tokens, cache, positions, flags=flags,
+            state_mask=active if masked_state else None)
         return mask_tok(logits, active), new_cache
 
     return slot_decode_step
@@ -334,3 +343,168 @@ def make_extend_step(model: Model, prefix_len: int,
         return next_tok, cache
 
     return slot_extend_step
+
+
+# ---------------------------------------------------------------------------
+# state / hybrid layouts (recurrent mixers in O(1) state slabs)
+# ---------------------------------------------------------------------------
+
+RECURRENT_KINDS = ("mamba", "mlstm", "slstm")
+
+
+def make_state_verify_step(model: Model,
+                           flags: RuntimeFlags = DEFAULT_FLAGS,
+                           pad_id: int = 0, paged: bool = False):
+    """:func:`make_verify_step` for the state/hybrid layouts.
+
+    Recurrent state cannot be rolled back by rewinding a position
+    counter, so the window pass leaves every state slab *uncommitted*
+    and additionally returns per-position state stacks (the state after
+    each window token, for every slot); the backend's ``truncate``
+    commits the accepted prefix's entry via :func:`make_state_rewind`.
+    Attention arenas (hybrid) are written as usual — their rejected
+    tail rolls back by position rewind / page truncate exactly as on
+    the paged layout.  Returns ``(guess [N,1+k], new_cache, stacks)``.
+    """
+    def mask_tok(logits, active):
+        return jnp.where(
+            active[:, None],
+            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+            jnp.asarray(pad_id, jnp.int32))
+
+    if paged:
+        def hybrid_verify_step(params, tokens, cache, positions, active,
+                               block_tables):
+            logits, new_cache, stacks = model.decode_step(
+                params, tokens, cache, positions, flags=flags,
+                block_tables=block_tables, all_logits=True,
+                want_state_stacks=True)
+            return mask_tok(logits, active), new_cache, stacks
+        return hybrid_verify_step
+
+    def state_verify_step(params, tokens, cache, positions, active):
+        logits, new_cache, stacks = model.decode_step(
+            params, tokens, cache, positions, flags=flags,
+            all_logits=True, want_state_stacks=True)
+        return mask_tok(logits, active), new_cache, stacks
+
+    return state_verify_step
+
+
+def make_state_rewind(model: Model):
+    """Build ``rewind(cache, stacks, slot, idx)``: commit the state after
+    window position ``idx`` (0-based within the verify window) of row
+    ``slot`` from the stacks a state verify step returned.  State-slab
+    leaves take ``stack[slot, idx]``; every other leaf (attention arenas
+    carry zero-size placeholders in the stacks) passes through
+    untouched.  ``slot``/``idx`` are traced, so one compilation covers
+    every accept length of every slot at a given window width."""
+    def rewind(cache, stacks, slot, idx):
+        def sel(path, live, stk):
+            if stk.size == 0:
+                return live
+            ax = slot_batch_axis(path)
+            if ax == 1:                  # scanned blocks: [R, N, L, ...]
+                return live.at[:, slot].set(
+                    stk[:, slot, idx].astype(live.dtype))
+            return live.at[slot].set(stk[slot, idx].astype(live.dtype))
+
+        return tree_map_with_path(sel, cache, stacks)
+
+    return rewind
+
+
+def _state_write_rows(model: Model, cache, rows, slot, offset: int):
+    """Chunked-prefill write-back on the state layout: attention leaves
+    (mixed stacks keep contiguous slot rows here) write suffix rows at
+    ``[slot, offset:offset+S')``; recurrent leaves overwrite slab row
+    ``slot`` with the final state after the chunk — the slab row IS the
+    ingest-frontier checkpoint."""
+    def ins(path, big, rs):
+        ax = slot_batch_axis(path)
+        kind = model.layer_kind_of_path(path)
+        r = lax.dynamic_slice_in_dim(rs, 0, 1, axis=ax)
+        starts = [jnp.asarray(0, jnp.int32)] * big.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        if kind == "attn":
+            starts[ax + 1] = jnp.asarray(offset, jnp.int32)
+        return lax.dynamic_update_slice(big, r.astype(big.dtype), starts)
+
+    return tree_map_with_path(ins, cache, rows)
+
+
+def _hybrid_scatter_rows(model: Model, block_size: int, arena, rows, row,
+                         page_ids, slot):
+    """Hybrid-layout cache write: attention leaves scatter the row's
+    pages to the ``page_ids`` blocks (see :func:`_paged_scatter_rows`);
+    recurrent leaves copy batch row ``row`` of the prefilled states into
+    slab row ``slot``."""
+    def ins(path, big, rs):
+        ax = slot_batch_axis(path)
+        kind = model.layer_kind_of_path(path)
+        r = lax.dynamic_slice_in_dim(rs, row, 1, axis=ax)
+        if kind == "attn":
+            r = lax.squeeze(r, (ax,))
+            if ax == 1:                 # scanned blocks: [R, S, ...]
+                R_, S = r.shape[0], r.shape[1]
+                pages = r.reshape((R_, S // block_size, block_size)
+                                  + r.shape[2:])
+                return big.at[:, page_ids].set(pages.astype(big.dtype))
+            S = r.shape[0]               # head layers: [S, ...]
+            pages = r.reshape((S // block_size, block_size) + r.shape[1:])
+            return big.at[page_ids].set(pages.astype(big.dtype))
+        starts = [jnp.asarray(0, jnp.int32)] * big.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        return lax.dynamic_update_slice(big, r.astype(big.dtype), starts)
+
+    return tree_map_with_path(ins, arena, rows)
+
+
+def make_hybrid_insert(model: Model, block_size: int):
+    """Build ``insert(arena, rows, row, page_ids, slot)`` — see
+    :func:`_hybrid_scatter_rows`."""
+    return partial(_hybrid_scatter_rows, model, block_size)
+
+
+def make_state_extend_step(model: Model, prefix_len: int,
+                           flags: RuntimeFlags = DEFAULT_FLAGS, *,
+                           block_size: int = 0, max_cache_len: int = 0):
+    """:func:`make_extend_step` for the state/hybrid layouts: attention
+    layers extend against gathered prefix K/V exactly as before, while
+    recurrent layers *continue the sequential state scan* from their
+    slab row — so the state after chunk k is bit-identical to a cold
+    prefill of ``prompt[:end_k]``, whatever the chunk boundaries.
+
+    ``block_size == 0`` builds the state-layout step
+    ``(params, tokens [1,S'], cache, slot) -> (tok [1], cache)``;
+    otherwise the hybrid step ``(params, tokens [1,S'], cache,
+    table_row [P], page_ids [P], slot) -> (tok [1], cache)``."""
+    from ..models.paging import PagedPrefix, SlotPrefix
+
+    if block_size:
+        if max_cache_len <= 0:
+            raise ValueError("hybrid extend step needs max_cache_len "
+                             "(attention rows must pad to whole pages)")
+        def hybrid_extend_step(params, tokens, cache, table_row, page_ids,
+                               slot):
+            ref = PagedPrefix(table_row[None], block_size)
+            logits, rows = model.prefill_extend(
+                params, tokens, cache, ref, prefix_len,
+                max_cache_len, flags=flags, slots=slot[None])
+            cache = _hybrid_scatter_rows(model, block_size, cache, rows,
+                                         jnp.asarray(0, jnp.int32),
+                                         page_ids, slot)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, cache
+        return hybrid_extend_step
+
+    def state_extend_step(params, tokens, cache, slot):
+        ref = SlotPrefix(slot[None])
+        logits, rows = model.prefill_extend(
+            params, tokens, cache, ref, prefix_len,
+            tokens.shape[1], flags=flags, slots=slot[None])
+        cache = _state_write_rows(model, cache, rows, slot, prefix_len)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return state_extend_step

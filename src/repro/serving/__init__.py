@@ -6,9 +6,10 @@ The stack, bottom-up (``pydoc`` each module for reference docs):
   extend / verify over a model from the zoo, dispatched on a cache
   backend's layout.
 * :class:`CacheBackend` / :class:`SlotBackend` / :class:`PagedBackend`
-  (``kvcache/``) — the memory layer: contiguous slot rows vs a paged
-  block-pool arena with ref-counted prefix sharing
-  (docs/KV_CACHE.md).
+  / :class:`StateBackend` / :class:`HybridBackend` (``kvcache/``) — the
+  memory layer: contiguous slot rows, a paged block-pool arena with
+  ref-counted prefix sharing, O(1) recurrent state slabs, or the
+  Jamba-style per-layer mix (docs/KV_CACHE.md, docs/STATE_CACHE.md).
 * :class:`Scheduler` (``batching.py``) — continuous batching policy:
   priority admission, chunked prefill, preemption, self-speculative
   decoding (docs/SCHEDULER.md, docs/SPECULATIVE.md).
@@ -35,8 +36,9 @@ from .calculators import (BatcherCalculator, ContinuousBatchCalculator,
                           LLMDecodeLoopCalculator)
 from .frontend import AsyncFrontend, Policy, RequestTimeout
 from .kvcache import (BlockPool, BlockPoolError, CacheBackend,
-                      CachePressure, PagedBackend, PrefixIndex,
-                      SlotBackend, make_backend)
+                      CachePressure, HybridBackend, PagedBackend,
+                      PrefixIndex, SlotBackend, StateBackend,
+                      make_backend)
 from .pipeline import build_continuous_serving_graph, build_serving_graph
 from .server import GraphServer, RequestHandle
 from .speculative import lookup_draft
@@ -46,6 +48,7 @@ __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "LLMDecodeLoopCalculator", "Request", "Scheduler", "TokenEvent",
            "DeadlineExceeded", "AsyncFrontend", "Policy", "RequestTimeout",
            "BlockPool", "BlockPoolError", "CacheBackend", "CachePressure",
-           "PagedBackend", "PrefixIndex", "SlotBackend", "make_backend",
+           "HybridBackend", "PagedBackend", "PrefixIndex", "SlotBackend",
+           "StateBackend", "make_backend",
            "build_serving_graph", "build_continuous_serving_graph",
            "GraphServer", "RequestHandle", "lookup_draft"]

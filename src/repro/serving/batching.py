@@ -170,7 +170,7 @@ class Scheduler:
         self.pad_id = int(pad_id)
         self.chunk: Optional[int] = None
         if chunk_size is not None:
-            engine.check_extend_support()
+            engine.check_extend_support(backend.kind)
             self.chunk = backend.align_chunk(chunk_size)
         self.default_spec_k = int(speculate_k)
         self.draft_fn = draft_fn if draft_fn is not None else \
@@ -218,7 +218,7 @@ class Scheduler:
 
     def _check_spec(self) -> None:
         if not self._spec_checked:
-            self.engine.check_spec_support()
+            self.engine.check_spec_support(self.backend.kind)
             self._spec_checked = True
 
     # -- backend conveniences (servers, benchmarks, tests) ---------------
@@ -604,7 +604,10 @@ class Scheduler:
         # position 0 and cannot bind tighter.
         frontier = max(int(self.positions[r.slot]) for r in self.slots
                        if r is not None)
-        cap = self.engine.max_len - 1 - frontier
+        # the backend owns the clamp: cache geometry everywhere, plus the
+        # state/hybrid layouts' spec_window (their verify materializes a
+        # per-position state stack — the window is a memory budget)
+        cap = self.backend.spec_window_cap(frontier)
         drafts: Dict[Request, np.ndarray] = {}
         for r in decoding:
             # remaining - 1: the window emits at most |draft| + 1 tokens,

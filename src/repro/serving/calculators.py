@@ -168,6 +168,11 @@ class ContinuousBatchCalculator(Calculator):
         num_blocks / block_size / prefix_sharing / admission
         ("preempt" | "reserve") / watermark; block-pool occupancy is
         recorded into the graph tracer as ``kvcache.*`` gauges.
+        backend — cache layout by name ("slot" | "paged" | "state" |
+        "hybrid"; wins over ``paged``): "state" serves recurrent/mixed
+        stacks from O(1) state slabs, "hybrid" pages attention K/V
+        while recurrent layers ride state slabs (docs/STATE_CACHE.md);
+        spec_window caps their speculative verify window.
 
     Each output stream carries its own monotonically increasing timestamp
     counter: responses finish out of request order by design (that is the
@@ -190,12 +195,14 @@ class ContinuousBatchCalculator(Calculator):
         backend = make_backend(
             ctx.side("engine"),
             paged=bool(opts.get("paged")),
+            backend=opts.get("backend"),
             num_slots=int(opts.get("num_slots", 4)),
             num_blocks=int(opts.get("num_blocks", 0)),
             block_size=int(opts.get("block_size", 16)),
             prefix_sharing=bool(opts.get("prefix_sharing", True)),
             admission=opts.get("admission", "preempt"),
-            watermark=int(opts.get("watermark", 0)))
+            watermark=int(opts.get("watermark", 0)),
+            spec_window=int(opts.get("spec_window", 8)))
         chunk = opts.get("chunk_size")
         self.sched = Scheduler(
             backend,

@@ -30,11 +30,20 @@ import numpy as np
 from ..models.config import ArchConfig
 from ..models.model import Model
 from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
+                                  check_hybrid_support,
+                                  check_mixed_extend_support,
                                   check_paged_support)
 from ..runtime.steps import (make_decode_step, make_extend_step,
-                             make_paged_insert, make_prefill_step,
-                             make_serve_decode_step, make_slot_insert,
+                             make_hybrid_insert, make_paged_insert,
+                             make_prefill_step, make_serve_decode_step,
+                             make_slot_insert, make_state_extend_step,
+                             make_state_rewind, make_state_verify_step,
                              make_verify_step)
+
+#: cache layouts whose recurrent layers live in O(1) state slabs — decode
+#: masks state commits per row, and verify returns per-position state
+#: stacks for rewind (docs/STATE_CACHE.md)
+STATE_KINDS = ("state", "hybrid")
 
 
 class LLMEngine:
@@ -57,6 +66,7 @@ class LLMEngine:
         self._serve: Dict[Tuple, Dict[str, Any]] = {}
         self._extend_steps: Dict[Tuple, Any] = {}
         self._verify_steps: Dict[Tuple, Any] = {}
+        self._state_rewind = None       # built on first verify/truncate
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -107,15 +117,34 @@ class LLMEngine:
             raise ValueError("use_paged_kernel covers GQA/MHA/MQA only; "
                              "MLA paged decode uses the latent-gather "
                              "path (drop the flag)")
-        self.check_extend_support()
+        self.check_extend_support("paged")
 
-    def check_extend_support(self) -> None:
-        """Prefix/chunked-extend prefill works for pure-attention decoder
-        stacks only, and has no flash or sequence-parallel path yet.
-        Paged backends always need it; slot backends only with chunked
-        prefill enabled."""
-        check_paged_support(self.cfg)
-        if self.flags.use_flash:
+    def _check_hybrid(self, block_size: int) -> None:
+        check_hybrid_support(self.cfg)
+        if self.max_len % block_size != 0:
+            raise ValueError(f"engine max_len {self.max_len} must be a "
+                             f"multiple of block_size {block_size}")
+        if self.cfg.use_mla and getattr(self.flags, "use_paged_kernel",
+                                        False):
+            raise ValueError("use_paged_kernel covers GQA/MHA/MQA only; "
+                             "MLA paged decode uses the latent-gather "
+                             "path (drop the flag)")
+        self.check_extend_support("hybrid")
+
+    def check_extend_support(self, backend_kind: str = "slot") -> None:
+        """Prefix/chunked-extend prefill has no flash or sequence-parallel
+        path yet.  On the slot/paged layouts it additionally needs a
+        pure-attention decoder stack; the state/hybrid layouts instead
+        *continue the sequential state scan* for recurrent layers
+        (docs/STATE_CACHE.md), so only per-layer attention limits remain.
+        Paged/hybrid backends always need it; slot/state backends only
+        with chunked prefill enabled."""
+        if backend_kind in STATE_KINDS:
+            check_mixed_extend_support(self.cfg)
+        else:
+            check_paged_support(self.cfg)
+        if self.flags.use_flash and ("attn" in self.cfg.layer_kinds()
+                                     or backend_kind not in STATE_KINDS):
             raise ValueError("extend prefill requires attn_impl "
                              "'chunked'|'naive' (no flash path yet)")
         if getattr(self.flags, "model_size", 1) > 1:
@@ -123,13 +152,20 @@ class LLMEngine:
                              "(prefix-extend attention is not "
                              "sequence-parallel)")
 
-    def check_spec_support(self) -> None:
+    def check_spec_support(self, backend_kind: str = "slot") -> None:
         """Speculative decoding verifies a multi-token window through the
-        decode path, which exists for pure-attention decoder stacks only
-        (recurrent mixers update O(1) state one token at a time), has no
-        sliding-window mask, and reads paged K/V through the page gather
-        (the Pallas paged kernel is single-query)."""
-        check_paged_support(self.cfg)
+        decode path.  Slot/paged layouts need a pure-attention decoder
+        stack (their recurrent state has no rollback); the state/hybrid
+        layouts verify recurrent layers through the sequential window
+        pass with state stacks + rewind (docs/STATE_CACHE.md).  Neither
+        has a sliding-window mask, and paged K/V is read through the
+        page gather (the Pallas paged kernel is single-query)."""
+        if backend_kind in STATE_KINDS:
+            if self.cfg.sliding_window and "attn" in self.cfg.layer_kinds():
+                raise ValueError("speculative decode has no "
+                                 "sliding-window mask")
+        else:
+            check_paged_support(self.cfg)
         if getattr(self.flags, "use_paged_kernel", False):
             raise ValueError("speculative decode reads paged K/V through "
                              "the page-gather path; drop use_paged_kernel "
@@ -141,24 +177,37 @@ class LLMEngine:
         key = (backend.kind, getattr(backend, "block_size", 0))
         steps = self._serve.get(key)
         if steps is None:
-            paged = backend.kind == "paged"
+            paged = backend.kind in ("paged", "hybrid")
+            masked = backend.kind in STATE_KINDS
+            if backend.kind == "hybrid":
+                insert = make_hybrid_insert(self.model, backend.block_size)
+            elif backend.kind == "paged":
+                insert = make_paged_insert(backend.block_size)
+            else:
+                insert = make_slot_insert()
             steps = {
                 "decode": jax.jit(make_serve_decode_step(
-                    self.model, self.flags, paged=paged)),
-                "insert": jax.jit(make_paged_insert(backend.block_size)
-                                  if paged else make_slot_insert()),
+                    self.model, self.flags, paged=paged,
+                    masked_state=masked)),
+                "insert": jax.jit(insert),
             }
             self._serve[key] = steps
         return steps
 
     def new_cache(self, backend):
         """Zeroed decode cache in the backend's layout: ``num_slots``
-        contiguous max_len rows (slot) or a ``num_blocks`` x
-        ``block_size`` block-pool arena with trash block 0 (paged)."""
+        contiguous max_len rows (slot — the state layout shares it:
+        recurrent slot caches already ARE O(1) state slabs), a
+        ``num_blocks`` x ``block_size`` block-pool arena with trash
+        block 0 (paged), or the per-layer mix of both (hybrid)."""
         if backend.kind == "paged":
             self._check_paged(backend.block_size)
             abstract = self.model.abstract_paged_cache(backend.num_blocks,
                                                        backend.block_size)
+        elif backend.kind == "hybrid":
+            self._check_hybrid(backend.block_size)
+            abstract = self.model.abstract_hybrid_cache(
+                backend.num_slots, backend.num_blocks, backend.block_size)
         else:
             abstract = self.model.abstract_cache(backend.num_slots,
                                                  self.max_len)
@@ -167,10 +216,16 @@ class LLMEngine:
 
     def insert(self, backend, cache, rows, row: int, dst):
         """Land prefilled cache row ``row`` of ``rows`` in the cache.
-        ``dst`` is the backend's write ref: a slot index (slot layout) or
-        a [max_len // block_size] int32 page-id vector (paged layout,
-        0 = skip page)."""
+        ``dst`` is the backend's write ref: a slot index (slot/state
+        layouts), a [max_len // block_size] int32 page-id vector (paged
+        layout, 0 = skip page), or a ``(page_ids, slot)`` pair
+        (hybrid)."""
         step = self._serve_steps(backend)["insert"]
+        if backend.kind == "hybrid":
+            page_ids, slot = dst
+            return step(cache, rows, jnp.asarray(row, jnp.int32),
+                        jnp.asarray(page_ids, jnp.int32),
+                        jnp.asarray(slot, jnp.int32))
         return step(cache, rows, jnp.asarray(row, jnp.int32),
                     jnp.asarray(dst, jnp.int32))
 
@@ -190,7 +245,7 @@ class LLMEngine:
                 cache,
                 jnp.asarray(positions, jnp.int32),
                 jnp.asarray(active, bool))
-        if backend.kind == "paged":
+        if backend.kind in ("paged", "hybrid"):
             next_tok, cache = step(*args,
                                    jnp.asarray(block_tables, jnp.int32))
         else:
@@ -229,30 +284,82 @@ class LLMEngine:
             guess, cache = step(*args)
         return np.asarray(guess), cache
 
+    def verify_window(self, backend, cache, tokens: np.ndarray,
+                      positions: np.ndarray, active: np.ndarray,
+                      block_tables: Optional[np.ndarray] = None):
+        """:meth:`verify` for the state/hybrid layouts: same window
+        contract, but recurrent state slabs are left *uncommitted* and
+        per-position state stacks come back alongside — the backend's
+        ``truncate`` commits the accepted prefix via
+        :meth:`state_rewind` (docs/STATE_CACHE.md).  Returns
+        ([N, 1+k] guesses, cache, stacks)."""
+        width = int(np.asarray(tokens).shape[1])
+        key = (backend.kind, getattr(backend, "block_size", 0), width,
+               "stacks")
+        step = self._verify_steps.get(key)
+        if step is None:
+            step = jax.jit(make_state_verify_step(
+                self.model, self.flags, paged=backend.kind == "hybrid"))
+            self._verify_steps[key] = step
+        args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
+                jnp.asarray(positions, jnp.int32),
+                jnp.asarray(active, bool))
+        if backend.kind == "hybrid":
+            guess, cache, stacks = step(
+                *args, jnp.asarray(block_tables, jnp.int32))
+        else:
+            guess, cache, stacks = step(*args)
+        return np.asarray(guess), cache, stacks
+
+    def state_rewind(self, cache, stacks, slot: int, idx: int):
+        """Commit the state after window position ``idx`` (0-based) of
+        row ``slot`` from ``stacks`` (returned by :meth:`verify_window`)
+        into the live state slabs; attention leaves pass through.  One
+        jitted function retraces per (layout, window width)."""
+        if self._state_rewind is None:
+            self._state_rewind = jax.jit(make_state_rewind(self.model))
+        return self._state_rewind(cache, stacks,
+                                  jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(idx, jnp.int32))
+
     def extend(self, backend, cache, suffix_tokens: np.ndarray,
                prefix_len: int, ref) -> Tuple[np.ndarray, Dict]:
         """Chunked/prefix prefill: compute ``suffix_tokens`` (positions
         ``prefix_len`` on) against the request's cached prefix and write
         the new K/V back.  ``ref`` is the backend's write ref — a slot
-        index, or a ``(table_row, page_ids)`` pair.  Returns
+        index (slot/state), a ``(table_row, page_ids)`` pair (paged), or
+        a ``(table_row, page_ids, slot)`` triple (hybrid).  Returns
         ([1] next token after the suffix, cache).  Compiled per
         (layout, prefix_len, suffix shape)."""
-        paged = backend.kind == "paged"
-        key = (backend.kind, getattr(backend, "block_size", 0),
-               int(prefix_len))
+        kind = backend.kind
+        key = (kind, getattr(backend, "block_size", 0), int(prefix_len))
         step = self._extend_steps.get(key)
         if step is None:
-            step = jax.jit(make_extend_step(
-                self.model, int(prefix_len), self.flags,
-                block_size=backend.block_size if paged else 0,
-                max_cache_len=self.max_len))
+            if kind in STATE_KINDS:
+                step = jax.jit(make_state_extend_step(
+                    self.model, int(prefix_len), self.flags,
+                    block_size=backend.block_size if kind == "hybrid"
+                    else 0,
+                    max_cache_len=self.max_len))
+            else:
+                step = jax.jit(make_extend_step(
+                    self.model, int(prefix_len), self.flags,
+                    block_size=backend.block_size if kind == "paged"
+                    else 0,
+                    max_cache_len=self.max_len))
             self._extend_steps[key] = step
         suffix = jnp.asarray(suffix_tokens, jnp.int32)[None]
-        if paged:
+        if kind == "paged":
             table_row, page_ids = ref
             next_tok, cache = step(self.params, suffix, cache,
                                    jnp.asarray(table_row, jnp.int32),
                                    jnp.asarray(page_ids, jnp.int32))
+        elif kind == "hybrid":
+            table_row, page_ids, slot = ref
+            next_tok, cache = step(self.params, suffix, cache,
+                                   jnp.asarray(table_row, jnp.int32),
+                                   jnp.asarray(page_ids, jnp.int32),
+                                   jnp.asarray(slot, jnp.int32))
         else:
             next_tok, cache = step(self.params, suffix, cache,
                                    jnp.asarray(ref, jnp.int32))

@@ -154,6 +154,16 @@ class CacheBackend:
         raise NotImplementedError
 
     # -- speculative decoding (verify / truncate seam) --------------------
+    def spec_window_cap(self, frontier: int) -> int:
+        """Largest draft count ``k`` a verify tick may use when the
+        batch's most-advanced row sits at ``frontier``.  The base bound
+        is cache geometry — the window writes at every row's frontier,
+        so ``frontier + k`` must stay inside ``max_len``.  State-slab
+        backends clamp further: their verify materializes a per-position
+        state stack, so the window is also a memory budget
+        (``spec_window``, docs/STATE_CACHE.md)."""
+        return self.engine.max_len - 1 - int(frontier)
+
     def verify(self, tokens: np.ndarray, positions: np.ndarray,
                active: np.ndarray) -> np.ndarray:
         """Score a speculative window — ``tokens`` is [N, 1+k] (each
@@ -398,6 +408,15 @@ class PagedBackend(CacheBackend):
         bs = self.block_size
         return max(bs, -(-int(chunk) // bs) * bs)
 
+    def _insert_ref(self, req, page_ids):
+        """Engine write ref for a whole-prompt insert (hybrid adds the
+        slot so recurrent slabs land alongside the page scatter)."""
+        return page_ids
+
+    def _extend_ref(self, req, page_ids):
+        """Engine write ref for a chunked/prefix extend."""
+        return (self.tables[req.slot], page_ids)
+
     def ingest(self, req, seq, start, end) -> Optional[int]:
         bs = self.block_size
         new_pages = -(-end // bs) - req.n_pages
@@ -413,11 +432,11 @@ class PagedBackend(CacheBackend):
         if start == 0:
             first, rows = self.engine.prefill(seq[None, :end])
             self.cache = self.engine.insert(self, self.cache, rows, 0,
-                                            page_ids)
+                                            self._insert_ref(req, page_ids))
         else:
             first, self.cache = self.engine.extend(
                 self, self.cache, seq[start:end], start,
-                (self.tables[req.slot], page_ids))
+                self._extend_ref(req, page_ids))
             self.stats["extend_prefills"] += 1
         self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += int(end - start)
@@ -497,11 +516,31 @@ class PagedBackend(CacheBackend):
 def make_backend(engine, *, paged: bool = False, num_slots: int = 4,
                  num_blocks: int = 0, block_size: int = 16,
                  prefix_sharing: bool = True, admission: str = "preempt",
-                 watermark: int = 0) -> CacheBackend:
-    """Backend factory used by the serving calculator and launchers."""
-    if not paged:
+                 watermark: int = 0, backend: Optional[str] = None,
+                 spec_window: int = 8) -> CacheBackend:
+    """Backend factory used by the serving calculator and launchers.
+
+    ``backend`` selects the layout by name — ``"slot" | "paged" |
+    "state" | "hybrid"`` — and wins over the legacy ``paged`` flag
+    (kept so existing call sites stay valid).  ``spec_window`` is the
+    state/hybrid verify-window cap (docs/STATE_CACHE.md)."""
+    kind = backend if backend is not None else \
+        ("paged" if paged else "slot")
+    if kind == "slot":
         return SlotBackend(engine, num_slots)
-    return PagedBackend(engine, num_slots, num_blocks=num_blocks,
-                        block_size=block_size,
-                        prefix_sharing=prefix_sharing,
-                        admission=admission, watermark=watermark)
+    if kind == "paged":
+        return PagedBackend(engine, num_slots, num_blocks=num_blocks,
+                            block_size=block_size,
+                            prefix_sharing=prefix_sharing,
+                            admission=admission, watermark=watermark)
+    # deferred import: state.py subclasses the classes defined above
+    from .state import HybridBackend, StateBackend
+    if kind == "state":
+        return StateBackend(engine, num_slots, spec_window=spec_window)
+    if kind == "hybrid":
+        return HybridBackend(engine, num_slots, num_blocks=num_blocks,
+                             block_size=block_size, admission=admission,
+                             watermark=watermark,
+                             spec_window=spec_window)
+    raise ValueError(f"unknown backend kind {kind!r} (expected 'slot', "
+                     f"'paged', 'state' or 'hybrid')")

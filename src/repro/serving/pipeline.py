@@ -88,7 +88,9 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
                                    block_size: int = 16,
                                    prefix_sharing: bool = True,
                                    admission: str = "preempt",
-                                   watermark: int = 0
+                                   watermark: int = 0,
+                                   backend: Optional[str] = None,
+                                   spec_window: int = 8
                                    ) -> GraphConfig:
     """Continuous-batching serving graph (the GraphServer topology).
 
@@ -107,6 +109,13 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     ``speculate_k > 0`` turns on self-speculative decoding as the
     default for every request (prompt-lookup drafting with n-grams up
     to ``spec_ngram``; see docs/SPECULATIVE.md).
+
+    ``backend`` names the cache layout outright ("slot" | "paged" |
+    "state" | "hybrid"; wins over the legacy ``paged`` flag).  "state"
+    serves recurrent/mixed stacks from O(1) state slabs; "hybrid"
+    (Jamba-style) pages attention K/V while recurrent layers ride state
+    slabs — ``spec_window`` caps their speculative verify window
+    (docs/STATE_CACHE.md).
     """
     if max_in_flight <= 0:
         max_in_flight = 2 * num_slots
@@ -121,8 +130,11 @@ def build_continuous_serving_graph(*, num_slots: int = 4,
     engine_opts = {"num_slots": num_slots, "max_new_tokens": max_new_tokens,
                    "eos_id": eos_id, "chunk_size": chunk_size,
                    "speculate_k": speculate_k, "spec_ngram": spec_ngram}
-    if paged:
-        engine_opts.update({"paged": True, "num_blocks": num_blocks,
+    if backend is not None:
+        engine_opts.update({"backend": backend,
+                            "spec_window": spec_window})
+    if paged or backend in ("paged", "hybrid"):
+        engine_opts.update({"paged": paged, "num_blocks": num_blocks,
                             "block_size": block_size,
                             "prefix_sharing": prefix_sharing,
                             "admission": admission,

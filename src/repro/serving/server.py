@@ -171,15 +171,23 @@ class GraphServer:
                  speculate_k: int = 0, spec_ngram: int = 3,
                  paged: bool = False, num_blocks: int = 0,
                  block_size: int = 16, prefix_sharing: bool = True,
-                 admission: str = "preempt", watermark: int = 0):
+                 admission: str = "preempt", watermark: int = 0,
+                 backend: Optional[str] = None, spec_window: int = 8):
         self.engine = engine
         self._default_max_new = max_new_tokens
+        # "backend" names the layout outright ("slot" | "paged" | "state"
+        # | "hybrid") and wins over the legacy paged flag; "state" serves
+        # recurrent/mixed stacks from O(1) state slabs, "hybrid" pages
+        # attention K/V alongside them (docs/STATE_CACHE.md)
+        kind = backend if backend is not None else \
+            ("paged" if paged else "slot")
+        self._backend_kind = kind
         if speculate_k:
             # fail in the caller's thread, not inside the graph run
-            engine.check_spec_support()
-        self._paged = paged
+            engine.check_spec_support(kind)
+        self._paged = kind in ("paged", "hybrid")   # block-math capacity
         self._block_size = block_size
-        if paged:
+        if self._paged:
             if num_blocks <= 0:
                 # arena sized to num_slots worst-case rows by default —
                 # the same memory the slot cache would have used
@@ -206,7 +214,8 @@ class GraphServer:
             speculate_k=speculate_k, spec_ngram=spec_ngram,
             paged=paged, num_blocks=num_blocks, block_size=block_size,
             prefix_sharing=prefix_sharing, admission=admission,
-            watermark=watermark)
+            watermark=watermark, backend=backend,
+            spec_window=spec_window)
         self.graph = Graph(cfg, side_packets={"engine": engine})
         self._token_poller = self.graph.add_output_stream_poller("tokens")
         self._handles: Dict[Any, RequestHandle] = {}
@@ -217,6 +226,20 @@ class GraphServer:
         self._closed = False
         self._final_stats: Dict[str, Any] = {}
         self.graph.start_run()
+        # start_run opens calculators on executor threads; block until
+        # the engine node's open() (scheduler + device cache
+        # construction) lands so stats() deterministically reports the
+        # scheduler counters from the moment the constructor returns —
+        # and so a backend/arch mismatch raises here, not on first use
+        engine_node = next(n for n in self.graph.nodes
+                           if n.name == "engine")
+        deadline = time.monotonic() + 300.0
+        while not hasattr(engine_node.calculator, "sched"):
+            self.graph._check_error()
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    "engine calculator did not finish opening")
+            time.sleep(0.001)
         self._threads = [
             threading.Thread(target=self._pump_tokens, daemon=True,
                              name="graphserver-tokens"),
@@ -276,11 +299,14 @@ class GraphServer:
                 raise ValueError(f"speculate_k must be >= 0, "
                                  f"got {int(speculate_k)}")
             if int(speculate_k) > 0:
-                self.engine.check_spec_support()
+                self.engine.check_spec_support(self._backend_kind)
         new = self._default_max_new if max_new_tokens is None \
             else int(max_new_tokens)
         if tokens.size == 0:
             raise ValueError("empty prompt")
+        # state slabs are O(1) per request, so the state backend's only
+        # bound is engine max_len (num_blocks=0 skips the block math);
+        # hybrid keeps the block math for its attention layers
         cap = max_request_tokens(
             self.engine.max_len,
             self._num_blocks if self._paged else 0, self._block_size)

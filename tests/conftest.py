@@ -5,7 +5,9 @@ asserts, at server close, that the cache arena returned to baseline:
 
 * every slot is back on the free list,
 * (paged) zero blocks in use, zero reserved, pool invariants hold,
-* (paged, prefix sharing) the prefix index holds zero registered chains.
+* (paged, prefix sharing) the prefix index holds zero registered chains,
+* (state/hybrid) zero state slabs held — recurrent-state occupancy is
+  back to baseline.
 
 The check is autouse via a ``GraphServer.close`` wrapper — no test has
 to opt in, so every current and future server test (continuous
@@ -52,6 +54,10 @@ def graphserver_leak_check(monkeypatch):
             if sched.prefix is not None and len(sched.prefix) != 0:
                 leaks.append(f"prefix index still holds "
                              f"{len(sched.prefix)} chains after close")
+            slabs = getattr(sched.backend, "slabs_in_use", None)
+            if slabs:
+                leaks.append(f"{slabs} state slabs still held "
+                             f"after close")
         return stats
 
     monkeypatch.setattr(GraphServer, "close", checked_close)

@@ -23,7 +23,7 @@ import pytest
 import repro.calculators  # noqa: F401
 from repro.configs import get_config
 from repro.serving import (GraphServer, LLMEngine, PagedBackend, Scheduler,
-                           SlotBackend)
+                           SlotBackend, StateBackend)
 
 
 def small_cfg(arch="minicpm_2b"):
@@ -32,9 +32,39 @@ def small_cfg(arch="minicpm_2b"):
                                vocab_size=512)
 
 
+def recurrent_cfg():
+    # xLSTM reduced to one mLSTM + one sLSTM block: no attention at all,
+    # so the state backend's slab path carries the whole request
+    cfg = get_config("xlstm_1_3b").reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=128,
+                               vocab_size=512,
+                               block_pattern=("mlstm", "slstm"))
+
+
+def mixed_cfg():
+    # Jamba reduced: ("attn", "mamba") — the hybrid backend pages the
+    # attention layer while the mamba layer rides a state slab
+    cfg = get_config("jamba_1_5_large_398b").reduced()
+    return dataclasses.replace(cfg, d_model=128, vocab_size=512)
+
+
 @pytest.fixture(scope="module")
 def engine():
     return LLMEngine(small_cfg(), max_len=64, seed=7)
+
+
+@pytest.fixture(scope="module")
+def engines(engine):
+    """Engine per backend kind: slot/paged share the attention-only
+    engine; state gets the recurrent stack, hybrid the Jamba-style mix."""
+    cache = {"slot": engine, "paged": engine}
+
+    def get(kind):
+        if kind not in cache:
+            cfg = recurrent_cfg() if kind == "state" else mixed_cfg()
+            cache[kind] = LLMEngine(cfg, max_len=64, seed=7)
+        return cache[kind]
+    return get
 
 
 def make_prompts(rng, lengths):
@@ -46,6 +76,8 @@ def make_backend(engine, kind, num_slots, **kw):
         kw.setdefault("num_blocks", 65)
         kw.setdefault("block_size", 8)
         return PagedBackend(engine, num_slots, **kw)
+    if kind == "state":
+        return StateBackend(engine, num_slots, **kw)
     return SlotBackend(engine, num_slots)
 
 
@@ -63,7 +95,7 @@ class TestScheduler:
     """The host-side scheduler, independent of the graph — one Scheduler
     class driven through either CacheBackend."""
 
-    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    @pytest.mark.parametrize("kind", ["slot", "paged", "state"])
     def test_insert_decode_evict_matches_sequential(self, engine, kind):
         rng = np.random.RandomState(0)
         prompts = make_prompts(rng, [5, 9, 5, 13, 7])
@@ -171,7 +203,7 @@ class TestScheduler:
 class TestChunkedPrefill:
     """Long prompts ingested chunk-by-chunk, interleaved with decode."""
 
-    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    @pytest.mark.parametrize("kind", ["slot", "paged", "state"])
     def test_chunked_matches_whole_prefill(self, engine, kind):
         rng = np.random.RandomState(10)
         long_p = rng.randint(0, 512, size=37).astype(np.int32)
@@ -259,7 +291,7 @@ class TestPreemption:
         assert sched._pick_victim() is a
         drain(sched)
 
-    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    @pytest.mark.parametrize("kind", ["slot", "paged", "state"])
     def test_forced_preemption_mid_decode(self, engine, kind):
         """Preempt a request that already streamed tokens: the replay
         re-derives (and suppresses) them, then continues identically."""
@@ -329,21 +361,33 @@ class TestPreemption:
                 assert sched.pool.blocks_in_use == 0
 
 
-@pytest.fixture(scope="module", params=["slot", "paged", "slot-chunked",
-                                        "paged-chunked"])
-def server_factory(request, engine):
-    """Build a GraphServer in each KV-cache/chunking mode.  Every
-    TestGraphServer test runs four ways; the paged runs pin that
+@pytest.fixture(scope="module", params=["slot", "paged", "state", "hybrid",
+                                        "slot-chunked", "paged-chunked",
+                                        "state-chunked", "hybrid-chunked"])
+def server_factory(request, engines):
+    """Build a GraphServer in each cache-backend/chunking mode.  Every
+    TestGraphServer test runs eight ways; the paged runs pin that
     block-table decode stays bit-identical to the contiguous cache_pos
     decode, the chunked runs that chunk boundaries never leak into
-    outputs."""
+    outputs, and the state/hybrid runs that recurrent state slabs (and
+    the Jamba-style per-layer mix) behave identically through the
+    UNCHANGED scheduler and graph."""
+    kind = request.param.split("-")[0]
+    eng = engines(kind)
+
     def make(**kw):
-        if request.param.startswith("paged"):
+        if kind == "paged":
             kw.update(paged=True, block_size=8,
                       num_blocks=kw.pop("num_blocks", 65))
+        elif kind == "hybrid":
+            kw.update(backend="hybrid", block_size=8,
+                      num_blocks=kw.pop("num_blocks", 65))
+        elif kind == "state":
+            kw.setdefault("backend", "state")
         if request.param.endswith("chunked"):
             kw.setdefault("chunk_size", 8)
-        return GraphServer(engine, **kw)
+        return GraphServer(eng, **kw)
+    make.engine = eng
     return make
 
 
@@ -353,10 +397,10 @@ class TestGraphServer:
     (contiguous rows) and paged (block tables) KV caches, plain and
     chunked."""
 
-    def test_unequal_lengths_match_sequential(self, engine, server_factory):
+    def test_unequal_lengths_match_sequential(self, server_factory):
         rng = np.random.RandomState(4)
         prompts = make_prompts(rng, [5, 9, 5, 13, 7, 11, 5, 9])
-        refs = [engine.generate(p[None], max_new_tokens=6)[0]
+        refs = [server_factory.engine.generate(p[None], max_new_tokens=6)[0]
                 for p in prompts]
         with server_factory(num_slots=4, max_new_tokens=6) as srv:
             handles = [srv.submit(p) for p in prompts]
@@ -364,10 +408,10 @@ class TestGraphServer:
         for got, ref in zip(results, refs):
             np.testing.assert_array_equal(got, ref)
 
-    def test_concurrent_client_threads(self, engine, server_factory):
+    def test_concurrent_client_threads(self, server_factory):
         rng = np.random.RandomState(5)
         prompts = make_prompts(rng, [6, 6, 10, 10, 6, 10])
-        refs = [engine.generate(p[None], max_new_tokens=5)[0]
+        refs = [server_factory.engine.generate(p[None], max_new_tokens=5)[0]
                 for p in prompts]
         results = [None] * len(prompts)
         with server_factory(num_slots=3, max_new_tokens=5) as srv:
@@ -382,7 +426,7 @@ class TestGraphServer:
         for got, ref in zip(results, refs):
             np.testing.assert_array_equal(got, ref)
 
-    def test_streaming_tokens_match_result(self, engine, server_factory):
+    def test_streaming_tokens_match_result(self, server_factory):
         rng = np.random.RandomState(6)
         prompt = make_prompts(rng, [8])[0]
         with server_factory(num_slots=2, max_new_tokens=6) as srv:
@@ -391,7 +435,7 @@ class TestGraphServer:
             final = h.result(timeout=10)
         np.testing.assert_array_equal(np.asarray(streamed, np.int32), final)
 
-    def test_admission_throttled_under_max_in_flight(self, engine,
+    def test_admission_throttled_under_max_in_flight(self,
                                                      server_factory):
         """More requests than max_in_flight: the FlowLimiter keeps the
         engine subsystem at <= max_in_flight outstanding requests, yet all
@@ -411,7 +455,7 @@ class TestGraphServer:
         assert stats["scheduler"]["max_outstanding"] <= 3
         assert stats["scheduler"]["max_active_slots"] <= 2
 
-    def test_submit_rejects_oversized_prompt(self, engine, server_factory):
+    def test_submit_rejects_oversized_prompt(self, server_factory):
         """Invalid requests fail client-side instead of killing the graph."""
         with server_factory(num_slots=2, max_new_tokens=16) as srv:
             with pytest.raises(ValueError):
@@ -420,7 +464,7 @@ class TestGraphServer:
             ok = srv.submit(np.ones(4, np.int32), max_new_tokens=2)
             assert ok.result(timeout=120) is not None
 
-    def test_finish_out_of_request_order(self, engine, server_factory):
+    def test_finish_out_of_request_order(self, server_factory):
         """A short request submitted after a long one completes first —
         the defining behaviour continuous batching adds over the
         batch-and-drain pipeline."""

@@ -1,8 +1,9 @@
 """Hypothesis property tests for the unified Scheduler: random arrival
 patterns, prompt lengths, priorities, chunk sizes and forced preemptions
-on BOTH cache backends must leave every request's output bit-identical
-to sequential greedy decode, and (paged) must preserve the BlockPool
-invariants after every preemption with zero blocks leaked at the end.
+on ALL FOUR cache backends (slot, paged, state, hybrid) must leave every
+request's output bit-identical to sequential greedy decode, and
+(paged/hybrid) must preserve the BlockPool invariants after every
+preemption with zero blocks — and zero state slabs — leaked at the end.
 
 A deterministic (hypothesis-free) sweep of the same property lives in
 test_continuous_batching.py so tier-1 always covers it; this file is the
@@ -18,7 +19,8 @@ from hypothesis import given, settings, strategies as st
 
 import repro.calculators  # noqa: F401
 from repro.configs import get_config
-from repro.serving import LLMEngine, PagedBackend, Scheduler, SlotBackend
+from repro.serving import (HybridBackend, LLMEngine, PagedBackend,
+                           Scheduler, SlotBackend, StateBackend)
 
 MAX_LEN = 32
 
@@ -29,24 +31,60 @@ def tiny_cfg():
                                vocab_size=256)
 
 
+def tiny_recurrent_cfg():
+    cfg = get_config("xlstm_1_3b").reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=64,
+                               vocab_size=256,
+                               block_pattern=("mlstm", "slstm"))
+
+
+def tiny_mixed_cfg():
+    cfg = get_config("jamba_1_5_large_398b").reduced()
+    return dataclasses.replace(cfg, d_model=64, vocab_size=256)
+
+
 @pytest.fixture(scope="module")
-def engine():
-    return LLMEngine(tiny_cfg(), max_len=MAX_LEN, seed=11)
+def engines():
+    """Engine per backend kind (built lazily: hypothesis decides which
+    kinds a run actually visits)."""
+    cache = {}
+    cfgs = {"slot": tiny_cfg, "paged": tiny_cfg,
+            "state": tiny_recurrent_cfg, "hybrid": tiny_mixed_cfg}
+
+    def get(kind):
+        if kind not in cache:
+            cache[kind] = LLMEngine(cfgs[kind](), max_len=MAX_LEN, seed=11)
+        return cache[kind]
+    get("paged")
+    cache["slot"] = cache["paged"]
+    return get
 
 
 _ref_cache = {}
 
 
 def reference(engine, prompt, max_new):
-    key = (prompt.tobytes(), max_new)
+    key = (id(engine), prompt.tobytes(), max_new)
     if key not in _ref_cache:
         _ref_cache[key] = engine.generate(prompt[None],
                                           max_new_tokens=max_new)[0]
     return _ref_cache[key]
 
 
+def build_backend(engine, kind, num_slots, num_blocks):
+    if kind == "paged":
+        return PagedBackend(engine, num_slots, num_blocks=num_blocks,
+                            block_size=4)
+    if kind == "hybrid":
+        return HybridBackend(engine, num_slots, num_blocks=num_blocks,
+                             block_size=4)
+    if kind == "state":
+        return StateBackend(engine, num_slots)
+    return SlotBackend(engine, num_slots)
+
+
 schedule = st.fixed_dictionaries({
-    "kind": st.sampled_from(["slot", "paged"]),
+    "kind": st.sampled_from(["slot", "paged", "state", "hybrid"]),
     "num_slots": st.integers(2, 4),
     "num_blocks": st.integers(8, 20),
     "max_new": st.integers(2, 6),
@@ -62,7 +100,8 @@ schedule = st.fixed_dictionaries({
 
 @settings(max_examples=25, deadline=None)
 @given(schedule)
-def test_random_schedules_bit_identical(engine, sched_def):
+def test_random_schedules_bit_identical(engines, sched_def):
+    engine = engines(sched_def["kind"])
     max_new = sched_def["max_new"]
     entries = [(L, prio, seed) for L, prio, seed in sched_def["prompts"]
                if L + max_new <= MAX_LEN]
@@ -71,10 +110,10 @@ def test_random_schedules_bit_identical(engine, sched_def):
     prios = [prio for _, prio, _ in entries]
     if not prompts:
         return
-    if sched_def["kind"] == "paged":
-        backend = PagedBackend(engine, sched_def["num_slots"],
-                               num_blocks=sched_def["num_blocks"],
-                               block_size=4)
+    backend = build_backend(engine, sched_def["kind"],
+                            sched_def["num_slots"],
+                            sched_def["num_blocks"])
+    if sched_def["kind"] in ("paged", "hybrid"):
         # an unservable request would be rejected at submit; keep the
         # schedule focused on servable ones
         cap = backend.max_request_tokens()
@@ -84,8 +123,6 @@ def test_random_schedules_bit_identical(engine, sched_def):
         prios = [prios[i] for i in keep]
         if not prompts:
             return
-    else:
-        backend = SlotBackend(engine, sched_def["num_slots"])
     refs = [reference(engine, p, max_new) for p in prompts]
     sched = Scheduler(backend, max_new_tokens=max_new,
                       chunk_size=sched_def["chunk"])
@@ -127,7 +164,9 @@ def test_random_schedules_bit_identical(engine, sched_def):
         sched.pool.check_invariants()
         assert sched.pool.blocks_in_use == 0
         assert sched.pool.reserved_blocks == 0
+    if sched.prefix is not None:
         assert len(sched.prefix) == 0
+    assert getattr(sched.backend, "slabs_in_use", 0) == 0
     assert sorted(sched.free) == list(range(sched.num_slots))
 
 
@@ -138,7 +177,7 @@ def test_random_schedules_bit_identical(engine, sched_def):
 # leaks, and a preempted-then-expired request is not double-counted.
 
 deadline_schedule = st.fixed_dictionaries({
-    "kind": st.sampled_from(["slot", "paged"]),
+    "kind": st.sampled_from(["slot", "paged", "state", "hybrid"]),
     "num_slots": st.integers(1, 3),
     "num_blocks": st.integers(8, 20),
     "max_new": st.integers(2, 5),
@@ -155,14 +194,12 @@ deadline_schedule = st.fixed_dictionaries({
 
 @settings(max_examples=25, deadline=None)
 @given(deadline_schedule)
-def test_deadline_schedules_exact_and_leak_free(engine, sched_def):
+def test_deadline_schedules_exact_and_leak_free(engines, sched_def):
+    engine = engines(sched_def["kind"])
     max_new = sched_def["max_new"]
-    if sched_def["kind"] == "paged":
-        backend = PagedBackend(engine, sched_def["num_slots"],
-                               num_blocks=sched_def["num_blocks"],
-                               block_size=4)
-    else:
-        backend = SlotBackend(engine, sched_def["num_slots"])
+    backend = build_backend(engine, sched_def["kind"],
+                            sched_def["num_slots"],
+                            sched_def["num_blocks"])
     cap = backend.max_request_tokens()
     entries = [e for e in sched_def["prompts"]
                if e[0] + max_new <= min(MAX_LEN, cap)]
@@ -222,5 +259,7 @@ def test_deadline_schedules_exact_and_leak_free(engine, sched_def):
         sched.pool.check_invariants()
         assert sched.pool.blocks_in_use == 0
         assert sched.pool.reserved_blocks == 0
+    if sched.prefix is not None:
         assert len(sched.prefix) == 0
+    assert getattr(sched.backend, "slabs_in_use", 0) == 0
     assert sorted(sched.free) == list(range(sched.num_slots))

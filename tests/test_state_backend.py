@@ -1,0 +1,439 @@
+"""StateBackend + HybridBackend: recurrent and Jamba-style mixed stacks
+served through the UNCHANGED Scheduler/GraphServer, bit-identical to
+sequential greedy decode.
+
+What makes these backends different from slot/paged — and what this file
+pins down:
+
+* Recurrent layers hold O(1) state per sequence, so "the cache" is a
+  fixed-size slab per slot, not a token-indexed region.  Chunked prefill
+  checkpoints the state at the ingest frontier; preemption-replay
+  recomputes it; both must land on the bit-identical state (prefill is a
+  `lax.scan` of the exact decode-step op — docs/STATE_CACHE.md).
+* Speculative verify cannot "keep the prefix" of a recurrent state the
+  way attention keeps K/V rows: accepting a tokens means the state must
+  be AS IF exactly a tokens were consumed.  The backend snapshots
+  per-position state stacks during the verify pass and rewinds to the
+  accept boundary on truncate — adversarial (always-wrong) and oracle
+  (always-right) draft functions exercise both extremes.
+* HybridBackend routes attention layers to the paged block pool and
+  recurrent layers to state slabs; one CachePressure story must free
+  BOTH resource kinds atomically (preempt → blocks and slab released in
+  the same tick).
+
+Everything runs under the autouse leak check in tests/conftest.py; the
+scheduler-level tests assert slab/block/slot baselines explicitly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.calculators  # noqa: F401
+from repro.configs import get_config
+from repro.serving import (GraphServer, HybridBackend, LLMEngine,
+                           PagedBackend, Scheduler, StateBackend)
+
+MAX_LEN = 64
+VOCAB = 256
+
+
+def recurrent_cfg():
+    cfg = get_config("xlstm_1_3b").reduced()
+    # the stock reduced pattern is all-mLSTM at 2 layers; force one of
+    # each so the sLSTM state path is covered too
+    return dataclasses.replace(cfg, num_layers=2, d_model=64,
+                               vocab_size=VOCAB,
+                               block_pattern=("mlstm", "slstm"))
+
+
+def mixed_cfg():
+    cfg = get_config("jamba_1_5_large_398b").reduced()
+    return dataclasses.replace(cfg, d_model=64, vocab_size=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def xlstm_engine():
+    return LLMEngine(recurrent_cfg(), max_len=MAX_LEN, seed=7)
+
+
+@pytest.fixture(scope="module")
+def jamba_engine():
+    return LLMEngine(mixed_cfg(), max_len=MAX_LEN, seed=3)
+
+
+@pytest.fixture(scope="module")
+def engines(xlstm_engine, jamba_engine):
+    return {"state": xlstm_engine, "hybrid": jamba_engine}
+
+
+def build_backend(engines, kind, num_slots, **kw):
+    if kind == "hybrid":
+        kw.setdefault("num_blocks", 33)
+        kw.setdefault("block_size", 8)
+        return HybridBackend(engines["hybrid"], num_slots, **kw)
+    return StateBackend(engines["state"], num_slots, **kw)
+
+
+def make_prompts(rng, lengths):
+    return [rng.randint(0, VOCAB, size=L).astype(np.int32)
+            for L in lengths]
+
+
+def drain(sched, got=None):
+    got = {} if got is None else got
+    while sched.has_work():
+        for ev in sched.admit() + sched.step():
+            if ev.finished:
+                got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                np.int32)
+    return got
+
+
+def assert_baseline(sched):
+    """Nothing leaked: slots, slabs and (hybrid) blocks all returned."""
+    assert sorted(sched.free) == list(range(sched.num_slots))
+    assert sched.backend.slabs_in_use == 0
+    if sched.pool is not None:
+        sched.pool.check_invariants()
+        assert sched.pool.blocks_in_use == 0
+
+
+class Oracle:
+    """Draft function that always proposes the true continuation —
+    forces maximal acceptance, i.e. the deepest rewind indices."""
+
+    def __init__(self, prompts, refs):
+        self.map = {tuple(p.tolist()): r for p, r in zip(prompts, refs)}
+
+    def __call__(self, ctx, k):
+        for p, r in self.map.items():
+            L = len(p)
+            if len(ctx) >= L and tuple(np.asarray(ctx[:L]).tolist()) == p:
+                done = len(ctx) - L
+                return np.asarray(r[done:done + k], np.int32)
+        return np.zeros(0, np.int32)
+
+
+def chaotic_draft_fn(seed):
+    """Deterministically wrong-ish drafts: mostly rejected at position
+    0, occasionally a lucky accept — every rewind index gets visited."""
+    rng = np.random.RandomState(seed)
+
+    def draft(ctx, k):
+        n = 1 + rng.randint(k)
+        return np.asarray([ctx[-1] if rng.rand() < .5 else rng.randint(VOCAB)
+                           for _ in range(n)], np.int32)
+    return draft
+
+
+class TestBitIdentity:
+    """The tentpole invariant: chunked prefill x preemption-replay x
+    speculative verify on state slabs == sequential greedy decode."""
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_plain_decode_matches_sequential(self, engines, kind):
+        rng = np.random.RandomState(0)
+        prompts = make_prompts(rng, [5, 9, 5, 13, 7])
+        eng = engines[kind]
+        refs = [eng.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        sched = Scheduler(build_backend(engines, kind, 3),
+                          max_new_tokens=6)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_chunked_prefill_checkpoints_state(self, engines, kind):
+        """A 37-token prompt ingested 8 tokens per tick: the state at
+        the ingest frontier is checkpointed in the slab between ticks
+        and the result is bit-identical to whole-prompt prefill."""
+        rng = np.random.RandomState(1)
+        long_p, short_p = make_prompts(rng, [37, 6])
+        eng = engines[kind]
+        ref_long = eng.generate(long_p[None], max_new_tokens=5)[0]
+        ref_short = eng.generate(short_p[None], max_new_tokens=5)[0]
+        sched = Scheduler(build_backend(engines, kind, 2),
+                          max_new_tokens=5, chunk_size=8)
+        sched.submit({"tokens": long_p, "id": "long"})
+        sched.submit({"tokens": short_p, "id": "short"})
+        got = drain(sched)
+        np.testing.assert_array_equal(got["long"], ref_long)
+        np.testing.assert_array_equal(got["short"], ref_short)
+        assert sched.stats["chunked_prefill_ticks"] >= 4
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_preemption_replays_state_exactly(self, engines, kind):
+        """Preempt a request mid-decode: its slab is released, the
+        replay re-runs the state scan over its whole history, and the
+        continuation is bit-identical (no stale state survives)."""
+        rng = np.random.RandomState(2)
+        prompts = make_prompts(rng, [5, 9])
+        eng = engines[kind]
+        refs = [eng.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        sched = Scheduler(build_backend(engines, kind, 2),
+                          max_new_tokens=6)
+        r0 = sched.submit({"tokens": prompts[0], "id": 0})
+        sched.submit({"tokens": prompts[1], "id": 1})
+        sched.admit()
+        sched.step()
+        sched.step()
+        held_before = sched.backend.slabs_in_use
+        sched.preempt(r0)
+        assert sched.backend.slabs_in_use == held_before - 1
+        got = drain(sched, {})
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert r0.preemptions == 1
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_random_schedule_sweep_bit_identical(self, engines, kind):
+        """Deterministic sweep over arrivals, priorities, chunk sizes,
+        speculation and forced preemptions — the state/hybrid twin of
+        the sweep in test_continuous_batching.py."""
+        rng = np.random.RandomState(15)
+        eng = engines[kind]
+        for trial in range(4):
+            lengths = rng.randint(3, 30, size=rng.randint(3, 6))
+            prompts = make_prompts(rng, lengths)
+            max_new = int(rng.randint(2, 8))
+            refs = [eng.generate(p[None], max_new_tokens=max_new)[0]
+                    for p in prompts]
+            chunk = (None, 8)[trial % 2]
+            spec = (0, 3)[(trial // 2) % 2]
+            sched = Scheduler(
+                build_backend(engines, kind, int(rng.randint(2, 4))),
+                max_new_tokens=max_new, chunk_size=chunk,
+                speculate_k=spec)
+            got = {}
+            pending = list(enumerate(prompts))
+            while sched.has_work() or pending:
+                if pending and rng.rand() < 0.6:
+                    i, p = pending.pop(0)
+                    sched.submit({"tokens": p, "id": i,
+                                  "priority": int(rng.randint(0, 3))})
+                for ev in sched.admit() + sched.step():
+                    if ev.finished:
+                        got[ev.request.id] = np.asarray(
+                            ev.request.tokens, np.int32)
+                holders = [r for r in sched.slots if r is not None]
+                if holders and rng.rand() < 0.15:
+                    sched.preempt(holders[rng.randint(len(holders))])
+                if sched.pool is not None:
+                    sched.pool.check_invariants()
+            for i, ref in enumerate(refs):
+                np.testing.assert_array_equal(got[i], ref)
+            assert_baseline(sched)
+
+
+class TestSpeculativeRewind:
+    """Snapshot-at-verify + rewind-on-truncate: the state after
+    accepting a of k drafted tokens equals the state of a sequential
+    decode that consumed exactly a tokens."""
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_adversarial_drafts_stay_exact(self, engines, kind):
+        """Drafts engineered to be mostly wrong: nearly every verify
+        tick rewinds to the shallowest index, outputs stay exact."""
+        rng = np.random.RandomState(4)
+        prompts = make_prompts(rng, [5, 9, 13])
+        eng = engines[kind]
+        refs = [eng.generate(p[None], max_new_tokens=8)[0]
+                for p in prompts]
+        sched = Scheduler(build_backend(engines, kind, 2),
+                          max_new_tokens=8, chunk_size=8, speculate_k=4,
+                          draft_fn=chaotic_draft_fn(42))
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["spec_drafted"] > 0
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_oracle_drafts_accept_fully(self, engines, kind):
+        """Drafts that are always right: every verify tick commits the
+        DEEPEST stack index (full window accepted) and the bonus token,
+        still bit-identical."""
+        rng = np.random.RandomState(5)
+        prompts = make_prompts(rng, [5, 9, 13])
+        eng = engines[kind]
+        refs = [eng.generate(p[None], max_new_tokens=8)[0]
+                for p in prompts]
+        sched = Scheduler(build_backend(engines, kind, 3),
+                          max_new_tokens=8, speculate_k=4,
+                          draft_fn=Oracle(prompts, refs))
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["spec_drafted"] > 0
+        assert sched.stats["spec_accepted"] == sched.stats["spec_drafted"]
+        assert_baseline(sched)
+
+    def test_spec_window_caps_draft_length(self, engines):
+        """The backend-provided clamp: state backends bound the verify
+        window (the per-position stack memory), so a scheduler asking
+        for k=6 drafts at most spec_window tokens per tick."""
+        be = StateBackend(engines["state"], 2, spec_window=2)
+        assert be.spec_window_cap(10) == 2
+        # near the engine capacity the base frontier clamp still wins
+        assert be.spec_window_cap(MAX_LEN - 2) == 1
+        assert be.spec_window_cap(MAX_LEN - 1) == 0
+
+        rng = np.random.RandomState(6)
+        prompts = make_prompts(rng, [5, 9])
+        eng = engines["state"]
+        refs = [eng.generate(p[None], max_new_tokens=8)[0]
+                for p in prompts]
+        sched = Scheduler(be, max_new_tokens=8, speculate_k=6,
+                          draft_fn=Oracle(prompts, refs))
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = drain(sched)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        # never more than spec_window drafted per request per tick
+        # (unclamped, the oracle would happily hand out k=6 per row)
+        assert sched.stats["spec_drafted"] <= \
+            2 * len(prompts) * sched.stats["spec_steps"]
+        assert_baseline(sched)
+
+
+class TestLifecycle:
+    """PR 6's invariants — cancellation everywhere, deadline expiry,
+    leak-to-baseline — hold on the new backends."""
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_cancel_mid_flight_frees_slab(self, engines, kind):
+        rng = np.random.RandomState(7)
+        prompts = make_prompts(rng, [6, 8])
+        eng = engines[kind]
+        ref1 = eng.generate(prompts[1][None], max_new_tokens=8)[0]
+        sched = Scheduler(build_backend(engines, kind, 2),
+                          max_new_tokens=8, chunk_size=8, speculate_k=3,
+                          draft_fn=chaotic_draft_fn(9))
+        r0 = sched.submit({"tokens": prompts[0], "id": 0})
+        sched.submit({"tokens": prompts[1], "id": 1})
+        sched.admit()
+        sched.step()                        # both mid-flight
+        evs = sched.cancel(r0.id)
+        assert any(ev.finished and ev.request.id == 0 for ev in evs)
+        assert r0.finish_reason == "cancelled"
+        got = drain(sched)
+        np.testing.assert_array_equal(got[1], ref1)
+        assert_baseline(sched)
+
+    @pytest.mark.parametrize("kind", ["state", "hybrid"])
+    def test_deadline_expiry_frees_slab(self, engines, kind):
+        """A request whose deadline lapses mid-decode is killed at the
+        tick boundary; its slab (and blocks) free, survivors exact."""
+        rng = np.random.RandomState(8)
+        prompts = make_prompts(rng, [6, 8])
+        eng = engines[kind]
+        ref1 = eng.generate(prompts[1][None], max_new_tokens=8)[0]
+        t = [0.0]
+        sched = Scheduler(build_backend(engines, kind, 2),
+                          max_new_tokens=8, clock=lambda: t[0])
+        r0 = sched.submit({"tokens": prompts[0], "id": 0,
+                           "deadline_ms": 100.0})
+        sched.submit({"tokens": prompts[1], "id": 1})
+        sched.admit()
+        sched.step()
+        t[0] += 1.0                          # 1s >> the 100ms budget
+        got = drain(sched)
+        assert r0.finish_reason == "deadline"
+        np.testing.assert_array_equal(got[1], ref1)
+        assert_baseline(sched)
+
+    def test_hybrid_pressure_frees_blocks_and_slabs(self, engines):
+        """CachePressure on the block pool preempts a victim; the
+        release frees its pages AND its state slab in the same tick —
+        and everyone still finishes bit-identically."""
+        rng = np.random.RandomState(9)
+        prompts = make_prompts(rng, [6] * 6)
+        eng = engines["hybrid"]
+        refs = [eng.generate(p[None], max_new_tokens=12)[0]
+                for p in prompts]
+        sched = Scheduler(
+            build_backend(engines, "hybrid", 6, num_blocks=9,
+                          block_size=4),
+            max_new_tokens=12)
+        for i, p in enumerate(prompts):
+            sched.submit({"tokens": p, "id": i})
+        got = {}
+        while sched.has_work():
+            for ev in sched.admit() + sched.step():
+                if ev.finished:
+                    got[ev.request.id] = np.asarray(ev.request.tokens,
+                                                    np.int32)
+            sched.pool.check_invariants()
+            # a preempted request must not still hold a slab
+            assert sched.backend.slabs_in_use == \
+                sum(r is not None for r in sched.slots)
+        for i, ref in enumerate(refs):
+            np.testing.assert_array_equal(got[i], ref)
+        assert sched.stats["preemptions"] > 0
+        assert_baseline(sched)
+
+    def test_graphserver_state_close_is_leak_free(self, xlstm_engine):
+        """GraphServer end-to-end on the state backend; the autouse
+        conftest fixture asserts slab baseline at close."""
+        rng = np.random.RandomState(10)
+        prompts = make_prompts(rng, [5, 9, 7])
+        refs = [xlstm_engine.generate(p[None], max_new_tokens=6)[0]
+                for p in prompts]
+        with GraphServer(xlstm_engine, num_slots=2, backend="state",
+                         chunk_size=8, speculate_k=3,
+                         max_new_tokens=6) as srv:
+            handles = [srv.submit(p) for p in prompts]
+            results = [h.result(timeout=180) for h in handles]
+            stats = srv.stats()
+        for got, ref in zip(results, refs):
+            np.testing.assert_array_equal(got, ref)
+        assert stats["scheduler"]["state_slabs_in_use"] == 0
+        assert stats["scheduler"]["state_slabs_peak"] == 2
+
+
+class TestCapacityAndGates:
+    """Honest capacity reporting and the engine support gates."""
+
+    def test_state_capacity_is_max_len_only(self, engines):
+        """No block math: a state slab never runs out of tokens, so the
+        only bound is the engine's max_len."""
+        be = StateBackend(engines["state"], 2)
+        assert be.max_request_tokens() == MAX_LEN
+        assert "max_len" in be.capacity_desc()
+        sched = Scheduler(be)
+        with pytest.raises(ValueError, match="max_len"):
+            sched.submit({"tokens": np.zeros(60, np.int32), "id": 0,
+                          "max_new_tokens": 16})
+
+    def test_paged_still_rejects_recurrent(self, engines):
+        """The strict paged gate is unchanged: pure block-table serving
+        cannot host recurrent layers (that is what hybrid is for)."""
+        for eng in (engines["state"], engines["hybrid"]):
+            with pytest.raises(ValueError, match="recurrent"):
+                Scheduler(PagedBackend(eng, 2, num_blocks=17,
+                                       block_size=8))
+
+    def test_hybrid_requires_divisible_max_len(self, engines):
+        with pytest.raises(ValueError, match="max_len"):
+            Scheduler(HybridBackend(engines["hybrid"], 2, num_blocks=17,
+                                    block_size=7))
+
+    def test_hybrid_disables_prefix_sharing(self, engines):
+        """Recurrent state is position-dependent: a shared prompt prefix
+        has no reusable representation, so hybrid never indexes one."""
+        be = HybridBackend(engines["hybrid"], 2, num_blocks=17,
+                           block_size=8)
+        assert be.prefix is None
