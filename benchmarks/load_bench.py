@@ -16,7 +16,11 @@ Per offered-QPS point the bench reports:
 * **inter-token latency** — gaps between consecutive streamed tokens of
   the same request (p50/p95/p99);
 * **goodput** — achieved request rate and generated tok/s over the
-  point's wall clock.
+  point's wall clock;
+* **registry percentiles** — the same TTFT / ITL read back from the
+  server's ``serve.ttft_ms`` / ``serve.itl_ms`` metrics histograms
+  (scheduler-side stamps, bucket-derived quantiles), cross-checked
+  against the client-side measurement (docs/OBSERVABILITY.md).
 
 A ``--cancel-frac`` slice of clients disconnects mid-stream (the async
 generator is closed after a few tokens), exercising disconnect →
@@ -35,9 +39,11 @@ Exits non-zero unless (a) every request reached a terminal state, (b)
 every non-cancelled request's tokens are bit-identical to the
 sequential ``engine.generate`` reference, (c) the block arena drains to
 baseline (zero in use, zero reserved, empty prefix index) after every
-point despite the mid-stream disconnects, and (d) when
+point despite the mid-stream disconnects, (d) when
 ``--gate-p95-ttft-ms`` is given, p95 TTFT at the LOWEST offered QPS is
-under the gate (the sanity bound CI enforces on the smoke run).
+under the gate (the sanity bound CI enforces on the smoke run), and
+(e) the registry's TTFT/ITL percentiles agree with the client-side
+measurement within tolerance.
 """
 from __future__ import annotations
 
@@ -97,6 +103,45 @@ def sched_of(srv):
         if node.name == "engine":
             return node.calculator.sched
     raise RuntimeError("no engine node in serving graph")
+
+
+def registry_crosscheck(reg, ttft, gaps):
+    """Compare client-side TTFT / inter-token percentiles against the
+    scheduler-side ``serve.ttft_ms`` / ``serve.itl_ms`` histograms from
+    the server's metrics registry (docs/OBSERVABILITY.md).
+
+    The two views measure different spans of the same events — the
+    registry stamps inside the scheduler, the client stamps after the
+    dispatcher and event-loop hop — and histogram quantiles are
+    bucket-edge-quantized, so agreement means the client percentile
+    falls inside a generous envelope around the registry's bucket
+    bounds (factor 2 plus 25 ms absolute slack), not equality."""
+    out = {}
+    ok = True
+    for name, key, samples in (("serve.ttft_ms", "ttft_ms", ttft),
+                               ("serve.itl_ms", "itl_ms", gaps)):
+        hist = reg.get(name)
+        rec = {}
+        for q in (0.50, 0.95):
+            est = hist.quantile(q) if hist is not None else None
+            rec[f"p{int(q * 100)}"] = round(est, 2) \
+                if est is not None else None
+            bounds = hist.quantile_bounds(q) if hist is not None else None
+            if bounds is None or not samples:
+                continue
+            client = percentile(samples, q) * 1e3
+            lo = bounds[0] / 2 - 25.0
+            # the +Inf bucket's upper edge is the clamped estimate
+            hi_edge = bounds[1] if np.isfinite(bounds[1]) else est
+            hi = hi_edge * 2 + 25.0
+            if not (lo <= client <= hi):
+                ok = False
+                print(f"registry disagreement: {name} p{int(q * 100)} "
+                      f"client={client:.2f}ms outside "
+                      f"[{lo:.2f}, {hi:.2f}]ms (registry bucket "
+                      f"{bounds[0]:g}..{bounds[1]:g})")
+        out[key] = rec
+    return ok, out
 
 
 _ref_cache = {}
@@ -161,6 +206,7 @@ def run_point(engine, args, qps, rng):
         drive(front, prompts, arrivals, args.max_new_tokens,
               cancel_after))
     srv.close()                        # drains in-flight cancellations
+    reg = srv.metrics_registry()
     sched = sched_of(srv)
     pool = sched.pool
     pool.check_invariants()
@@ -179,6 +225,7 @@ def run_point(engine, args, qps, rng):
         for i, r in survivors)
     wall = max(r["done"] for r in recs) - t0
     toks = sum(len(r["tokens"]) for r in recs)
+    reg_ok, reg_pct = registry_crosscheck(reg, ttft, gaps)
     point = {
         "offered_qps": qps,
         "achieved_qps": round(n / wall, 2),
@@ -190,6 +237,7 @@ def run_point(engine, args, qps, rng):
         "wall_s": round(wall, 2),
         "outputs_identical": exact,
         "leak_free": leak_free,
+        "registry": {**reg_pct, "agrees_with_client": reg_ok},
     }
     print(f"qps={qps:>5.1f}  achieved={point['achieved_qps']:>5.1f}  "
           f"ttft p50={point['ttft_ms']['p50']}ms "
@@ -199,6 +247,11 @@ def run_point(engine, args, qps, rng):
           f"p95={point['intertoken_ms']['p95']}ms  "
           f"cancelled={point['cancelled']}/{n}  "
           f"exact={exact}  leak_free={leak_free}")
+    print(f"        registry: ttft p50={reg_pct['ttft_ms']['p50']}ms "
+          f"p95={reg_pct['ttft_ms']['p95']}ms  "
+          f"itl p50={reg_pct['itl_ms']['p50']}ms "
+          f"p95={reg_pct['itl_ms']['p95']}ms  "
+          f"agrees={reg_ok}")
     return point
 
 
@@ -284,6 +337,10 @@ def main(argv=None) -> int:
     if not all(p["leak_free"] for p in points):
         print("FAIL: arena not at baseline after drain (cancellation "
               "leaked blocks / refs / slots)")
+        ok = False
+    if not all(p["registry"]["agrees_with_client"] for p in points):
+        print("FAIL: registry TTFT/ITL percentiles disagree with the "
+              "client-side measurement beyond tolerance")
         ok = False
     if args.gate_p95_ttft_ms is not None:
         p95 = points[0]["ttft_ms"]["p95"]

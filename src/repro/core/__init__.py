@@ -24,6 +24,8 @@ from .input_policy import (DefaultInputPolicy, ImmediateInputPolicy,
                            SyncSetInputPolicy, make_input_policy)
 from .validation import GraphValidationError, validate
 from .graph import Graph, GraphError, OutputStreamPoller
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      NullRegistry)
 from .tracer import Tracer, NullTracer, TraceEvent
 from . import flow_control  # registers FlowLimiterCalculator
 from . import visualizer
@@ -45,5 +47,6 @@ __all__ = [
     "GraphValidationError", "validate",
     "Graph", "GraphError", "OutputStreamPoller",
     "Tracer", "NullTracer", "TraceEvent", "visualizer",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
     "load_graph_config", "parse_graph_config", "serialize_graph_config", "TextFormatError",
 ]

@@ -119,7 +119,19 @@ class CalculatorContext:
     def node_name(self) -> str:
         return self._node.name
 
+    @property
+    def node_index(self) -> int:
+        return self._node.index
+
     # -- tracing -------------------------------------------------------
+    @property
+    def tracer(self):
+        """The graph's tracer (a :class:`~repro.core.tracer.NullTracer`
+        when tracing is disabled) — for calculators that record richer
+        events than :meth:`trace_gauge`, e.g. the serving observer's SPAN
+        lifecycle markers (serving/observe.py)."""
+        return self._node.graph.tracer
+
     def trace_gauge(self, name: str, value: int) -> None:
         """Record a named gauge sample (e.g. KV-block-pool occupancy) into
         the graph's tracer; exported as a chrome://tracing counter track

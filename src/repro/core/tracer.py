@@ -16,6 +16,7 @@ removes even that call overhead by swapping the graph's hooks out entirely.
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from typing import Dict, List, NamedTuple, Optional
 
@@ -32,6 +33,11 @@ THROTTLE = "THROTTLE"
 # Named gauge sample (stream_id = gauge name, packet_data_id = value);
 # e.g. KV-block-pool occupancy from the paged serving scheduler.
 GAUGE = "GAUGE"
+# Request-lifecycle span marker (serving/observe.py): stream_id is
+# "<phase>@<request_id>", packet_timestamp a sequence number (token index,
+# chunk index, ...), packet_data_id a phase-specific value (accepted
+# count, finish-reason code, ...).
+SPAN = "SPAN"
 
 # Module-level switch mirroring the paper's "omit the tracer module code
 # using a compiler flag".
@@ -55,14 +61,24 @@ class Tracer:
         self._next = itertools.count()
         self._recorded = 0       # high-water mark, read by events()
         self._t0 = time.perf_counter_ns()
+        # OS thread ident -> small dense id.  dict.setdefault is atomic in
+        # CPython, so this stays lock-free; the id counter may skip values
+        # when two threads race their first record, which is harmless.
+        self._thread_ids: Dict[int, int] = {}
+        self._next_thread_id = itertools.count()
 
     # Hot path: no locks.  itertools.count.__next__ is atomic in CPython.
     def record(self, event_type: str, node_id: int = -1, stream_id: str = "",
                packet_timestamp: int = 0, packet_data_id: int = 0) -> None:
+        ident = threading.get_ident()
+        tid = self._thread_ids.get(ident)
+        if tid is None:
+            tid = self._thread_ids.setdefault(ident,
+                                              next(self._next_thread_id))
         i = next(self._next)
         self._buf[i % self.capacity] = TraceEvent(
             time.perf_counter_ns() - self._t0, event_type, node_id,
-            stream_id, packet_timestamp, packet_data_id, 0)
+            stream_id, packet_timestamp, packet_data_id, tid)
         if i >= self._recorded:  # benign race: analysis-time snapshot only
             self._recorded = i + 1
 
@@ -170,20 +186,24 @@ class Tracer:
         """Write the ring buffer as chrome://tracing / Perfetto JSON
         (paper §5.2: the visualizer loads pre-recorded trace files).
 
-        Calculator RUN intervals become complete ("X") events on one
-        track per node, packet events become instants ("i"), and GAUGE
-        samples become counter ("C") tracks — so KV-block-pool occupancy
-        plots as a pressure curve over the decode timeline."""
+        Calculator RUN intervals become complete ("X") events named after
+        the node and laid out on one track per *executor thread* (the
+        thread that actually ran the task — ``TraceEvent.thread_id``),
+        packet events become instants ("i"), GAUGE samples become counter
+        ("C") tracks — so KV-block-pool occupancy plots as a pressure
+        curve over the decode timeline — and SPAN lifecycle markers
+        (serving/observe.py) become instants on their thread track."""
         import json
         names = node_names or {}
+        evs = self.events()
         out = []
-        for nid, name in sorted(names.items()):
+        for tid in sorted({e.thread_id for e in evs}):
             out.append({"ph": "M", "name": "thread_name", "pid": 0,
-                        "tid": int(nid), "args": {"name": str(name)}})
+                        "tid": int(tid), "args": {"name": f"thread-{tid}"}})
         starts: Dict[tuple, int] = {}
-        for e in self.events():
+        for e in evs:
             ts_us = e.event_time / 1e3
-            key = (e.node_id, e.packet_timestamp)
+            key = (e.node_id, e.thread_id, e.packet_timestamp)
             if e.event_type == RUN_START:
                 starts[key] = e.event_time
             elif e.event_type == RUN_END:
@@ -191,23 +211,31 @@ class Tracer:
                 if t0 is None:
                     continue         # start fell off the ring buffer
                 out.append({
-                    "ph": "X", "pid": 0, "tid": e.node_id,
+                    "ph": "X", "pid": 0, "tid": e.thread_id,
                     "name": str(names.get(e.node_id, e.node_id)),
                     "cat": "run", "ts": t0 / 1e3,
                     "dur": (e.event_time - t0) / 1e3,
-                    "args": {"packet_timestamp": e.packet_timestamp}})
+                    "args": {"node": str(names.get(e.node_id, e.node_id)),
+                             "packet_timestamp": e.packet_timestamp}})
             elif e.event_type == GAUGE:
                 out.append({
                     "ph": "C", "pid": 0, "ts": ts_us,
                     "name": e.stream_id,
                     "args": {"value": e.packet_data_id}})
+            elif e.event_type == SPAN:
+                out.append({
+                    "ph": "i", "s": "t", "pid": 0, "tid": e.thread_id,
+                    "name": e.stream_id, "cat": "lifecycle", "ts": ts_us,
+                    "args": {"seq": e.packet_timestamp,
+                             "value": e.packet_data_id}})
             elif e.event_type in (PACKET_EMIT, PACKET_QUEUED,
                                   PACKET_DROPPED):
                 out.append({
-                    "ph": "i", "s": "t", "pid": 0, "tid": e.node_id,
+                    "ph": "i", "s": "t", "pid": 0, "tid": e.thread_id,
                     "name": f"{e.event_type} {e.stream_id}",
                     "cat": "packet", "ts": ts_us,
-                    "args": {"packet_timestamp": e.packet_timestamp,
+                    "args": {"node": str(names.get(e.node_id, e.node_id)),
+                             "packet_timestamp": e.packet_timestamp,
                              "packet_data_id": e.packet_data_id}})
         with open(path, "w") as f:
             json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f)

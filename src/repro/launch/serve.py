@@ -49,7 +49,8 @@ def run_continuous(args, cfg, engine) -> int:
                      block_size=args.block_size,
                      admission=args.admission,
                      backend=args.backend,
-                     spec_window=args.spec_window) as srv:
+                     spec_window=args.spec_window,
+                     observe_dir=args.observe_dir or None) as srv:
         t0 = time.time()
 
         def client(worker: int) -> None:
@@ -69,6 +70,10 @@ def run_continuous(args, cfg, engine) -> int:
             t.join()
         wall = time.time() - t0
         stats = srv.stats()
+        if args.observe_dir:
+            arts = srv.dump_observability()
+            print(f"observability: wrote {len(arts)} artifacts to "
+                  f"{args.observe_dir}")
 
     done = sum(r is not None for r in results)
     toks = sum(len(r) for r in results if r is not None)
@@ -134,7 +139,8 @@ def run_async(args, cfg, engine) -> int:
                      block_size=args.block_size,
                      admission=args.admission,
                      backend=args.backend,
-                     spec_window=args.spec_window) as srv:
+                     spec_window=args.spec_window,
+                     observe_dir=args.observe_dir or None) as srv:
         front = AsyncFrontend(srv, policy=Policy(
             timeout_ms=args.timeout_ms, retries=args.retries))
         t0 = time.time()
@@ -163,6 +169,10 @@ def run_async(args, cfg, engine) -> int:
         asyncio.run(run_all())
         wall = time.time() - t0
         stats = srv.stats()
+        if args.observe_dir:
+            arts = srv.dump_observability()
+            print(f"observability: wrote {len(arts)} artifacts to "
+                  f"{args.observe_dir}")
 
     toks = sum(ntok)
     ts = sorted(t for t in ttft if t is not None)
@@ -288,6 +298,12 @@ def main(argv=None) -> int:
     ap.add_argument("--retries", type=int, default=0,
                     help="frontend policy: resubmissions for requests "
                          "that failed before their first token")
+    ap.add_argument("--observe-dir", default="",
+                    help="write trace.json / requests.perfetto.json / "
+                         "timelines.json / metrics.{json,prom} / "
+                         "provenance.json here after the run, and arm "
+                         "the flight recorder for incident dumps "
+                         "(docs/OBSERVABILITY.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

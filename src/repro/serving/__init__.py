@@ -39,6 +39,8 @@ from .kvcache import (BlockPool, BlockPoolError, CacheBackend,
                       CachePressure, HybridBackend, PagedBackend,
                       PrefixIndex, SlotBackend, StateBackend,
                       make_backend)
+from .observe import (FlightRecorder, NULL_OBSERVER, Observer,
+                      RequestTimeline, export_run)
 from .pipeline import build_continuous_serving_graph, build_serving_graph
 from .server import GraphServer, RequestHandle
 from .speculative import lookup_draft
@@ -51,4 +53,6 @@ __all__ = ["LLMEngine", "BatcherCalculator", "ContinuousBatchCalculator",
            "HybridBackend", "PagedBackend", "PrefixIndex", "SlotBackend",
            "StateBackend", "make_backend",
            "build_serving_graph", "build_continuous_serving_graph",
-           "GraphServer", "RequestHandle", "lookup_draft"]
+           "GraphServer", "RequestHandle", "lookup_draft",
+           "FlightRecorder", "NULL_OBSERVER", "Observer",
+           "RequestTimeline", "export_run"]

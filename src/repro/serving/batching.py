@@ -76,7 +76,13 @@ class Request:
     deadline: Optional[float] = None        # whole request must finish by
     ttft_deadline: Optional[float] = None   # first token must be out by
     submitted_at: float = 0.0
+    admitted_at: Optional[float] = None     # first slot admission
     first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None   # maintained when observing
+    # per-request speculative tallies (cheap ints; feed the final
+    # per-request metrics record surfaced by the frontend)
+    spec_drafted: int = 0
+    spec_accepted: int = 0
     cancelled: bool = False            # cancel requested (or applied)
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -156,7 +162,7 @@ class Scheduler:
                  draft_fn: Optional[Callable[[np.ndarray, int],
                                              np.ndarray]] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 trace=None):
+                 trace=None, observer=None):
         engine = backend.engine
         if engine.cfg.is_encoder_decoder:
             raise ValueError("continuous batching supports decoder-only "
@@ -214,6 +220,12 @@ class Scheduler:
         }
         self._trace = trace if trace is not None else \
             (lambda name, value: None)
+        # lifecycle observer (serving/observe.py): spans + metrics.  The
+        # `_observe` flag gates every clock read the hooks would need, so
+        # a NULL_OBSERVER scheduler's hot path stays timing-free.
+        from .observe import NULL_OBSERVER
+        self.obs = observer if observer is not None else NULL_OBSERVER
+        self._observe = bool(self.obs.enabled)
         backend.bind(self.stats, trace)
 
     def _check_spec(self) -> None:
@@ -311,6 +323,8 @@ class Scheduler:
         self.stats["max_outstanding"] = max(
             self.stats["max_outstanding"],
             self.stats["submitted"] - self.stats["completed"])
+        if self._observe:
+            self.obs.submitted(req, len(self.waiting))
         return req
 
     # -- cancellation + deadlines -----------------------------------------
@@ -384,6 +398,8 @@ class Scheduler:
             else "deadline_missed"
         self.stats[key] += 1
         self._trace(f"serve.{key}", self.stats[key])
+        if self._observe:
+            self.obs.finished(req, reason)
         return TokenEvent(req, None, len(req.tokens), True)
 
     def _lifecycle_sweep(self) -> List[TokenEvent]:
@@ -466,6 +482,15 @@ class Scheduler:
             self.ingesting.append(req)
             self.stats["max_active_slots"] = max(
                 self.stats["max_active_slots"], self.active)
+            if self._observe:
+                first_admission = req.admitted_at is None
+                if first_admission:
+                    req.admitted_at = self.clock()
+                # queue wait counts only the initial submit->slot wait;
+                # readmissions after preemption still get their span
+                self.obs.admitted(
+                    req, (req.admitted_at - req.submitted_at) * 1e3
+                    if first_admission else None)
             if (self.backend.supports_group_prefill and not req.tokens
                     and req.ingested == 0
                     and (self.chunk is None
@@ -484,7 +509,11 @@ class Scheduler:
         for r in reqs:
             by_len.setdefault(int(r.prompt.size), []).append(r)
         for grp in sorted(by_len.values(), key=lambda g: g[0].arrival):
+            t0 = self.obs.now() if self._observe else 0.0
             first = self.backend.prefill_group(grp)
+            if self._observe:
+                self.obs.prefill((self.obs.now() - t0) * 1e3,
+                                 sum(int(r.prompt.size) for r in grp))
             for i, req in enumerate(grp):
                 self.ingesting.remove(req)
                 req.ingested = req.prompt.size
@@ -506,9 +535,15 @@ class Scheduler:
             else min(len(seq), start + self.chunk)
         while True:
             try:
+                t0 = self.obs.now() if self._observe else 0.0
                 tok = self.backend.ingest(req, seq, start, end)
+                if self._observe:
+                    self.obs.chunk(req, start, end,
+                                   (self.obs.now() - t0) * 1e3)
                 break
             except CachePressure:
+                if self._observe:
+                    self.obs.pressure(req)
                 victim = self._pick_victim()
                 self._preempt(victim)
                 if victim is req:
@@ -546,6 +581,8 @@ class Scheduler:
                     f"already streamed — determinism contract broken")
             self.last_tokens[req.slot] = req.tokens[-1]
             self.stats["replayed_tokens"] += len(req.tokens)
+            if self._observe:
+                self.obs.replayed(req, len(req.tokens))
             return []
         return [self._record(req, int(tok))]
 
@@ -580,8 +617,12 @@ class Scheduler:
                   if r.slot >= 0 and self.slots[r.slot] is r}
         if drafts:
             return self._verify_tick(drafts, active)
+        t0 = self.obs.now() if self._observe else 0.0
         next_tok = self.backend.decode(self.last_tokens, self.positions,
                                        active)
+        if self._observe:
+            self.obs.decode_tick((self.obs.now() - t0) * 1e3,
+                                 int(active.sum()))
         self.stats["decode_steps"] += 1
         events = []
         for slot in np.nonzero(active)[0]:
@@ -636,7 +677,11 @@ class Scheduler:
         window[:, 0] = self.last_tokens
         for r, d in drafts.items():
             window[r.slot, 1:1 + d.size] = d
+        t0 = self.obs.now() if self._observe else 0.0
         guess = self.backend.verify(window, self.positions, active)
+        if self._observe:
+            self.obs.verify_tick((self.obs.now() - t0) * 1e3,
+                                 int(active.sum()))
         self.stats["decode_steps"] += 1
         self.stats["spec_steps"] += 1
         events: List[TokenEvent] = []
@@ -650,6 +695,10 @@ class Scheduler:
                 a += 1
             drafted += int(d.size)
             accepted += a
+            req.spec_drafted += int(d.size)
+            req.spec_accepted += a
+            if self._observe:
+                self.obs.verified(req, a, int(d.size), len(req.tokens))
             pos0 = int(self.positions[slot])
             # g[i] is the greedy token after ...··t0·d[0..i-1]; emitting
             # g[0..a] therefore reproduces exactly what a+1 plain decode
@@ -702,6 +751,8 @@ class Scheduler:
         victim.ingested = 0
         victim.preemptions += 1
         self.stats["preemptions"] += 1
+        if self._observe:
+            self.obs.preempted(victim)
         if victim in self.ingesting:
             self.ingesting.remove(victim)
         bisect.insort(self.waiting, victim, key=Request.sort_key)
@@ -713,8 +764,17 @@ class Scheduler:
         index = len(req.tokens) - 1
         if req.first_token_at is None:
             req.first_token_at = self.clock()
-            self._trace("serve.ttft_ms", int(
-                (req.first_token_at - req.submitted_at) * 1e3))
+            ttft_ms = (req.first_token_at - req.submitted_at) * 1e3
+            self._trace("serve.ttft_ms", int(ttft_ms))
+            if self._observe:
+                req.last_token_at = req.first_token_at
+                self.obs.first_token(req, ttft_ms, index)
+        elif self._observe:
+            now = self.clock()
+            prev = req.last_token_at if req.last_token_at is not None \
+                else req.first_token_at
+            self.obs.token(req, index, (now - prev) * 1e3)
+            req.last_token_at = now
         if req.eos_id is not None and token == req.eos_id:
             req.finished, req.finish_reason = True, "eos"
             self.stats["evictions_eos"] += 1
@@ -723,7 +783,49 @@ class Scheduler:
             self.stats["evictions_length"] += 1
         if req.finished:
             self._evict(req)
+            if self._observe:
+                self.obs.finished(req, req.finish_reason)
         return TokenEvent(req, token, index, req.finished)
+
+    def request_metrics(self, req: Request) -> Dict[str, Any]:
+        """The final per-request metrics record (surfaced to streaming
+        clients on the last TOKEN packet — docs/OBSERVABILITY.md)."""
+        m: Dict[str, Any] = {
+            "id": req.id, "finish_reason": req.finish_reason,
+            "tokens": len(req.tokens),
+            "prompt_tokens": int(req.prompt.size),
+            "preemptions": req.preemptions,
+            "spec_drafted": req.spec_drafted,
+            "spec_accepted": req.spec_accepted,
+            "ttft_ms": None, "queue_wait_ms": None,
+        }
+        if req.first_token_at is not None:
+            m["ttft_ms"] = (req.first_token_at - req.submitted_at) * 1e3
+        if req.admitted_at is not None:
+            m["queue_wait_ms"] = \
+                (req.admitted_at - req.submitted_at) * 1e3
+        return m
+
+    def debug_state(self) -> Dict[str, Any]:
+        """Sanitized scheduler state for flight-recorder postmortems: no
+        arrays, no backend handles — just the control-plane picture."""
+        def info(r: Request) -> Dict[str, Any]:
+            return {"id": str(r.id), "priority": r.priority,
+                    "arrival": r.arrival, "slot": r.slot,
+                    "prompt_len": int(r.prompt.size),
+                    "ingested": r.ingested, "tokens": len(r.tokens),
+                    "max_new_tokens": r.max_new_tokens,
+                    "preemptions": r.preemptions,
+                    "cancelled": r.cancelled, "finished": r.finished,
+                    "finish_reason": r.finish_reason}
+        return {
+            "slots": [None if r is None else info(r) for r in self.slots],
+            "waiting": [info(r) for r in self.waiting],
+            "ingesting": [str(r.id) for r in self.ingesting],
+            "free": sorted(self.free),
+            "positions": [int(p) for p in self.positions],
+            "stats": dict(self.stats),
+        }
 
     def _evict(self, req: Request) -> None:
         """Free the request's slot and backend resources.  Slot cache

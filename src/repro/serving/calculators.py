@@ -26,12 +26,14 @@ from typing import Any, Dict, List
 
 import numpy as np
 
+from ..core import tracer as trace_mod
 from ..core.calculator import Calculator, CalculatorContext
 from ..core.contract import AnyType, contract
 from ..core.registry import register_calculator
 from ..core.timestamp import Timestamp
 from .batching import DeadlineExceeded, Scheduler, TokenEvent
 from .kvcache.backend import make_backend
+from .observe import NULL_OBSERVER, Observer
 
 
 @register_calculator
@@ -204,6 +206,12 @@ class ContinuousBatchCalculator(Calculator):
             watermark=int(opts.get("watermark", 0)),
             spec_window=int(opts.get("spec_window", 8)))
         chunk = opts.get("chunk_size")
+        # Lifecycle observer: spans into the graph tracer + a metrics
+        # registry (GraphServer.metrics() merges it with the engine's).
+        # Under tracer.COMPILED_OUT the scheduler gets the null observer
+        # and pays for nothing (serving/observe.py).
+        self.observer = NULL_OBSERVER if trace_mod.COMPILED_OUT else \
+            Observer(tracer=ctx.tracer, node_id=ctx.node_index)
         self.sched = Scheduler(
             backend,
             max_new_tokens=int(opts.get("max_new_tokens", 16)),
@@ -211,7 +219,8 @@ class ContinuousBatchCalculator(Calculator):
             chunk_size=int(chunk) if chunk else None,
             speculate_k=int(opts.get("speculate_k", 0)),
             spec_ngram=int(opts.get("spec_ngram", 3)),
-            trace=ctx.trace_gauge)
+            trace=ctx.trace_gauge,
+            observer=self.observer)
         self._tick_pending = False
         self._ts = {"TOKEN": 0, "RESPONSE": 0, "TICK_OUT": 0}
 
@@ -229,6 +238,7 @@ class ContinuousBatchCalculator(Calculator):
                 # consumers never need to join against RESPONSE packets
                 # (which arrive on another stream, i.e. another thread)
                 token["finish_reason"] = ev.request.finish_reason
+                token["metrics"] = self.sched.request_metrics(ev.request)
             self._emit(ctx, "TOKEN", token)
             if ev.finished:
                 self._emit(ctx, "RESPONSE", {
@@ -250,7 +260,14 @@ class ContinuousBatchCalculator(Calculator):
                 rid = req.payload.get("id")
                 self._emit(ctx, "TOKEN", {
                     "id": rid, "token": None, "index": 0,
-                    "finished": True, "finish_reason": "deadline"})
+                    "finished": True, "finish_reason": "deadline",
+                    "metrics": {
+                        "id": rid, "finish_reason": "deadline",
+                        "tokens": 0,
+                        "prompt_tokens": len(req.payload["tokens"]),
+                        "preemptions": 0, "spec_drafted": 0,
+                        "spec_accepted": 0, "ttft_ms": None,
+                        "queue_wait_ms": None}})
                 self._emit(ctx, "RESPONSE", {
                     "id": rid, "tokens": np.zeros(0, np.int32),
                     "finish_reason": "deadline"})

@@ -21,12 +21,15 @@ Two decode modes:
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import tracer as trace_mod
+from ..core.metrics import MetricsRegistry, NullRegistry
 from ..models.config import ArchConfig
 from ..models.model import Model
 from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
@@ -57,9 +60,19 @@ class LLMEngine:
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
         self.params = params
-        self._prefill = jax.jit(make_prefill_step(self.model, max_len,
-                                                  flags))
-        self._decode = jax.jit(make_decode_step(self.model, flags))
+        # Engine-side profiling registry (docs/OBSERVABILITY.md): jit
+        # compile counts + compile wall time per (step, layout, width)
+        # cache entry.  GraphServer.metrics() merges it with the
+        # scheduler's registry.  Under tracer.COMPILED_OUT the registry
+        # is a no-op sink.
+        self.metrics: MetricsRegistry = \
+            NullRegistry() if trace_mod.COMPILED_OUT else MetricsRegistry()
+        self._prefill = self._timed(
+            jax.jit(make_prefill_step(self.model, max_len, flags)),
+            "prefill", "batch")
+        self._decode = self._timed(
+            jax.jit(make_decode_step(self.model, flags)),
+            "decode", "batch")
         # serving jits, built lazily per cache layout: key is
         # (backend.kind, block_size); extend steps add prefix_len,
         # verify steps add the window width 1+k
@@ -67,6 +80,38 @@ class LLMEngine:
         self._extend_steps: Dict[Tuple, Any] = {}
         self._verify_steps: Dict[Tuple, Any] = {}
         self._state_rewind = None       # built on first verify/truncate
+
+    def _timed(self, fn, step: str, layout: str, width: str = ""):
+        """Wrap a jitted step: the first call (= trace + compile + run)
+        is timed to a ``jax.block_until_ready`` barrier and recorded as
+        one jit-cache compile; later calls pay one Python-level
+        indirection and nothing else."""
+        state = {"first": True}
+
+        def wrapped(*args, **kw):
+            if state["first"]:
+                state["first"] = False
+                t0 = time.perf_counter()
+                out = fn(*args, **kw)
+                jax.block_until_ready(out)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+                self.metrics.counter(
+                    "engine.jit_compiles",
+                    "jitted serving steps compiled, by cache key").inc(
+                        step=step, layout=layout, width=width)
+                self.metrics.histogram(
+                    "engine.jit_compile_ms",
+                    "first-call wall time per jit cache entry "
+                    "(trace + compile + run)").observe(
+                        dt_ms, step=step, layout=layout, width=width)
+                return out
+            return fn(*args, **kw)
+
+        return wrapped
+
+    @staticmethod
+    def _layout(backend) -> str:
+        return f"{backend.kind}/{getattr(backend, 'block_size', 0)}"
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -185,11 +230,12 @@ class LLMEngine:
                 insert = make_paged_insert(backend.block_size)
             else:
                 insert = make_slot_insert()
+            layout = f"{backend.kind}/{getattr(backend, 'block_size', 0)}"
             steps = {
-                "decode": jax.jit(make_serve_decode_step(
+                "decode": self._timed(jax.jit(make_serve_decode_step(
                     self.model, self.flags, paged=paged,
-                    masked_state=masked)),
-                "insert": jax.jit(insert),
+                    masked_state=masked)), "serve_decode", layout),
+                "insert": self._timed(jax.jit(insert), "insert", layout),
             }
             self._serve[key] = steps
         return steps
@@ -272,8 +318,9 @@ class LLMEngine:
         key = (backend.kind, getattr(backend, "block_size", 0), width)
         step = self._verify_steps.get(key)
         if step is None:
-            step = jax.jit(make_verify_step(
-                self.model, self.flags, paged=backend.kind == "paged"))
+            step = self._timed(jax.jit(make_verify_step(
+                self.model, self.flags, paged=backend.kind == "paged")),
+                "verify", self._layout(backend), str(width))
             self._verify_steps[key] = step
         args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
                 jnp.asarray(positions, jnp.int32),
@@ -298,8 +345,9 @@ class LLMEngine:
                "stacks")
         step = self._verify_steps.get(key)
         if step is None:
-            step = jax.jit(make_state_verify_step(
-                self.model, self.flags, paged=backend.kind == "hybrid"))
+            step = self._timed(jax.jit(make_state_verify_step(
+                self.model, self.flags, paged=backend.kind == "hybrid")),
+                "verify_stacks", self._layout(backend), str(width))
             self._verify_steps[key] = step
         args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
                 jnp.asarray(positions, jnp.int32),
@@ -317,7 +365,9 @@ class LLMEngine:
         into the live state slabs; attention leaves pass through.  One
         jitted function retraces per (layout, window width)."""
         if self._state_rewind is None:
-            self._state_rewind = jax.jit(make_state_rewind(self.model))
+            self._state_rewind = self._timed(
+                jax.jit(make_state_rewind(self.model)),
+                "state_rewind", "state")
         return self._state_rewind(cache, stacks,
                                   jnp.asarray(slot, jnp.int32),
                                   jnp.asarray(idx, jnp.int32))
@@ -347,6 +397,8 @@ class LLMEngine:
                     block_size=backend.block_size if kind == "paged"
                     else 0,
                     max_cache_len=self.max_len))
+            step = self._timed(step, "extend", self._layout(backend),
+                               str(int(prefix_len)))
             self._extend_steps[key] = step
         suffix = jnp.asarray(suffix_tokens, jnp.int32)[None]
         if kind == "paged":

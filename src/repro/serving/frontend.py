@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
-from typing import Any, AsyncIterator, Callable, Optional
+from typing import Any, AsyncIterator, Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -125,9 +125,33 @@ class AsyncFrontend:
         return q
 
     # -- client API -----------------------------------------------------
+    @staticmethod
+    def _final_metrics(handle: RequestHandle, submit_t: float,
+                       stamps: List[float]) -> Dict[str, Any]:
+        """The per-request metrics record surfaced on completion:
+        client-side TTFT / ITL percentiles from this coroutine's own
+        arrival stamps, merged with the scheduler-side record that rode
+        in on the final token packet (docs/OBSERVABILITY.md)."""
+        sched = dict(handle.metrics) if handle.metrics else {}
+        itls = sorted((b - a) * 1e3 for a, b in zip(stamps, stamps[1:]))
+        return {
+            "id": handle.id,
+            "finish_reason": handle.finish_reason,
+            "tokens": sched.get("tokens", len(stamps)),
+            "ttft_ms": (stamps[0] - submit_t) * 1e3 if stamps else None,
+            "itl_ms": {"p50": itls[len(itls) // 2], "max": itls[-1]}
+            if itls else None,
+            "preemptions": sched.get("preemptions", 0),
+            "spec_drafted": sched.get("spec_drafted", 0),
+            "spec_accepted": sched.get("spec_accepted", 0),
+            "scheduler": sched,       # ttft_ms/queue_wait_ms server-side
+        }
+
     async def stream(self, tokens, *, request_id: Any = None,
                      on_handle: Optional[Callable[[RequestHandle],
                                                   None]] = None,
+                     on_metrics: Optional[Callable[[Dict[str, Any]],
+                                                   None]] = None,
                      **submit_kw) -> AsyncIterator[int]:
         """Async-stream generated token ids for one request.
 
@@ -136,7 +160,11 @@ class AsyncFrontend:
         ``deadline_ms``, ``ttft_ms``).  ``on_handle`` is called with
         each attempt's :class:`RequestHandle` as soon as it exists —
         the hook for callers who need the finish reason or out-of-band
-        cancellation.
+        cancellation.  ``on_metrics`` is called once, when the request
+        completes (any reason), with the final per-request metrics
+        record: client-side TTFT and ITL p50/max measured by this
+        coroutine, plus the scheduler-side record (queue wait,
+        accepted/drafted, preemptions) from the final token packet.
 
         Abandoning the stream — ``aclose()``, breaking out of
         ``async for``, task cancellation — cancels the request
@@ -159,8 +187,10 @@ class AsyncFrontend:
             if on_handle is not None:
                 on_handle(handle)
             q = self._attach(handle, loop)
-            deadline = loop.time() + self.policy.timeout_ms / 1e3
+            submit_t = loop.time()
+            deadline = submit_t + self.policy.timeout_ms / 1e3
             started = False
+            stamps: List[float] = []
             try:
                 while True:
                     remaining = deadline - loop.time()
@@ -181,8 +211,12 @@ class AsyncFrontend:
                                            f"failed") from handle._error
                     if token is not None:
                         started = True
+                        stamps.append(loop.time())
                         yield token
                     if finished:
+                        if on_metrics is not None:
+                            on_metrics(self._final_metrics(
+                                handle, submit_t, stamps))
                         return
             except (asyncio.CancelledError, GeneratorExit):
                 # client disconnect: stop the engine's work on this
@@ -204,14 +238,22 @@ class AsyncFrontend:
     async def generate(self, tokens, *, request_id: Any = None,
                        on_handle: Optional[Callable[[RequestHandle],
                                                     None]] = None,
+                       on_metrics: Optional[Callable[[Dict[str, Any]],
+                                                     None]] = None,
                        **submit_kw) -> np.ndarray:
         """Submit and await the full generation; returns [n] int32.
         Same policy semantics as :meth:`stream` (which it consumes)."""
         out = []
         async for tok in self.stream(tokens, request_id=request_id,
-                                     on_handle=on_handle, **submit_kw):
+                                     on_handle=on_handle,
+                                     on_metrics=on_metrics, **submit_kw):
             out.append(tok)
         return np.asarray(out, np.int32)
+
+    def metrics(self) -> Dict[str, Any]:
+        """Aggregate metrics snapshot from the underlying server's
+        merged registries (see :meth:`GraphServer.metrics`)."""
+        return self.server.metrics()
 
     async def cancel(self, request_id: Any) -> bool:
         """Cancel a request by id (see :meth:`GraphServer.cancel`)."""

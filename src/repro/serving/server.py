@@ -33,9 +33,11 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 import numpy as np
 
 from ..core.graph import Graph, OutputStreamPoller
+from ..core.metrics import MetricsRegistry
 from .batching import DeadlineExceeded
 from .engine import LLMEngine
 from .kvcache.backend import max_request_tokens
+from .observe import FlightRecorder, export_run
 from .pipeline import build_continuous_serving_graph
 
 
@@ -62,12 +64,17 @@ class RequestHandle:
         self._result: Optional[np.ndarray] = None
         self._finish_reason = ""
         self._error: Optional[BaseException] = None
+        #: scheduler-side per-request metrics record (TTFT, queue wait,
+        #: accepted/drafted, preemptions ...), set with the final token —
+        #: see docs/OBSERVABILITY.md
+        self.metrics: Optional[Dict[str, Any]] = None
 
     # -- fed by the server's dispatcher thread (one thread: the TOKEN
     # stream is the single source of truth, so tokens and completion can
     # never be observed out of order) ----------------------------------
     def _on_token(self, token: Optional[int], finished: bool,
-                  reason: str) -> None:
+                  reason: str, metrics: Optional[Dict[str, Any]] = None
+                  ) -> None:
         with self._mutex:
             if token is not None:
                 self._tokens.append(token)
@@ -75,6 +82,8 @@ class RequestHandle:
             if finished:
                 self._result = np.asarray(self._tokens, np.int32)
                 self._finish_reason = reason
+                if metrics is not None:
+                    self.metrics = metrics
                 self._events.put(self._END)
                 self._done.set()
             for fn in self._listeners:
@@ -172,8 +181,11 @@ class GraphServer:
                  paged: bool = False, num_blocks: int = 0,
                  block_size: int = 16, prefix_sharing: bool = True,
                  admission: str = "preempt", watermark: int = 0,
-                 backend: Optional[str] = None, spec_window: int = 8):
+                 backend: Optional[str] = None, spec_window: int = 8,
+                 observe_dir: Optional[str] = None,
+                 flight_max_dumps: int = 8):
         self.engine = engine
+        self.observe_dir = observe_dir
         self._default_max_new = max_new_tokens
         # "backend" names the layout outright ("slot" | "paged" | "state"
         # | "hybrid") and wins over the legacy paged flag; "state" serves
@@ -240,6 +252,22 @@ class GraphServer:
                 raise RuntimeError(
                     "engine calculator did not finish opening")
             time.sleep(0.001)
+        self._engine_calc = engine_node.calculator
+        # flight recorder (docs/OBSERVABILITY.md): incidents dump the
+        # last-N trace events + metrics + scheduler state to observe_dir
+        self._recorder: Optional[FlightRecorder] = None
+        if observe_dir is not None:
+            obs = getattr(self._engine_calc, "observer", None)
+            rec = FlightRecorder(
+                observe_dir, max_dumps=flight_max_dumps,
+                registry=obs.registry if obs is not None else None)
+            rec.bind(events_fn=self.graph.tracer.events,
+                     metrics_fn=self.metrics,
+                     state_fn=self._engine_calc.sched.debug_state)
+            if obs is not None and obs.enabled:
+                # NULL_OBSERVER is a shared singleton: never mutate it
+                obs.recorder = rec
+            self._recorder = rec
         self._threads = [
             threading.Thread(target=self._pump_tokens, daemon=True,
                              name="graphserver-tokens"),
@@ -399,6 +427,40 @@ class GraphServer:
                             reserved=pool.reserved_blocks)
         return out
 
+    def metrics_registry(self) -> MetricsRegistry:
+        """Merged view of the engine's profiling registry and the
+        scheduler observer's lifecycle registry (both log-bucketed, so
+        the merge is lossless — docs/OBSERVABILITY.md)."""
+        regs = [self.engine.metrics]
+        obs = getattr(self._engine_calc, "observer", None)
+        if obs is not None:
+            regs.append(obs.registry)
+        return MetricsRegistry.merged(regs)
+
+    def metrics(self) -> Dict[str, Any]:
+        """JSON-serialisable snapshot of every counter/gauge/histogram
+        (TTFT, ITL, queue wait, batch occupancy, jit compiles ...)."""
+        return self.metrics_registry().snapshot()
+
+    def metrics_text(self) -> str:
+        """The same snapshot in Prometheus text exposition format."""
+        return self.metrics_registry().to_prometheus()
+
+    def dump_observability(self, out_dir: Optional[str] = None
+                           ) -> Dict[str, str]:
+        """Export the run's full observability artifact set (chrome
+        trace, per-request Perfetto tracks, JSON timelines, metrics
+        snapshot + Prometheus text, provenance) to ``out_dir`` (defaults
+        to the server's ``observe_dir``).  Callable live or after
+        :meth:`close`.  Returns {artifact name: path}."""
+        out_dir = out_dir if out_dir is not None else self.observe_dir
+        if out_dir is None:
+            raise ValueError("no output directory: pass out_dir or "
+                             "construct the server with observe_dir=")
+        return export_run(out_dir, tracer=self.graph.tracer,
+                          node_names=self.graph.node_names(),
+                          registry=self.metrics_registry())
+
     def close(self, timeout: float = 300.0) -> Dict[str, Any]:
         """Stop accepting requests, drain in-flight work, stop the graph.
         Returns the final :meth:`stats` snapshot."""
@@ -438,13 +500,17 @@ class GraphServer:
                     return
                 dispatch(pkt.payload)
         except BaseException as e:       # graph error: fail fast
+            if self._recorder is not None:
+                self._recorder.incident("executor_error",
+                                        f"{type(e).__name__}: {e}")
             self._fail_pending(e)
 
     def _dispatch_token(self, payload: Dict[str, Any]) -> None:
         h = self._handle_of(payload["id"])
         if h is not None:
             h._on_token(payload["token"], payload["finished"],
-                        payload.get("finish_reason", ""))
+                        payload.get("finish_reason", ""),
+                        payload.get("metrics"))
             if payload["finished"]:
                 # prune: the handle owns its result now; keeping it in the
                 # server map would grow memory forever on a long-lived

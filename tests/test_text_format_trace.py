@@ -148,8 +148,14 @@ class TestChromeTrace:
                                         trace_mod.PACKET_DROPPED)
                        for e in raw)
         assert len(instants) == n_packet
-        names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
-        assert names == set(g.node_names().values())
+        # tracks are real executor threads; node identity rides on the
+        # X-event name / args
+        thread_ids = {e.thread_id for e in raw}
+        meta = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+        assert meta == {f"thread-{tid}" for tid in thread_ids}
+        assert all(e["tid"] in thread_ids for e in runs)
+        assert ({e["name"] for e in runs}
+                <= set(str(n) for n in g.node_names().values()))
 
     def test_paged_server_records_pool_gauges(self):
         """The serving scheduler's block-pool occupancy lands in the graph

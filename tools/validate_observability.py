@@ -1,0 +1,290 @@
+#!/usr/bin/env python
+"""Validator for an ``--observe-dir`` artifact set — the CI
+observability-smoke job's teeth.
+
+Checks, over the directory ``repro.serving.observe.export_run`` (or
+``GraphServer.dump_observability``) wrote:
+
+1. ``trace.json`` — loads as Chrome-trace JSON; ``traceEvents`` is a
+   non-empty list whose entries all carry ``ph`` and (except metadata
+   events) a numeric ``ts``; at least one ``X`` run slice and one
+   ``thread_name`` metadata entry exist.
+2. ``requests.perfetto.json`` — the per-request lifecycle view: one
+   ``thread_name`` track per request, every ``X`` segment's track is a
+   declared request track, durations are non-negative.
+3. ``timelines.json`` — every finished request's record carries the
+   submitted → admitted → first_token → finished milestones, with
+   monotone timestamps and non-negative derived latencies.
+4. ``metrics.prom`` — parses line-by-line against the Prometheus text
+   exposition grammar; every samples block is preceded by HELP/TYPE;
+   histogram ``_bucket`` series are cumulative-monotone in ``le`` and
+   end with ``le="+Inf"`` equal to ``_count``.
+5. ``metrics.json`` + ``provenance.json`` — load; provenance names the
+   argv and timestamp that produced the run.
+
+Importable: each ``validate_*`` function takes a path and returns a
+list of violation strings (empty = pass), so tests reuse them directly.
+
+Run locally::
+
+    python -m repro.launch.serve --requests 6 --observe-dir obs_out
+    python tools/validate_observability.py obs_out
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import sys
+from pathlib import Path
+
+# Prometheus text exposition grammar (the subset our exporter emits).
+HELP_RE = re.compile(r"^# HELP [a-zA-Z_:][a-zA-Z0-9_:]* .*$")
+TYPE_RE = re.compile(r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) "
+                     r"(counter|gauge|histogram|summary|untyped)$")
+SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"                  # metric name
+    r"(?:\{([a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""      # first label
+    r"(?:,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*)\})?" # ,more labels
+    r" (-?(?:[0-9.eE+-]+|Inf|NaN))$")               # value
+LABEL_RE = re.compile(r"([a-zA-Z_][a-zA-Z0-9_]*)=\"([^\"]*)\"")
+
+
+def _load(path: Path, errs):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        errs.append(f"{path.name}: missing")
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        errs.append(f"{path.name}: not valid JSON ({e})")
+    return None
+
+
+def validate_trace(path) -> list:
+    """Chrome-trace JSON sanity: loadable, non-empty, well-formed ph/ts."""
+    errs: list = []
+    doc = _load(Path(path), errs)
+    if doc is None:
+        return errs
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return errs + [f"{Path(path).name}: traceEvents empty or missing"]
+    phs = set()
+    for i, e in enumerate(evs):
+        ph = e.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errs.append(f"traceEvents[{i}]: missing ph")
+            continue
+        phs.add(ph)
+        if ph != "M" and not isinstance(e.get("ts"), (int, float)):
+            errs.append(f"traceEvents[{i}] (ph={ph}): non-numeric ts")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"traceEvents[{i}]: X slice bad dur={dur!r}")
+    if "X" not in phs:
+        errs.append(f"{Path(path).name}: no X run slices")
+    if not any(e.get("ph") == "M" and e.get("name") == "thread_name"
+               for e in evs):
+        errs.append(f"{Path(path).name}: no thread_name metadata")
+    return errs
+
+
+def validate_perfetto_requests(path) -> list:
+    """Per-request lifecycle export: request tracks declared and used."""
+    errs: list = []
+    doc = _load(Path(path), errs)
+    if doc is None:
+        return errs
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return errs + [f"{Path(path).name}: traceEvents empty or missing"]
+    tracks = {e["tid"] for e in evs
+              if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    if not tracks:
+        errs.append(f"{Path(path).name}: no request thread_name tracks")
+    for i, e in enumerate(evs):
+        if e.get("ph") == "X":
+            if e.get("tid") not in tracks:
+                errs.append(f"traceEvents[{i}]: X segment on undeclared "
+                            f"track tid={e.get('tid')!r}")
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                errs.append(f"traceEvents[{i}]: bad dur={e.get('dur')!r}")
+    return errs
+
+
+_MILESTONES = ("submitted_ms", "admitted_ms", "first_token_ms",
+               "finished_ms")
+
+
+def validate_timelines(path) -> list:
+    """Lifecycle records: milestones present and monotone per request."""
+    errs: list = []
+    doc = _load(Path(path), errs)
+    if doc is None:
+        return errs
+    recs = doc.get("requests")
+    if not isinstance(recs, list) or not recs:
+        return errs + [f"{Path(path).name}: requests empty or missing"]
+    for r in recs:
+        rid = r.get("id", "?")
+        if not r.get("finish_reason"):
+            continue  # in-flight at export time: partial record is fine
+        missing = [m for m in _MILESTONES if r.get(m) is None]
+        # cancelled/deadline requests can legally die pre-first-token
+        if r["finish_reason"] in ("length", "eos", "stop"):
+            if missing:
+                errs.append(f"request {rid}: finished "
+                            f"({r['finish_reason']}) but missing "
+                            f"milestones {missing}")
+                continue
+            seq = [r[m] for m in _MILESTONES]
+            if any(b < a for a, b in zip(seq, seq[1:])):
+                errs.append(f"request {rid}: non-monotone milestones "
+                            f"{dict(zip(_MILESTONES, seq))}")
+        for k in ("queue_wait_ms", "ttft_ms", "total_ms"):
+            v = r.get(k)
+            if v is not None and v < 0:
+                errs.append(f"request {rid}: negative {k}={v}")
+    return errs
+
+
+def _num(s: str) -> float:
+    if s == "+Inf" or s == "Inf":
+        return math.inf
+    if s == "-Inf":
+        return -math.inf
+    if s == "NaN":
+        return math.nan
+    return float(s)
+
+
+def validate_prometheus(path) -> list:
+    """Full-grammar parse of the text exposition + histogram invariants."""
+    path = Path(path)
+    errs: list = []
+    try:
+        text = path.read_text()
+    except FileNotFoundError:
+        return [f"{path.name}: missing"]
+    typed = {}          # metric family -> declared type
+    samples = []        # (name, {label: value}, float)
+    for n, line in enumerate(text.splitlines(), 1):
+        if not line:
+            continue
+        if line.startswith("# HELP"):
+            if not HELP_RE.match(line):
+                errs.append(f"line {n}: malformed HELP: {line!r}")
+            continue
+        if line.startswith("# TYPE"):
+            m = TYPE_RE.match(line)
+            if not m:
+                errs.append(f"line {n}: malformed TYPE: {line!r}")
+            else:
+                typed[m.group(1)] = m.group(2)
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errs.append(f"line {n}: malformed sample: {line!r}")
+            continue
+        name, labels_s, value = m.group(1), m.group(2), m.group(3)
+        labels = dict(LABEL_RE.findall(labels_s)) if labels_s else {}
+        samples.append((name, labels, _num(value)))
+    if not samples:
+        errs.append(f"{path.name}: no samples")
+
+    def family(name):
+        for suf in ("_bucket", "_sum", "_count", "_total"):
+            if name.endswith(suf) and name[:-len(suf)] in typed:
+                return name[:-len(suf)]
+        return name
+
+    untyped = {family(n) for n, _, _ in samples} - set(typed)
+    for fam in sorted(untyped):
+        errs.append(f"family {fam}: samples without a TYPE declaration")
+
+    # histogram invariants: per label-set (minus le), buckets cumulative
+    # and the +Inf bucket equals _count
+    hists = {}
+    counts = {}
+    for name, labels, value in samples:
+        fam = family(name)
+        if typed.get(fam) != "histogram":
+            continue
+        key = (fam, tuple(sorted((k, v) for k, v in labels.items()
+                                 if k != "le")))
+        if name.endswith("_bucket"):
+            if "le" not in labels:
+                errs.append(f"{name}{labels}: _bucket without le")
+                continue
+            hists.setdefault(key, []).append((_num(labels["le"]), value))
+        elif name.endswith("_count"):
+            counts[key] = value
+    for key, buckets in hists.items():
+        fam = key[0]
+        buckets.sort(key=lambda t: t[0])
+        vals = [v for _, v in buckets]
+        if any(b < a for a, b in zip(vals, vals[1:])):
+            errs.append(f"{fam}{dict(key[1])}: buckets not cumulative")
+        if not buckets or buckets[-1][0] != math.inf:
+            errs.append(f"{fam}{dict(key[1])}: no +Inf bucket")
+        elif key in counts and buckets[-1][1] != counts[key]:
+            errs.append(f"{fam}{dict(key[1])}: +Inf bucket "
+                        f"{buckets[-1][1]} != _count {counts[key]}")
+    return errs
+
+
+def validate_metrics_json(path) -> list:
+    errs: list = []
+    doc = _load(Path(path), errs)
+    if doc is not None and not doc:
+        errs.append(f"{Path(path).name}: empty snapshot")
+    return errs
+
+
+def validate_provenance(path) -> list:
+    errs: list = []
+    doc = _load(Path(path), errs)
+    if doc is None:
+        return errs
+    for k in ("argv", "timestamp", "python"):
+        if k not in doc:
+            errs.append(f"{Path(path).name}: missing {k!r}")
+    return errs
+
+
+def validate_dir(obs_dir) -> list:
+    """Validate a whole ``--observe-dir`` artifact set; returns all
+    violations across the five artifact checks."""
+    d = Path(obs_dir)
+    errs: list = []
+    errs += validate_trace(d / "trace.json")
+    errs += validate_perfetto_requests(d / "requests.perfetto.json")
+    errs += validate_timelines(d / "timelines.json")
+    errs += validate_prometheus(d / "metrics.prom")
+    errs += validate_metrics_json(d / "metrics.json")
+    errs += validate_provenance(d / "provenance.json")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: validate_observability.py <observe-dir>",
+              file=sys.stderr)
+        return 2
+    errs = validate_dir(argv[0])
+    for e in errs:
+        print(f"FAIL {e}")
+    if errs:
+        print(f"{len(errs)} violation(s) in {argv[0]}")
+        return 1
+    print(f"OK {argv[0]}: all observability artifacts validate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
