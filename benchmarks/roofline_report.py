@@ -3,6 +3,11 @@ dry-run JSONL results (single source of truth; re-run after any change):
 
     PYTHONPATH=src python -m benchmarks.roofline_report \
         results_single.jsonl results_multi.jsonl
+
+Also exports the serve-bench roofline helpers (``step_hlo_cost`` /
+``roofline_ms`` / ``NOMINAL_PEAKS``) that ``serve_bench.py`` uses to put
+a measured-vs-modeled section for the decode/verify kernels into
+``BENCH_serve.json`` (docs/KERNELS.md explains how to read it).
 """
 from __future__ import annotations
 
@@ -69,6 +74,35 @@ def dryrun_table(rows, title):
                 f"{cc.get('all-to-all', 0)/2**30:.2f}G | "
                 f"{r['compile_time_s']:.0f} |")
     return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# serve-bench roofline helpers (imported by benchmarks/serve_bench.py)
+# ---------------------------------------------------------------------------
+
+#: Nominal single-socket CPU peaks for the serve-bench roofline.  The CI
+#: box runs the Pallas kernels in *interpret* mode, so measured times sit
+#: far above the roofline — the section's value is the before/after-fusion
+#: RATIO of modeled flops/bytes and of measured step time, both of which
+#: are peak-independent.  Absolute utilization numbers are reported
+#: against these documented nominals, not against measured hardware.
+NOMINAL_PEAKS = {"flops_per_s": 5.0e10, "bytes_per_s": 2.0e10}
+
+
+def step_hlo_cost(jitted, *args) -> dict:
+    """Per-call flops / HBM-byte estimate of a jitted step: lower at the
+    given arguments, compile, and run the while-loop-aware HLO cost model
+    (``repro.launch.hlo_cost``) over the optimized module text."""
+    from repro.launch.hlo_cost import hlo_cost
+    text = jitted.lower(*args).compile().as_text()
+    return hlo_cost(text)
+
+
+def roofline_ms(cost: dict, peaks: dict = NOMINAL_PEAKS) -> float:
+    """max(compute, memory) time in ms for an HLO cost under ``peaks`` —
+    the classic roofline bound for one step."""
+    return max(cost["flops"] / peaks["flops_per_s"],
+               cost["bytes"] / peaks["bytes_per_s"]) * 1e3
 
 
 def main():

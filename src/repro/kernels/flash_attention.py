@@ -28,7 +28,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   causal: bool, window: int, block_q: int, block_k: int,
-                  seq_q: int, seq_k: int, scale: float):
+                  seq_q: int, seq_k: int, scale: float, q_offset: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -39,7 +39,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q_start = iq * block_q
+    q_start = q_offset + iq * block_q
     k_start = ik * block_k
     # block-level skip: no valid entries when the whole kv block is in the
     # causal future or behind the window
@@ -87,14 +87,28 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int = 0,
+                           q_offset: int = 0,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = True) -> jax.Array:
-    """q: [B,S,H,hd]; k,v: [B,T,KV,hd].  Returns [B,S,H,hd]."""
+    """q: [B,S,H,hd]; k,v: [B,T,KV,hd].  Returns [B,S,H,hd].
+
+    ``q_offset`` places query row ``s`` at global position ``q_offset + s``
+    for the causal/window masks — the rectangular suffix-attention shape
+    of prefix-extend prefill (q covers positions ``q_offset ..
+    q_offset + S - 1`` of a ``T``-long key sequence).
+
+    The key sequence is padded up to a ``block_k`` multiple rather than
+    shrinking ``block_k`` to fit, so the k-block partition boundaries are
+    a fixed function of absolute position.  Padded/masked entries add
+    exact f32 zeros to the online-softmax statistics, which makes each
+    query row's accumulation order — and hence its output bits —
+    independent of ``T``, ``q_offset``, and the q-block grouping.  That
+    is the chunk-invariance argument for routing chunked prefill's
+    suffix attention through this kernel (docs/KERNELS.md)."""
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
     block_q = min(block_q, S)
-    block_k = min(block_k, T)
     pad_q = (-S) % block_q
     pad_k = (-T) % block_k
     if pad_q:
@@ -116,7 +130,7 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kernel = functools.partial(
         _flash_kernel, causal=causal, window=window, block_q=block_q,
         block_k=block_k, seq_q=S, seq_k=T,
-        scale=float(hd) ** -0.5)
+        scale=float(hd) ** -0.5, q_offset=q_offset)
 
     from jax.experimental.pallas import tpu as pltpu
     out = pl.pallas_call(

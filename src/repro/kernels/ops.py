@@ -14,22 +14,38 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel
+from .flash_decode import fused_flash_decode_kernel
 from .paged_attention import paged_attention_kernel
 from .rmsnorm import rmsnorm_kernel
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-@partial(jax.jit, static_argnames=("causal", "window"))
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0) -> jax.Array:
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0) -> jax.Array:
     return flash_attention_kernel(q, k, v, causal=causal, window=window,
-                                  interpret=INTERPRET)
+                                  q_offset=q_offset, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("eps",))
 def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5) -> jax.Array:
     return rmsnorm_kernel(x, scale, eps=eps, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("rope_theta", "split_k"))
+def fused_flash_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                       k_pages: jax.Array, v_pages: jax.Array,
+                       block_tables: jax.Array, positions: jax.Array, *,
+                       rope_theta: float = 10_000.0, split_k: bool = False):
+    """One-call fused decode/verify attention: RoPE + tail-block scatter
+    + per-query-masked attention over the paged arena (see
+    repro.kernels.flash_decode).  Returns (out, k_pages, v_pages)."""
+    return fused_flash_decode_kernel(q, k_new, v_new, k_pages, v_pages,
+                                     block_tables, positions,
+                                     rope_theta=rope_theta, split_k=split_k,
+                                     interpret=INTERPRET)
 
 
 @jax.jit

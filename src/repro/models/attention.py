@@ -56,15 +56,20 @@ def abstract_paged_kv_cache(cfg: ArchConfig, num_blocks: int,
             "v": jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))}
 
 
-def _qkv(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+def _qkv(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+         rope: bool = True):
+    """Project q/k/v (+ qk-norm).  ``rope=False`` returns un-rotated q/k
+    for the fused decode path, which applies the (bitwise identical)
+    rotation inside the kernel at the same positions."""
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
     if cfg.qk_norm:
         q = rms_norm(params["q_norm"], q, cfg.norm_eps)
         k = rms_norm(params["k_norm"], k, cfg.norm_eps)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
@@ -130,7 +135,8 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
         arena (``abstract_paged_kv_cache`` layout) and each row's K/V is
         reached through its block table instead of a contiguous row.
     """
-    q, k, v = _qkv(params, cfg, x, positions)
+    fused = cache is not None and paging.use_fused_decode(cfg, flags)
+    q, k, v = _qkv(params, cfg, x, positions, rope=not fused)
     if cache is None:
         out = _seq_attention(q, k, v, cfg, impl, flags)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
@@ -138,7 +144,11 @@ def attention_apply(params, cfg: ArchConfig, x: jax.Array,
 
     if block_tables is not None:
         return _paged_decode(params, cfg, q, k, v, cache, cache_pos,
-                             block_tables, flags)
+                             block_tables, flags, fused=fused)
+
+    if fused:
+        return _fused_slot_decode(params, cfg, q, k, v, cache, cache_pos,
+                                  flags)
 
     # ---- decode: append S' token(s), attend to cache ------------------
     B, S, KV, hd = cache["k"].shape
@@ -227,8 +237,41 @@ def prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
     return y, {"k": k_c, "v": v_c}
 
 
+def _fused_slot_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
+                       flags):
+    """Contiguous-slot decode through the fused flash-decode kernel.
+
+    The ``[B, max_len, KV, hd]`` cache is viewed (a free reshape) as a
+    position-ordered arena of ``max_len // page`` blocks per row with
+    identity-ish tables, so the SAME kernel serves the slot and paged
+    layouts — and with matching page granularity
+    (``paging.fused_page_size``) even the split-K accumulation order
+    matches the paged backend's, keeping tokens bit-identical across
+    layouts.  q/k/v arrive un-rotated (``_qkv(rope=False)``); the kernel
+    rotates, scatters the window into the row, and attends with the
+    per-query causal mask in one call.
+    """
+    from ..kernels.ops import fused_flash_decode
+    B, S, KV, hd = cache["k"].shape
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    page = paging.fused_page_size(S)
+    P = S // page
+    tables = paging.slot_arena_tables(B, S, page)
+    k_arena = cache["k"].reshape(B * P, page, KV, hd)
+    v_arena = cache["v"].reshape(B * P, page, KV, hd)
+    out, k_arena, v_arena = fused_flash_decode(
+        q, k, v, k_arena, v_arena, tables, pos,
+        rope_theta=cfg.rope_theta,
+        split_k=getattr(flags, "fused_split_k", False))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_arena.reshape(B, S, KV, hd),
+               "v": v_arena.reshape(B, S, KV, hd)}
+
+
 def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
-                  block_tables, flags):
+                  block_tables, flags, fused: bool = False):
     """Decode one (or, speculatively, S') token(s) against a paged arena.
 
     Each new token's K/V is scattered into the sequence's current tail
@@ -244,6 +287,18 @@ def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
     P = block_tables.shape[1]
     S_q = q.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)          # [B] per-row positions
+    if fused:
+        # One pallas_call for the whole (possibly multi-token) window:
+        # q/k/v arrive un-rotated; the kernel rotates at pos..pos+S'-1,
+        # scatters k/v into each row's tail block(s) through its aliased
+        # arena outputs, and attends query s with `idx <= pos + s`.
+        from ..kernels.ops import fused_flash_decode
+        out, k_new, v_new = fused_flash_decode(
+            q, k, v, cache["k"], cache["v"], block_tables, pos,
+            rope_theta=cfg.rope_theta,
+            split_k=getattr(flags, "fused_split_k", False))
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, {"k": k_new, "v": v_new}
     if S_q > 1:
         # Multi-token (speculative verify) decode: scatter each of the S'
         # new tokens into its row's tail block at pos+s; query s is
@@ -298,6 +353,11 @@ def prefill_extend_into_cache(params, cfg: ArchConfig, x: jax.Array,
     v_full = jnp.concatenate([prefix_kv["v"].astype(v.dtype), v], axis=1)
     if impl == "chunked":
         out = chunked_attention_rect(q, k_full, v_full, prefix_len, cfg)
+    elif impl == "flash":
+        from ..kernels.ops import flash_attention
+        out = flash_attention(q, k_full, v_full, causal=True,
+                              window=cfg.sliding_window,
+                              q_offset=prefix_len)
     elif impl == "naive":
         S_, T = q.shape[1], k_full.shape[1]
         i = prefix_len + jnp.arange(S_)[:, None]
@@ -305,7 +365,7 @@ def prefill_extend_into_cache(params, cfg: ArchConfig, x: jax.Array,
         out = _grouped_attention(q, k_full, v_full, m)
     else:
         raise ValueError(f"prefix-extend prefill supports impl "
-                         f"'chunked'|'naive', got {impl!r}")
+                         f"'chunked'|'naive'|'flash', got {impl!r}")
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     S_in = x.shape[1]
     pad = max_len - S_in

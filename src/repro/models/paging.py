@@ -82,6 +82,44 @@ def valid_mask(total_len: int, pos: jax.Array) -> jax.Array:
     return jnp.arange(total_len)[None, :] <= pos[:, None]
 
 
+def use_fused_decode(cfg, flags) -> bool:
+    """Should this attention layer's decode/verify step run through the
+    fused flash-decode kernel (``kernels.flash_decode``)?
+
+    The ONE predicate `attention.py` consults before deciding whether to
+    rotate q/k outside the kernel: the fused path wants them un-rotated.
+    Sliding-window layers keep the wraparound slot layout (positions are
+    not monotone in the cache, so a position-ordered arena view does not
+    exist) and multi-host decode keeps the sharded-gather path.  MLA
+    never reaches here — its latent cache decodes in ``mla.py``."""
+    return (flags is not None
+            and getattr(flags, "use_fused_decode", False)
+            and not cfg.sliding_window
+            and getattr(flags, "model_size", 1) == 1)
+
+
+def fused_page_size(max_len: int, preferred: int = 8) -> int:
+    """Page granularity for viewing a contiguous slot row as an arena.
+
+    ``preferred`` matches the serving default block size so the slot and
+    paged layouts accumulate split-K partials over identical page
+    boundaries (bit-identical tokens across layouts); rows whose length
+    is not a multiple fall back to one whole-row page."""
+    return preferred if max_len % preferred == 0 else max_len
+
+
+def slot_arena_tables(batch: int, max_len: int, page: int) -> jax.Array:
+    """Block tables presenting a contiguous ``[N, max_len, ...]`` slot
+    cache (reshaped to ``[N * (max_len // page), page, ...]``) as a
+    position-ordered arena: row ``b``'s page ``p`` is block
+    ``b * P + p``.  Every block is real — there is no trash block, and
+    the fused kernel's page write-back is idempotent for pages outside
+    the write window, so none is needed."""
+    P = max_len // page
+    return (jnp.arange(batch, dtype=jnp.int32)[:, None] * P
+            + jnp.arange(P, dtype=jnp.int32)[None, :])
+
+
 def gather_prefix_kv(mixer_cache, ref: PrefixRef, prefix_len: int):
     """Gather positions ``[0, prefix_len)`` of each row's cached K/V.
 

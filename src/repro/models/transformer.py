@@ -47,6 +47,17 @@ class RuntimeFlags:
     # GQA/MHA/MQA only — MLA's latent cache always uses the gather path
     # (LLMEngine.new_cache rejects the combination).
     use_paged_kernel: bool = False
+    # Fused flash-decode: run the whole decode / speculative-verify
+    # window (RoPE + tail-block KV scatter + per-query-masked attention)
+    # as one Pallas call on every layout — slot rows are viewed as a
+    # one-row-per-sequence arena (paging.slot_arena_tables).  MLA and
+    # sliding-window layers fall back to the gather path per layer
+    # (paging.use_fused_decode / runtime.steps.kernel_path).
+    use_fused_decode: bool = False
+    # Fused-decode variant: online-softmax partial reductions per page
+    # that skip pages past the row's length (work ∝ actual context);
+    # False = the fully-gathered bit-exact reference configuration.
+    fused_split_k: bool = False
 
 
 DEFAULT_FLAGS = RuntimeFlags()

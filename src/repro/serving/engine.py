@@ -36,7 +36,7 @@ from ..models.transformer import (DEFAULT_FLAGS, RuntimeFlags,
                                   check_hybrid_support,
                                   check_mixed_extend_support,
                                   check_paged_support)
-from ..runtime.steps import (make_decode_step, make_extend_step,
+from ..runtime.steps import (kernel_path, make_decode_step, make_extend_step,
                              make_hybrid_insert, make_paged_insert,
                              make_prefill_step, make_serve_decode_step,
                              make_slot_insert, make_state_extend_step,
@@ -80,6 +80,10 @@ class LLMEngine:
         self._extend_steps: Dict[Tuple, Any] = {}
         self._verify_steps: Dict[Tuple, Any] = {}
         self._state_rewind = None       # built on first verify/truncate
+        # per-(step, layout) cache of kernel-path metric handles +
+        # resolved label sets (_observe_kernel runs on every decode
+        # tick; keep it off the registry lookup path)
+        self._kernel_obs: Dict[Tuple, Tuple] = {}
 
     def _timed(self, fn, step: str, layout: str, width: str = ""):
         """Wrap a jitted step: the first call (= trace + compile + run)
@@ -112,6 +116,38 @@ class LLMEngine:
     @staticmethod
     def _layout(backend) -> str:
         return f"{backend.kind}/{getattr(backend, 'block_size', 0)}"
+
+    def _observe_kernel(self, step: str, backend, t0: float) -> None:
+        """Record which attention implementation served a decode/verify
+        step (``fused`` Pallas flash-decode vs the gather ``fallback``)
+        and its wall time — so a silent fall-off the fast path shows up
+        in ``metrics_text()``, not just as degraded throughput.  The
+        timer spans the host-side token conversion, i.e. includes the
+        device sync.  Runs on every decode tick: the dispatch decision,
+        label set, and metric handles are resolved once per
+        (step, layout) and cached."""
+        if not self.metrics.enabled:
+            return
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        key = (step, backend.kind, getattr(backend, "block_size", 0))
+        ent = self._kernel_obs.get(key)
+        if ent is None:
+            labels = {"path": kernel_path(self.cfg, self.flags,
+                                          backend.kind),
+                      "step": step, "layout": self._layout(backend)}
+            ent = (self.metrics.counter(
+                       "engine.kernel_path",
+                       "decode/verify steps by attention implementation "
+                       "(fused flash-decode kernel vs gather fallback)"
+                   ).bind(**labels),
+                   self.metrics.histogram(
+                       "engine.kernel_ms",
+                       "wall time per decode/verify step, by kernel "
+                       "path").bind(**labels))
+            self._kernel_obs[key] = ent
+        ctr, hist = ent
+        ctr.inc()
+        hist.observe(dt_ms)
 
     # ------------------------------------------------------------------
     # static-batch generation
@@ -177,21 +213,21 @@ class LLMEngine:
         self.check_extend_support("hybrid")
 
     def check_extend_support(self, backend_kind: str = "slot") -> None:
-        """Prefix/chunked-extend prefill has no flash or sequence-parallel
-        path yet.  On the slot/paged layouts it additionally needs a
+        """Prefix/chunked-extend prefill has no sequence-parallel path
+        yet.  On the slot/paged layouts it additionally needs a
         pure-attention decoder stack; the state/hybrid layouts instead
         *continue the sequential state scan* for recurrent layers
         (docs/STATE_CACHE.md), so only per-layer attention limits remain.
         Paged/hybrid backends always need it; slot/state backends only
-        with chunked prefill enabled."""
+        with chunked prefill enabled.  ``use_flash`` routes the suffix
+        attention through the Pallas flash kernel with a static
+        ``q_offset`` — chunk-invariant bitwise because k-block partition
+        boundaries are fixed at ``block_k`` multiples of absolute
+        position (docs/KERNELS.md)."""
         if backend_kind in STATE_KINDS:
             check_mixed_extend_support(self.cfg)
         else:
             check_paged_support(self.cfg)
-        if self.flags.use_flash and ("attn" in self.cfg.layer_kinds()
-                                     or backend_kind not in STATE_KINDS):
-            raise ValueError("extend prefill requires attn_impl "
-                             "'chunked'|'naive' (no flash path yet)")
         if getattr(self.flags, "model_size", 1) > 1:
             raise ValueError("extend prefill is single-host for now "
                              "(prefix-extend attention is not "
@@ -203,18 +239,23 @@ class LLMEngine:
         stack (their recurrent state has no rollback); the state/hybrid
         layouts verify recurrent layers through the sequential window
         pass with state stacks + rewind (docs/STATE_CACHE.md).  Neither
-        has a sliding-window mask, and paged K/V is read through the
-        page gather (the Pallas paged kernel is single-query)."""
+        has a sliding-window mask.  Verify windows run in-kernel under
+        ``use_fused_decode`` (the fused flash-decode kernel masks each
+        query at ``idx <= pos + s``); the older single-query
+        ``use_paged_kernel`` cannot express a window, so on its own it
+        still forces the page-gather fallback and is rejected."""
         if backend_kind in STATE_KINDS:
             if self.cfg.sliding_window and "attn" in self.cfg.layer_kinds():
                 raise ValueError("speculative decode has no "
                                  "sliding-window mask")
         else:
             check_paged_support(self.cfg)
-        if getattr(self.flags, "use_paged_kernel", False):
+        if (getattr(self.flags, "use_paged_kernel", False)
+                and not getattr(self.flags, "use_fused_decode", False)):
             raise ValueError("speculative decode reads paged K/V through "
                              "the page-gather path; drop use_paged_kernel "
-                             "(the Pallas kernel is single-query only)")
+                             "(the single-query Pallas kernel cannot "
+                             "verify a window — use use_fused_decode)")
         if getattr(self.flags, "model_size", 1) > 1:
             raise ValueError("speculative decode is single-host for now")
 
@@ -286,6 +327,7 @@ class LLMEngine:
         ``block_tables`` ([N, P] int32; inactive rows all-zero).  Returns
         ([N] next tokens, cache); inactive slots yield the pad token."""
         step = self._serve_steps(backend)["decode"]
+        t0 = time.perf_counter()
         args = (self.params,
                 jnp.asarray(last_tokens, jnp.int32)[:, None],
                 cache,
@@ -296,7 +338,9 @@ class LLMEngine:
                                    jnp.asarray(block_tables, jnp.int32))
         else:
             next_tok, cache = step(*args)
-        return np.asarray(next_tok[:, 0]), cache
+        out = np.asarray(next_tok[:, 0])
+        self._observe_kernel("decode", backend, t0)
+        return out, cache
 
     def verify(self, backend, cache, tokens: np.ndarray,
                positions: np.ndarray, active: np.ndarray,
@@ -322,6 +366,7 @@ class LLMEngine:
                 self.model, self.flags, paged=backend.kind == "paged")),
                 "verify", self._layout(backend), str(width))
             self._verify_steps[key] = step
+        t0 = time.perf_counter()
         args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
                 jnp.asarray(positions, jnp.int32),
                 jnp.asarray(active, bool))
@@ -329,7 +374,9 @@ class LLMEngine:
             guess, cache = step(*args, jnp.asarray(block_tables, jnp.int32))
         else:
             guess, cache = step(*args)
-        return np.asarray(guess), cache
+        out = np.asarray(guess)
+        self._observe_kernel("verify", backend, t0)
+        return out, cache
 
     def verify_window(self, backend, cache, tokens: np.ndarray,
                       positions: np.ndarray, active: np.ndarray,
@@ -349,6 +396,7 @@ class LLMEngine:
                 self.model, self.flags, paged=backend.kind == "hybrid")),
                 "verify_stacks", self._layout(backend), str(width))
             self._verify_steps[key] = step
+        t0 = time.perf_counter()
         args = (self.params, jnp.asarray(tokens, jnp.int32), cache,
                 jnp.asarray(positions, jnp.int32),
                 jnp.asarray(active, bool))
@@ -357,7 +405,9 @@ class LLMEngine:
                 *args, jnp.asarray(block_tables, jnp.int32))
         else:
             guess, cache, stacks = step(*args)
-        return np.asarray(guess), cache, stacks
+        out = np.asarray(guess)
+        self._observe_kernel("verify", backend, t0)
+        return out, cache, stacks
 
     def state_rewind(self, cache, stacks, slot: int, idx: int):
         """Commit the state after window position ``idx`` (0-based) of

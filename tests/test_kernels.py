@@ -8,8 +8,10 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.flash_decode import fused_flash_decode_kernel
 from repro.kernels.rmsnorm import rmsnorm_kernel
-from repro.kernels.ref import flash_attention_ref, rmsnorm_ref
+from repro.kernels.ref import (flash_attention_ref,
+                               fused_flash_decode_ref, rmsnorm_ref)
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -79,6 +81,99 @@ class TestFlashAttention:
         ref = flash_attention_ref(q, k, v, causal=False)
         assert out.shape == (2, 17, 4, 64)
         assert np.abs(np.asarray(out) - np.asarray(ref)).max() < 2e-5
+
+
+class TestFusedFlashDecodeBoundaries:
+    """Deterministic page-boundary sweep for the fused flash-decode
+    kernel: every window placement relative to a block edge — first slot
+    of a page, last slot, straddling the edge, and the arena tail — for
+    widths 1..4 and both reduction variants.  The randomized envelope
+    lives in tests/test_kernels_properties.py; the oracle is compared
+    jitted (kernel == jit(oracle), docs/KERNELS.md)."""
+
+    @staticmethod
+    def _inputs(seed, B, Sq, KV, G, hd, bs, P, positions):
+        H = KV * G
+        rng = np.random.RandomState(seed)
+        NB = 1 + B * P
+        q = jnp.asarray(rng.randn(B, Sq, H, hd), jnp.float32)
+        kn = jnp.asarray(rng.randn(B, Sq, KV, hd), jnp.float32)
+        vn = jnp.asarray(rng.randn(B, Sq, KV, hd), jnp.float32)
+        kp = jnp.asarray(rng.randn(NB, bs, KV, hd), jnp.float32)
+        vp = jnp.asarray(rng.randn(NB, bs, KV, hd), jnp.float32)
+        tbl = np.zeros((B, P), np.int32)
+        for b in range(B):
+            n_pages = -(-(positions[b] + Sq) // bs)
+            tbl[b, :n_pages] = 1 + b * P + np.arange(n_pages)
+        return (q, kn, vn, kp, vp, jnp.asarray(tbl),
+                jnp.asarray(positions, jnp.int32))
+
+    @pytest.mark.parametrize("Sq", [1, 2, 4])
+    @pytest.mark.parametrize("split_k", [False, True])
+    def test_boundary_sweep(self, Sq, split_k):
+        bs, P = 8, 4
+        hi = P * bs - Sq
+        jref = jax.jit(fused_flash_decode_ref)
+        # window at page start, page end, straddling, and arena tail
+        cands = sorted({0, bs - Sq, bs - 1, bs, 2 * bs - Sq + 1, hi})
+        for pos0 in cands:
+            if pos0 < 0:
+                continue
+            positions = [pos0, min(hi, pos0 + bs // 2)]
+            q, kn, vn, kp, vp, tbl, pos = self._inputs(
+                Sq * 11 + pos0, 2, Sq, 2, 2, 32, bs, P, positions)
+            out, ko, vo = fused_flash_decode_kernel(
+                q, kn, vn, kp, vp, tbl, pos, split_k=split_k)
+            ref, kr, vr = jref(q, kn, vn, kp, vp, tbl, pos)
+            np.testing.assert_array_equal(np.asarray(ko[1:]),
+                                          np.asarray(kr[1:]))
+            np.testing.assert_array_equal(np.asarray(vo[1:]),
+                                          np.asarray(vr[1:]))
+            if split_k:
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(ref),
+                    atol=2e-5, rtol=2e-5, err_msg=str(pos0))
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(out), np.asarray(ref), err_msg=str(pos0))
+
+    def test_gqa_and_odd_head_dim(self):
+        """GQA/MQA groupings and a non-power-of-two head dim: the
+        in-kernel 1/sqrt(hd) scale must round identically to the
+        oracle's."""
+        jref = jax.jit(fused_flash_decode_ref)
+        for KV, G, hd in [(1, 6, 64), (2, 4, 96), (4, 1, 48)]:
+            q, kn, vn, kp, vp, tbl, pos = self._inputs(
+                KV * G + hd, 2, 3, KV, G, hd, 8, 3, [5, 15])
+            out, ko, vo = fused_flash_decode_kernel(
+                q, kn, vn, kp, vp, tbl, pos)
+            ref, kr, vr = jref(q, kn, vn, kp, vp, tbl, pos)
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(ref))
+            np.testing.assert_array_equal(np.asarray(ko[1:]),
+                                          np.asarray(kr[1:]))
+
+
+class TestFlashQueryOffset:
+    """Suffix (rectangular) flash attention: with a static q_offset and
+    fixed k-block partitioning, suffix rows are bitwise identical to the
+    same rows of a full square-causal call — the chunk-invariance
+    contract that lets chunked prefill route through the flash kernel
+    (docs/KERNELS.md)."""
+
+    @pytest.mark.parametrize("S,window", [(48, 0), (200, 0), (64, 24)])
+    def test_suffix_bitwise_equals_full(self, S, window):
+        ks = jax.random.split(jax.random.PRNGKey(S + window), 3)
+        q = _mk(ks[0], (2, S, 4, 32), jnp.float32)
+        k = _mk(ks[1], (2, S, 2, 32), jnp.float32)
+        v = _mk(ks[2], (2, S, 2, 32), jnp.float32)
+        full = flash_attention_kernel(q, k, v, causal=True, window=window)
+        for pre in (1, S // 3, S // 2, S - 1):
+            suf = flash_attention_kernel(q[:, pre:], k, v, causal=True,
+                                         window=window, q_offset=pre)
+            np.testing.assert_array_equal(
+                np.asarray(full[:, pre:]), np.asarray(suf),
+                err_msg=f"split at {pre}")
 
 
 class TestRMSNorm:

@@ -1,0 +1,148 @@
+"""Hypothesis property tests for the fused flash-decode kernel
+(``kernels.flash_decode``) against its pinned oracle
+(``kernels.ref.fused_flash_decode_ref``).
+
+Fuzzes the whole supported envelope — batch, verify-window width 1+k,
+page count, head layout (MHA / GQA / MQA), head dim, block size, and
+per-row positions biased toward page boundaries — plus the trash-page
+padding contract (trailing table entries redirected to block 0 full of
+garbage must not change a single output bit).
+
+The oracle is compared *jitted*: XLA fuses ``x1*cos - x2*sin`` into an
+FMA under jit and the Pallas interpreter jits the kernel body, so the
+bit-exactness contract is kernel == jit(oracle) (docs/KERNELS.md).  The
+fully-gathered kernel is bit-exact; split-K agrees to f32
+reduction-order tolerance.  The deterministic twin sweep lives in
+tests/test_kernels.py; engine-level fused-path identity in
+tests/test_paged_attention.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_decode import fused_flash_decode_kernel
+from repro.kernels.ref import fused_flash_decode_ref
+
+jitted_ref = jax.jit(fused_flash_decode_ref)
+
+
+def make_fused_inputs(seed, B, Sq, KV, G, hd, bs, P, positions):
+    """Position-ordered tables with trailing trash padding: row ``b``
+    owns blocks ``1 + b*P .. `` for exactly the pages its window
+    touches; everything after is the trash block 0."""
+    H = KV * G
+    rng = np.random.RandomState(seed)
+    NB = 1 + B * P
+    q = jnp.asarray(rng.randn(B, Sq, H, hd), jnp.float32)
+    k_new = jnp.asarray(rng.randn(B, Sq, KV, hd), jnp.float32)
+    v_new = jnp.asarray(rng.randn(B, Sq, KV, hd), jnp.float32)
+    k_pages = jnp.asarray(rng.randn(NB, bs, KV, hd), jnp.float32)
+    v_pages = jnp.asarray(rng.randn(NB, bs, KV, hd), jnp.float32)
+    tbl = np.zeros((B, P), np.int32)
+    for b in range(B):
+        n_pages = -(-(positions[b] + Sq) // bs)
+        tbl[b, :n_pages] = 1 + b * P + np.arange(n_pages)
+    return (q, k_new, v_new, k_pages, v_pages,
+            jnp.asarray(tbl), jnp.asarray(positions, jnp.int32))
+
+
+def boundary_positions(rng_draw, B, Sq, bs, P):
+    """Per-row positions biased to page boundaries: the first/last valid
+    slot of a page, the exact arena tail, or anywhere."""
+    hi = P * bs - Sq
+    cands = sorted({0, hi} | {
+        min(hi, max(0, p * bs + d))
+        for p in range(P) for d in (-Sq, -1, 0, 1)})
+    return [rng_draw(st.sampled_from(cands)) for _ in range(B)]
+
+
+class TestFusedFlashDecodeProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        B=st.integers(1, 3),
+        k=st.integers(0, 4),              # verify window width is 1+k
+        KV=st.sampled_from([1, 2, 4]),
+        G=st.sampled_from([1, 2, 4]),     # 1=MHA, >1=GQA, KV=1&G>1=MQA
+        hd=st.sampled_from([16, 32, 64]),
+        bs=st.sampled_from([4, 8]),
+        P=st.integers(2, 5),
+        split_k=st.booleans(),
+        data=st.data(),
+    )
+    def test_matches_oracle(self, B, k, KV, G, hd, bs, P, split_k, data):
+        Sq = 1 + k
+        positions = boundary_positions(data.draw, B, Sq, bs, P)
+        q, kn, vn, kp, vp, tbl, pos = make_fused_inputs(
+            B * 7 + k + hd, B, Sq, KV, G, hd, bs, P, positions)
+        out, ko, vo = fused_flash_decode_kernel(
+            q, kn, vn, kp, vp, tbl, pos, split_k=split_k)
+        ref, kr, vr = jitted_ref(q, kn, vn, kp, vp, tbl, pos)
+        # arena write-back is staged identically in both variants:
+        # bit-exact outside the trash block 0 (whose content is
+        # unspecified after the call)
+        np.testing.assert_array_equal(np.asarray(ko[1:]),
+                                      np.asarray(kr[1:]))
+        np.testing.assert_array_equal(np.asarray(vo[1:]),
+                                      np.asarray(vr[1:]))
+        if split_k:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=2e-5, rtol=2e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(ref))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        B=st.integers(1, 2),
+        k=st.integers(0, 3),
+        bs=st.sampled_from([4, 8]),
+        P=st.integers(2, 4),
+        split_k=st.booleans(),
+        data=st.data(),
+    )
+    def test_trash_padding_is_content_independent(self, B, k, bs, P,
+                                                  split_k, data):
+        """Rewriting block 0 (the trash block every padding table entry
+        names) with garbage must not change output or live-arena bits:
+        masked positions contribute exact f32 zeros."""
+        Sq = 1 + k
+        positions = boundary_positions(data.draw, B, Sq, bs, P)
+        q, kn, vn, kp, vp, tbl, pos = make_fused_inputs(
+            B + k + bs, B, Sq, 2, 2, 32, bs, P, positions)
+        out, ko, vo = fused_flash_decode_kernel(
+            q, kn, vn, kp, vp, tbl, pos, split_k=split_k)
+        out2, ko2, vo2 = fused_flash_decode_kernel(
+            q, kn, vn, kp.at[0].set(777.0), vp.at[0].set(-777.0),
+            tbl, pos, split_k=split_k)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+        np.testing.assert_array_equal(np.asarray(ko[1:]),
+                                      np.asarray(ko2[1:]))
+        np.testing.assert_array_equal(np.asarray(vo[1:]),
+                                      np.asarray(vo2[1:]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        k=st.integers(0, 3),
+        bs=st.sampled_from([4, 8]),
+        data=st.data(),
+    )
+    def test_splitk_agrees_with_gather(self, k, bs, data):
+        """Split-K is a reduction-order change only: same staged arena
+        bits, outputs within f32 online-softmax tolerance."""
+        B, P, Sq = 2, 4, 1 + k
+        positions = boundary_positions(data.draw, B, Sq, bs, P)
+        q, kn, vn, kp, vp, tbl, pos = make_fused_inputs(
+            k * 3 + bs, B, Sq, 2, 2, 32, bs, P, positions)
+        o_g, k_g, v_g = fused_flash_decode_kernel(
+            q, kn, vn, kp, vp, tbl, pos, split_k=False)
+        o_s, k_s, v_s = fused_flash_decode_kernel(
+            q, kn, vn, kp, vp, tbl, pos, split_k=True)
+        np.testing.assert_array_equal(np.asarray(k_g[1:]),
+                                      np.asarray(k_s[1:]))
+        np.testing.assert_array_equal(np.asarray(v_g[1:]),
+                                      np.asarray(v_s[1:]))
+        np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_s),
+                                   atol=2e-5, rtol=2e-5)
