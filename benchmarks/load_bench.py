@@ -63,8 +63,22 @@ sys.path.insert(0, "src")
 
 import repro.calculators  # noqa: F401,E402
 from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.serving import (AsyncFrontend, GraphServer, LLMEngine,  # noqa: E402
                            Policy)
+
+
+def _forced_device_env(n: int) -> dict:
+    """Environment for a re-exec with ``n`` forced host devices — the
+    XLA flag must be set before the jax backend initializes, which in
+    this (already-initialized) process is too late."""
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
 
 
 def percentile(xs, q):
@@ -275,11 +289,22 @@ def main(argv=None) -> int:
     ap.add_argument("--gate-p95-ttft-ms", type=float, default=None,
                     help="fail unless p95 TTFT at the lowest offered "
                          "QPS is under this bound")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve over an N-way tensor-parallel mesh "
+                         "(docs/SHARDING.md); re-execs with forced host "
+                         "devices when the process has fewer than N")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for the CI smoke job")
     args = ap.parse_args(argv)
+
+    import jax
+    if args.mesh > 1 and jax.device_count() < args.mesh:
+        cmd = [sys.executable, os.path.abspath(__file__)] + \
+            list(sys.argv[1:] if argv is None else argv)
+        return subprocess.run(cmd,
+                              env=_forced_device_env(args.mesh)).returncode
     if args.smoke:
         args.requests = min(args.requests, 6)
         args.max_new_tokens = min(args.max_new_tokens, 8)
@@ -296,7 +321,10 @@ def main(argv=None) -> int:
                               d_model=args.d_model, vocab_size=512)
     max_len = -(-(args.max_new_tokens + 16) // args.block_size) \
         * args.block_size
-    engine = LLMEngine(cfg, max_len=max_len, seed=args.seed)
+    mesh = make_serving_mesh(args.mesh,
+                             devices=jax.devices()[:args.mesh]) \
+        if args.mesh >= 1 else None
+    engine = LLMEngine(cfg, max_len=max_len, seed=args.seed, mesh=mesh)
 
     # warm-up: run the whole workload once untimed so every prefill /
     # decode shape either mode can hit is compiled before measurement
@@ -321,6 +349,7 @@ def main(argv=None) -> int:
             "max_len": max_len, "block_size": args.block_size,
             "speculate_k": args.speculate_k,
             "cancel_frac": args.cancel_frac, "smoke": args.smoke,
+            "mesh": engine.mesh_desc,
         },
         "points": points,
     }

@@ -73,6 +73,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import platform
 import subprocess
 import sys
@@ -92,6 +93,18 @@ from repro.serving import (GraphServer, HybridBackend,  # noqa: E402
 def percentile(xs, q):
     xs = sorted(xs)
     return xs[min(len(xs) - 1, int(len(xs) * q))]
+
+
+def serving_mesh(args):
+    """The ``--mesh N`` tensor-parallel serving mesh, or None when the
+    run is unsharded (docs/SHARDING.md).  ``--mesh 1`` builds a real
+    1-way mesh — same code path as larger meshes, useful as the sharded
+    baseline."""
+    if getattr(args, "mesh", 0) < 1:
+        return None
+    import jax
+    from repro.launch.mesh import make_serving_mesh
+    return make_serving_mesh(args.mesh, devices=jax.devices()[:args.mesh])
 
 
 def provenance(args) -> dict:
@@ -348,7 +361,8 @@ def bench_speculative(args, report):
     cfg = get_config(args.arch).reduced()
     cfg = dataclasses.replace(cfg, num_layers=1, d_model=64, vocab_size=4)
     max_new = 24 if args.smoke else 96
-    engine = LLMEngine(cfg, max_len=max_new + 32, seed=args.seed)
+    engine = LLMEngine(cfg, max_len=max_new + 32, seed=args.seed,
+                       mesh=serving_mesh(args))
     rng = np.random.RandomState(args.seed + 5)
     prompts = [rng.randint(0, 4, size=6 + i % 3).astype(np.int32)
                for i in range(args.requests)]
@@ -551,7 +565,8 @@ def bench_state_hybrid(args, report, which=None):
                                   d_model=args.d_model, vocab_size=512,
                                   block_pattern=("mlstm", "slstm"))
         eng = one_layout(
-            "state", LLMEngine(cfg, max_len=max_len, seed=args.seed),
+            "state", LLMEngine(cfg, max_len=max_len, seed=args.seed,
+                               mesh=serving_mesh(args)),
             backend="state")
 
         # ---- equal-memory capacity: slabs vs paged attention -------
@@ -604,7 +619,8 @@ def bench_state_hybrid(args, report, which=None):
                                   vocab_size=512)
         num_blocks = 1 + args.num_slots * (max_len // bs)
         eng = one_layout(
-            "hybrid", LLMEngine(cfg, max_len=max_len, seed=args.seed),
+            "hybrid", LLMEngine(cfg, max_len=max_len, seed=args.seed,
+                                mesh=serving_mesh(args)),
             backend="hybrid", block_size=bs, num_blocks=num_blocks)
         hb = HybridBackend(eng, num_slots=args.num_slots,
                            num_blocks=num_blocks, block_size=bs)
@@ -823,6 +839,167 @@ def bench_roofline(args, report):
     return exact, speedup >= 1.15, armed
 
 
+def _forced_device_env(n: int) -> dict:
+    """Copy of the environment with XLA forced to ``n`` simulated host
+    devices (any prior forced count replaced) — how the scaling probes
+    and ``--mesh N`` re-exec get a CPU 'pod' (docs/SHARDING.md)."""
+    env = dict(os.environ)
+    keep = [t for t in env.get("XLA_FLAGS", "").split()
+            if not t.startswith("--xla_force_host_platform_device_count")]
+    keep.append(f"--xla_force_host_platform_device_count={n}")
+    env["XLA_FLAGS"] = " ".join(keep)
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def scaling_probe(args) -> int:
+    """Hidden ``--scaling-probe N`` entry point: one mesh-size
+    measurement for the ``scaling`` section, run in a subprocess whose
+    XLA_FLAGS force N host devices.  Serves a FIXED workload (same
+    prompts, seed and greedy decode at every mesh size, so the parent
+    can require bit-identical outputs) through a paged GraphServer on an
+    N-way tensor-parallel mesh, with 2 scheduler slots per rank — the
+    concurrency each rank's share of the arena adds at fixed per-rank
+    memory.  Prints one ``SCALING {json}`` line for the parent."""
+    import jax
+    from repro.launch.mesh import make_serving_mesh, mesh_desc
+    from repro.serving.kvcache.backend import max_request_tokens
+
+    n = int(args.scaling_probe)
+    if jax.device_count() < n:
+        print(f"SCALING-ERROR need {n} devices, "
+              f"have {jax.device_count()}")
+        return 1
+    cfg = get_config(args.arch).reduced()
+    # head counts divisible by every probed mesh size, so the KV arena
+    # shards on the kv_heads axis at tp in {1, 2, 4, 8} and the fused
+    # kernel's GQA groups stay rank-local (models/paging.py)
+    cfg = dataclasses.replace(cfg, num_layers=1, d_model=64, num_heads=4,
+                              num_kv_heads=4, head_dim=16, vocab_size=512)
+    reqs = 8 if args.smoke else 16
+    max_new = 8 if args.smoke else 24
+    repeats = 2 if args.smoke else 5
+    bs, max_len = 8, 48
+    rng = np.random.RandomState(args.seed)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           size=int(rng.choice([6, 10, 14]))
+                           ).astype(np.int32) for _ in range(reqs)]
+    mesh = make_serving_mesh(n, devices=jax.devices()[:n])
+    flags_kw = {}
+    if args.fused:
+        from repro.models.transformer import DEFAULT_FLAGS
+        flags_kw["flags"] = dataclasses.replace(DEFAULT_FLAGS,
+                                                use_fused_decode=True)
+    engine = LLMEngine(cfg, max_len=max_len, seed=args.seed, mesh=mesh,
+                       **flags_kw)
+    slots = min(2 * n, reqs)
+    srv = GraphServer(engine, num_slots=slots, max_new_tokens=max_new,
+                      backend="paged", block_size=bs)
+
+    def run_once():
+        t0 = time.perf_counter()
+        handles = [srv.submit(p) for p in prompts]
+        outs = [[int(t) for t in h.result(timeout=600)] for h in handles]
+        return outs, time.perf_counter() - t0
+
+    run_once()              # compile every batch width, outside timing
+    best, outs = None, None
+    for _ in range(repeats):
+        outs, wall = run_once()
+        best = wall if best is None else min(best, wall)
+    stats = srv.stats()
+    toks = sum(len(o) for o in outs)
+    doc = {
+        "mesh": mesh_desc(mesh),
+        "num_slots": slots,
+        "arena_blocks": srv._num_blocks,
+        "capacity_tokens": max_request_tokens(max_len, srv._num_blocks,
+                                              bs),
+        "max_concurrent": stats["scheduler"]["max_active_slots"],
+        "tok_per_s": round(toks / best, 1),
+        "wall_s": round(best, 4),
+        "outputs": outs,
+    }
+    srv.close()
+    print("SCALING " + json.dumps(doc, sort_keys=True))
+    return 0
+
+
+def bench_scaling(args, report) -> dict:
+    """Tensor-parallel scaling curve (docs/SHARDING.md): re-run one
+    fixed workload at mesh sizes 1/2/4/8 (1/2 in smoke), each in a
+    subprocess whose XLA_FLAGS force that many simulated host devices
+    (the forced count must be set before the jax backend initializes,
+    which is why these cannot run in-process).  Gates:
+
+    * every probe's outputs are bit-identical to the mesh=1 run
+      (always enforced — sharding must not change a single token);
+    * arena blocks and admission concurrency grow with rank count
+      (always enforced — per-rank K/V bytes shrink 1/tp, so a fixed
+      per-rank budget holds tp x blocks);
+    * tok/s increases monotonically over mesh 1 -> 4 (full runs only:
+      smoke shapes are overhead-bound and simulated devices share one
+      CPU's cores, so the smoke job just reports the curve).
+    """
+    sizes = [1, 2] if args.smoke else [1, 2, 4, 8]
+    script = os.path.abspath(__file__)
+    probes = {}
+    for n in sizes:
+        cmd = [sys.executable, script, "--scaling-probe", str(n),
+               "--seed", str(args.seed), "--arch", args.arch]
+        if args.smoke:
+            cmd.append("--smoke")
+        if args.fused:
+            cmd.append("--fused")
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              env=_forced_device_env(n), timeout=600)
+        line = next((ln for ln in proc.stdout.splitlines()
+                     if ln.startswith("SCALING ")), None)
+        if proc.returncode != 0 or line is None:
+            print(f"scaling probe mesh={n} failed "
+                  f"(rc={proc.returncode}):\n{proc.stdout[-2000:]}\n"
+                  f"{proc.stderr[-2000:]}")
+            probes[n] = None
+            continue
+        probes[n] = json.loads(line[len("SCALING "):])
+    ran = [n for n in sizes if probes.get(n) is not None]
+    base = probes.get(1)
+    identical = (base is not None and len(ran) == len(sizes) and all(
+        probes[n]["outputs"] == base["outputs"] for n in ran))
+    blocks = [probes[n]["arena_blocks"] for n in ran]
+    conc = [probes[n]["max_concurrent"] for n in ran]
+    tps = [probes[n]["tok_per_s"] for n in ran]
+    capacity_ok = (len(ran) == len(sizes)
+                   and all(b < a for b, a in zip(blocks, blocks[1:]))
+                   and all(b <= a for b, a in zip(conc, conc[1:])))
+    gate = [probes[n]["tok_per_s"] for n in ran if n <= 4]
+    tps_ok = len(gate) >= 2 and all(b < a for b, a in zip(gate, gate[1:]))
+    report["scaling"] = {
+        "provenance": provenance(args),
+        "sizes": sizes,
+        "probes": {str(n): ({k: v for k, v in probes[n].items()
+                             if k != "outputs"}
+                            if probes[n] is not None else None)
+                   for n in sizes},
+        "outputs_identical_to_mesh1": identical,
+        "tok_per_s": {str(n): probes[n]["tok_per_s"] for n in ran},
+        "arena_blocks": {str(n): probes[n]["arena_blocks"] for n in ran},
+        "max_concurrent": {str(n): probes[n]["max_concurrent"]
+                           for n in ran},
+        "gates": {"identical": identical, "capacity": capacity_ok,
+                  "tok_per_s_monotone": tps_ok,
+                  "tok_per_s_gate_armed": not args.smoke},
+    }
+    for n in ran:
+        p = probes[n]
+        print(f"scaling mesh={n}: {p['tok_per_s']:8.1f} tok/s  "
+              f"blocks={p['arena_blocks']:4d}  "
+              f"concurrent={p['max_concurrent']:2d}  "
+              f"slots={p['num_slots']}")
+    return {"identical": identical, "capacity": capacity_ok,
+            "tps": tps_ok}
+
+
 def jnp_i32(x):
     import jax.numpy as _jnp
     return _jnp.asarray(x, _jnp.int32)
@@ -847,9 +1024,32 @@ def main(argv=None) -> int:
                     help="serve the suite through the fused flash-decode "
                          "kernel (use_fused_decode; the CI kernels-smoke "
                          "entry point is --smoke --fused)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve the whole suite on an N-way tensor-"
+                         "parallel mesh (docs/SHARDING.md); when fewer "
+                         "devices exist the run re-execs itself with "
+                         "XLA_FLAGS forcing N simulated host devices "
+                         "(the CI sharded-smoke entry point is "
+                         "--smoke --mesh 2)")
+    ap.add_argument("--scaling-probe", type=int, default=0,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for the CI smoke job")
     args = ap.parse_args(argv)
+    if args.scaling_probe:
+        return scaling_probe(args)
+    if args.mesh > 1:
+        import jax
+        if jax.device_count() < args.mesh:
+            # XLA_FLAGS must be set before the backend initializes —
+            # too late in this process, so re-exec with the forced count
+            print(f"--mesh {args.mesh} needs {args.mesh} devices, have "
+                  f"{jax.device_count()}; re-running with "
+                  f"--xla_force_host_platform_device_count={args.mesh}")
+            cmd = [sys.executable, os.path.abspath(__file__)] + \
+                list(sys.argv[1:] if argv is None else argv)
+            return subprocess.run(
+                cmd, env=_forced_device_env(args.mesh)).returncode
     if args.smoke:
         args.requests = min(args.requests, 6)
         args.max_new_tokens = min(args.max_new_tokens, 8)
@@ -899,13 +1099,15 @@ def main(argv=None) -> int:
     max_len = -(-(args.max_new_tokens + 72) // args.block_size) \
         * args.block_size
     flags = None
+    mesh = serving_mesh(args)
     if args.fused:
         from repro.models.transformer import DEFAULT_FLAGS
         flags = dataclasses.replace(DEFAULT_FLAGS, use_fused_decode=True)
         engine = LLMEngine(cfg, max_len=max_len, seed=args.seed,
-                           flags=flags)
+                           flags=flags, mesh=mesh)
     else:
-        engine = LLMEngine(cfg, max_len=max_len, seed=args.seed)
+        engine = LLMEngine(cfg, max_len=max_len, seed=args.seed,
+                           mesh=mesh)
     # throughput / shared-prefix runs leave num_blocks unset so
     # GraphServer derives its default paged arena (same memory as the
     # slot cache); the effective size is read back from stats below
@@ -941,7 +1143,7 @@ def main(argv=None) -> int:
             "num_slots": args.num_slots,
             "max_new_tokens": args.max_new_tokens,
             "max_len": max_len, "block_size": args.block_size,
-            "smoke": args.smoke,
+            "smoke": args.smoke, "mesh": engine.mesh_desc,
         },
     }
 
@@ -1006,12 +1208,22 @@ def main(argv=None) -> int:
         admission_ok = bench_admission(engine, args, report)
         spec_exact, spec_fast = bench_speculative(args, report)
         sh = bench_state_hybrid(args, report)
-        roof_exact, roof_fast, roof_armed = bench_roofline(args, report)
+        if args.mesh > 1:
+            # kernel timing under shard_map on simulated host devices
+            # measures scheduling noise, not the roofline — the probes
+            # in the scaling section carry the mesh story instead
+            report["roofline"] = {"skipped": f"--mesh {args.mesh} run"}
+            roof_exact, roof_fast, roof_armed = True, True, False
+        else:
+            roof_exact, roof_fast, roof_armed = \
+                bench_roofline(args, report)
+        scal = bench_scaling(args, report)
     else:
         prefix_ok = capacity_ok = chunked_ok = admission_ok = True
         spec_exact = spec_fast = True
         sh = {"exact": True, "capacity": True, "fast": True}
         roof_exact, roof_fast, roof_armed = True, True, False
+        scal = {"identical": True, "capacity": True, "tps": True}
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -1101,6 +1313,23 @@ def main(argv=None) -> int:
         else:
             print("FAIL: fused flash-decode did not reach 1.15x over "
                   "the pre-fusion kernel path")
+            ok = False
+    if not scal["identical"]:
+        print("FAIL: sharded scaling probe outputs diverged from the "
+              "mesh=1 run")
+        ok = False
+    if not scal["capacity"]:
+        print("FAIL: arena capacity / admission concurrency did not "
+              "grow with mesh size")
+        ok = False
+    if not scal["tps"]:
+        if args.smoke:
+            print("note: smoke scaling probes are overhead-bound on "
+                  "shared CPU cores; tok/s monotonicity gate not "
+                  "enforced")
+        else:
+            print("FAIL: scaling tok/s not monotonically increasing "
+                  "over mesh 1 -> 4")
             ok = False
     return 0 if ok else 1
 

@@ -29,6 +29,42 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def make_serving_mesh(model_parallel: int = 0, *, devices=None):
+    """Tensor-parallel SERVING mesh: a (1, tp) ("data", "model") mesh
+    over the first ``model_parallel`` local devices (0 = all of them).
+
+    Built from an explicit device list rather than ``jax.make_mesh`` so
+    one process can hold meshes of different sizes over device SUBSETS —
+    which is how the sharded-equivalence tests compare mesh=1/2/4 runs
+    inside a single ``--xla_force_host_platform_device_count=4``
+    process (docs/SHARDING.md).  ``devices`` overrides the pool."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    tp = len(devs) if not model_parallel else int(model_parallel)
+    if tp < 1 or tp > len(devs):
+        raise ValueError(f"model_parallel={tp} needs {tp} devices, "
+                         f"have {len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N "
+                         f"to simulate more on CPU)")
+    return Mesh(np.asarray(devs[:tp]).reshape(1, tp), ("data", "model"))
+
+
+def mesh_desc(mesh) -> dict:
+    """JSON-able description of a mesh for observability tags (metric
+    labels, flight-recorder incidents, bench provenance).  ``None``
+    (unsharded) reports the single-device shape."""
+    if mesh is None:
+        return {"devices": 1, "axes": {}}
+    axes = {str(k): int(v) for k, v in mesh.shape.items()}
+    n = 1
+    for v in axes.values():
+        n *= v
+    plats = sorted({d.platform for d in mesh.devices.flat})
+    return {"devices": n, "axes": axes, "platform": ",".join(plats)}
+
+
 def mesh_context(mesh):
     """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
     where it exists (>= 0.5), else the Mesh object itself (0.4.x Meshes are

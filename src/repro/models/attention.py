@@ -237,6 +237,44 @@ def prefill_into_cache(params, cfg: ArchConfig, x: jax.Array,
     return y, {"k": k_c, "v": v_c}
 
 
+def _fused_decode_call(cfg: ArchConfig, flags, q, k, v, k_arena, v_arena,
+                       tables, pos):
+    """Dispatch one fused flash-decode call, single-device or
+    tensor-parallel.
+
+    Under a serving mesh (``flags.decode_mesh``, docs/SHARDING.md) the
+    kernel is shard_mapped over the model axis: every rank runs the
+    SAME kernel on its slice of the query/KV heads against its slice of
+    the arena, with block tables and positions replicated.  Attention
+    is head-parallel, so there is no cross-rank reduction at all — and
+    because ``use_fused_decode`` only fuses when kv heads divide the
+    mesh, each rank's GQA groups are self-contained.  Per-rank math is
+    the single-device kernel's math on a head subset, so tokens stay
+    bit-identical to the unsharded run."""
+    from ..kernels.ops import fused_flash_decode
+    split_k = getattr(flags, "fused_split_k", False) \
+        if flags is not None else False
+    mesh = getattr(flags, "decode_mesh", None) if flags is not None else None
+    shards = getattr(flags, "decode_shards", 1) if flags is not None else 1
+    if mesh is None or shards <= 1:
+        return fused_flash_decode(q, k, v, k_arena, v_arena, tables, pos,
+                                  rope_theta=cfg.rope_theta, split_k=split_k)
+    from jax.sharding import PartitionSpec as P
+    axis = getattr(flags, "model_axis", "model")
+    hspec = P(None, None, axis, None)     # heads / kv_heads on dim 2
+
+    def body(q_l, k_l, v_l, ka_l, va_l, tbl_l, pos_l):
+        return fused_flash_decode(q_l, k_l, v_l, ka_l, va_l, tbl_l, pos_l,
+                                  rope_theta=cfg.rope_theta, split_k=split_k)
+
+    return paging.shard_map_compat(
+        body, mesh,
+        in_specs=(hspec, hspec, hspec, hspec, hspec,
+                  P(None, None), P(None)),
+        out_specs=(hspec, hspec, hspec))(
+            q, k, v, k_arena, v_arena, tables, pos)
+
+
 def _fused_slot_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
                        flags):
     """Contiguous-slot decode through the fused flash-decode kernel.
@@ -251,7 +289,6 @@ def _fused_slot_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
     rotates, scatters the window into the row, and attends with the
     per-query causal mask in one call.
     """
-    from ..kernels.ops import fused_flash_decode
     B, S, KV, hd = cache["k"].shape
     pos = jnp.asarray(cache_pos, jnp.int32)
     if pos.ndim == 0:
@@ -261,10 +298,8 @@ def _fused_slot_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
     tables = paging.slot_arena_tables(B, S, page)
     k_arena = cache["k"].reshape(B * P, page, KV, hd)
     v_arena = cache["v"].reshape(B * P, page, KV, hd)
-    out, k_arena, v_arena = fused_flash_decode(
-        q, k, v, k_arena, v_arena, tables, pos,
-        rope_theta=cfg.rope_theta,
-        split_k=getattr(flags, "fused_split_k", False))
+    out, k_arena, v_arena = _fused_decode_call(
+        cfg, flags, q, k, v, k_arena, v_arena, tables, pos)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, {"k": k_arena.reshape(B, S, KV, hd),
                "v": v_arena.reshape(B, S, KV, hd)}
@@ -292,11 +327,8 @@ def _paged_decode(params, cfg: ArchConfig, q, k, v, cache, cache_pos,
         # q/k/v arrive un-rotated; the kernel rotates at pos..pos+S'-1,
         # scatters k/v into each row's tail block(s) through its aliased
         # arena outputs, and attends query s with `idx <= pos + s`.
-        from ..kernels.ops import fused_flash_decode
-        out, k_new, v_new = fused_flash_decode(
-            q, k, v, cache["k"], cache["v"], block_tables, pos,
-            rope_theta=cfg.rope_theta,
-            split_k=getattr(flags, "fused_split_k", False))
+        out, k_new, v_new = _fused_decode_call(
+            cfg, flags, q, k, v, cache["k"], cache["v"], block_tables, pos)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
         return y, {"k": k_new, "v": v_new}
     if S_q > 1:

@@ -91,11 +91,34 @@ def use_fused_decode(cfg, flags) -> bool:
     Sliding-window layers keep the wraparound slot layout (positions are
     not monotone in the cache, so a position-ordered arena view does not
     exist) and multi-host decode keeps the sharded-gather path.  MLA
-    never reaches here — its latent cache decodes in ``mla.py``."""
+    never reaches here — its latent cache decodes in ``mla.py``.
+
+    Tensor-parallel serving (``flags.decode_shards`` > 1,
+    docs/SHARDING.md): the kernel runs under ``shard_map`` with per-rank
+    K/V head slices, which needs the kv heads to divide the model axis
+    (GQA groups then stay rank-local: heads ``[r*H/m, (r+1)*H/m)`` read
+    exactly kv heads ``[r*KV/m, (r+1)*KV/m)``).  Indivisible head counts
+    fall back to the gather path, which GSPMD partitions on its own."""
+    shards = getattr(flags, "decode_shards", 1) if flags is not None else 1
     return (flags is not None
             and getattr(flags, "use_fused_decode", False)
             and not cfg.sliding_window
-            and getattr(flags, "model_size", 1) == 1)
+            and getattr(flags, "model_size", 1) == 1
+            and (shards == 1 or cfg.num_kv_heads % shards == 0))
+
+
+def shard_map_compat(f, mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: the public API (>= 0.6)
+    with the varying-manual-axes check disabled, else the 0.4.x
+    experimental entry point with ``check_rep`` disabled (the fused
+    decode outputs are genuinely sharded, never replicated)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 def fused_page_size(max_len: int, preferred: int = 8) -> int:

@@ -58,6 +58,15 @@ class RuntimeFlags:
     # that skip pages past the row's length (work ∝ actual context);
     # False = the fully-gathered bit-exact reference configuration.
     fused_split_k: bool = False
+    # Tensor-parallel SERVING (docs/SHARDING.md): set by LLMEngine when
+    # it is built with a device mesh.  ``decode_shards`` is the model
+    # axis size and ``decode_mesh`` the Mesh itself — the fused
+    # flash-decode dispatch shard_maps the kernel over it (per-rank K/V
+    # head slices, replicated block tables).  Distinct from
+    # ``model_size``, the TRAINING sequence-parallel degree: serving
+    # steps stay single-program per rank and never set model_size.
+    decode_shards: int = 1
+    decode_mesh: Any = None
 
 
 DEFAULT_FLAGS = RuntimeFlags()

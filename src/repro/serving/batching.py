@@ -825,6 +825,7 @@ class Scheduler:
             "free": sorted(self.free),
             "positions": [int(p) for p in self.positions],
             "stats": dict(self.stats),
+            "mesh": self.engine.mesh_desc,
         }
 
     def _evict(self, req: Request) -> None:

@@ -212,6 +212,9 @@ class ContinuousBatchCalculator(Calculator):
         # and pays for nothing (serving/observe.py).
         self.observer = NULL_OBSERVER if trace_mod.COMPILED_OUT else \
             Observer(tracer=ctx.tracer, node_id=ctx.node_index)
+        # Tag metrics with the serving-mesh shape (docs/SHARDING.md);
+        # set_mesh is a no-op on the shared NULL_OBSERVER singleton.
+        self.observer.set_mesh(ctx.side("engine").mesh_desc)
         self.sched = Scheduler(
             backend,
             max_new_tokens=int(opts.get("max_new_tokens", 16)),

@@ -52,13 +52,33 @@ STATE_KINDS = ("state", "hybrid")
 class LLMEngine:
     def __init__(self, cfg: ArchConfig, params=None, *,
                  max_len: int = 512, seed: int = 0,
-                 flags: RuntimeFlags = DEFAULT_FLAGS):
+                 flags: RuntimeFlags = DEFAULT_FLAGS,
+                 mesh=None):
         self.cfg = cfg
         self.model = Model(cfg)
         self.max_len = max_len
+        # Tensor-parallel serving (docs/SHARDING.md): with a device mesh
+        # the params are placed per sharding/rules.py::param_specs and
+        # every backend's cache arena is allocated with
+        # sharding/rules.py::cache_specs shardings (new_cache); jitted
+        # serving steps then run SPMD-partitioned — GSPMD for the gather
+        # paths, shard_map for the fused flash-decode kernel
+        # (flags.decode_mesh).  Greedy tokens stay bit-identical to the
+        # unsharded engine: head/expert parallelism never reorders any
+        # per-token reduction.
+        self.mesh = mesh
+        self.tp = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+        if self.tp > 1:
+            import dataclasses
+            flags = dataclasses.replace(flags, decode_shards=self.tp,
+                                        decode_mesh=mesh)
         self.flags = flags
         if params is None:
             params = self.model.init(jax.random.PRNGKey(seed))
+        if mesh is not None:
+            from ..sharding.rules import param_specs
+            params = jax.device_put(
+                params, param_specs(self.model.template, mesh))
         self.params = params
         # Engine-side profiling registry (docs/OBSERVABILITY.md): jit
         # compile counts + compile wall time per (step, layout, width)
@@ -298,8 +318,51 @@ class LLMEngine:
         else:
             abstract = self.model.abstract_cache(backend.num_slots,
                                                  self.max_len)
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            abstract)
+        if self.mesh is None:
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                abstract)
+        # mesh-sharded arena: every leaf is allocated WITH its sharding
+        # (sharding/rules.py::cache_specs — kv_heads across the model
+        # axis for attention K/V, the recurrent-slab axes for state
+        # leaves), so per-rank HBM holds 1/tp of each block from the
+        # first byte.  Jitted steps preserve these shardings (GSPMD
+        # propagates them through the scatter/gather; the leak fixture
+        # in tests/conftest.py asserts no silent replication drift).
+        from ..sharding.rules import cache_specs
+        specs = cache_specs(abstract, self.mesh)
+        return jax.tree.map(
+            lambda s, sh: jax.device_put(jnp.zeros(s.shape, s.dtype), sh),
+            abstract, specs)
+
+    @property
+    def mesh_desc(self) -> Dict[str, Any]:
+        """JSON-able mesh shape for observability tags (metrics,
+        flight-recorder incidents, scheduler debug_state)."""
+        from ..launch.mesh import mesh_desc
+        return mesh_desc(self.mesh)
+
+    def cache_shards(self) -> int:
+        """Factor by which ONE cache block's per-rank bytes shrink under
+        the serving mesh — i.e. how many times more blocks the same
+        per-rank HBM holds.  GraphServer scales its default paged-arena
+        size by this (capacity reflects per-rank HBM × ranks, not a
+        single chip — docs/SHARDING.md).  Attention K/V shards on
+        kv_heads (or head_dim when kv heads don't divide); MLA's latent
+        cache on its lora rank; a stack with no attention arena (pure
+        recurrent) reports 1 — its O(1) slabs are not the capacity
+        bound."""
+        if self.mesh is None or self.tp <= 1:
+            return 1
+        cfg = self.cfg
+        if "attn" not in cfg.layer_kinds():
+            return 1
+        if getattr(cfg, "use_mla", False):
+            rank = getattr(cfg, "kv_lora_rank", 0) or 0
+            return self.tp if rank % self.tp == 0 else 1
+        if (cfg.num_kv_heads % self.tp == 0
+                or cfg.head_dim % self.tp == 0):
+            return self.tp
+        return 1
 
     def insert(self, backend, cache, rows, row: int, dst):
         """Land prefilled cache row ``row`` of ``rows`` in the cache.

@@ -255,6 +255,14 @@ class AsyncFrontend:
         merged registries (see :meth:`GraphServer.metrics`)."""
         return self.server.metrics()
 
+    @property
+    def mesh_desc(self) -> Dict[str, Any]:
+        """Serving-mesh shape of the underlying engine — the frontend
+        adds nothing mesh-specific: sharding lives entirely below the
+        GraphServer seam (docs/SHARDING.md), so async streaming,
+        cancellation and SLO policies work unchanged on a mesh."""
+        return self.server.engine.mesh_desc
+
     async def cancel(self, request_id: Any) -> bool:
         """Cancel a request by id (see :meth:`GraphServer.cancel`)."""
         return self.server.cancel(request_id)

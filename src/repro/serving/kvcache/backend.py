@@ -43,7 +43,13 @@ from .prefix import ROOT, PrefixIndex
 def max_request_tokens(max_len: int, num_blocks: int = 0,
                        block_size: int = 0) -> int:
     """Largest prompt + max_new_tokens a backend can ever serve.  Shared
-    with GraphServer so client-side validation matches scheduler-side."""
+    with GraphServer so client-side validation matches scheduler-side.
+    ``num_blocks`` is the MESH-WIDE arena size: under a serving mesh the
+    arena's leaves are sharded across TP ranks, so each block costs
+    1/tp of its bytes per rank and the pool is correspondingly larger
+    (GraphServer scales its default by ``LLMEngine.cache_shards`` —
+    docs/SHARDING.md); the capacity this reports is what the whole mesh
+    serves, not one chip."""
     if num_blocks:
         return min(int(max_len), (int(num_blocks) - 1) * int(block_size))
     return int(max_len)
@@ -87,10 +93,29 @@ class CacheBackend:
 
     # -- capacity / admission -------------------------------------------
     def max_request_tokens(self) -> int:
+        """Largest prompt + max_new_tokens this backend serves.  Under a
+        serving mesh this is MESH-WIDE capacity (the arena is sharded
+        across TP ranks — docs/SHARDING.md), matching the module-level
+        :func:`max_request_tokens` contract."""
         raise NotImplementedError
 
     def capacity_desc(self) -> str:
         raise NotImplementedError
+
+    def mesh_desc(self) -> Dict[str, Any]:
+        """Serving-mesh shape this backend's arena is sharded over
+        (``{"devices": 1, "axes": {}}`` when unsharded)."""
+        return self.engine.mesh_desc
+
+    def _mesh_suffix(self) -> str:
+        """Human-readable mesh annotation for capacity descriptions —
+        empty when unsharded so single-device error text is unchanged."""
+        desc = self.mesh_desc()
+        tp = int(desc.get("axes", {}).get("model", 1))
+        if tp <= 1:
+            return ""
+        return (f", mesh-wide over {tp} model-parallel ranks "
+                f"({desc.get('devices', tp)} devices)")
 
     def can_admit(self, req, seq: np.ndarray,
                   chunk: Optional[int]) -> bool:
@@ -202,7 +227,8 @@ class SlotBackend(CacheBackend):
         return self.engine.max_len
 
     def capacity_desc(self) -> str:
-        return f"engine max_len ({self.engine.max_len})"
+        return f"engine max_len ({self.engine.max_len})" \
+            + self._mesh_suffix()
 
     def prefill_group(self, reqs: List) -> np.ndarray:
         """The batch is padded to a power-of-two width with duplicates of
@@ -309,7 +335,7 @@ class PagedBackend(CacheBackend):
         return (f"paged-arena capacity ({self.max_request_tokens()} tokens"
                 f" = min of engine max_len {self.engine.max_len} and "
                 f"{self.num_blocks - 1} usable blocks x "
-                f"{self.block_size})")
+                f"{self.block_size})") + self._mesh_suffix()
 
     def _worst_case_pages(self, req) -> int:
         return -(-(req.prompt.size + req.max_new_tokens)

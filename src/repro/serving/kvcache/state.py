@@ -84,7 +84,7 @@ class StateBackend(SlotBackend):
 
     def capacity_desc(self) -> str:
         return (f"engine max_len ({self.engine.max_len}); O(1) state "
-                f"slabs impose no per-token bound")
+                f"slabs impose no per-token bound") + self._mesh_suffix()
 
     def acquire(self, req, seq) -> None:
         super().acquire(req, seq)
@@ -170,7 +170,8 @@ class HybridBackend(PagedBackend):
         return (f"hybrid capacity ({self.max_request_tokens()} tokens = "
                 f"min of engine max_len {self.engine.max_len} and "
                 f"{self.num_blocks - 1} usable blocks x {self.block_size}"
-                f" for the attention layers; state slabs are O(1))")
+                f" for the attention layers; state slabs are O(1))"
+                ) + self._mesh_suffix()
 
     def acquire(self, req, seq) -> None:
         super().acquire(req, seq)

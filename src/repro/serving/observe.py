@@ -106,6 +106,25 @@ class Observer:
             "serve.cache_pressure", "CachePressure events during ingest")
         self._g_waiting = reg.gauge(
             "serve.waiting", "requests queued for admission")
+        self._g_mesh_devices = reg.gauge(
+            "serve.mesh_devices", "devices in the serving mesh (1 when "
+            "unsharded)")
+        self._g_mesh_model = reg.gauge(
+            "serve.mesh_model", "tensor-parallel (model-axis) size of "
+            "the serving mesh")
+        self.mesh: Dict[str, Any] = {"devices": 1, "axes": {}}
+        self._g_mesh_devices.set(1)
+        self._g_mesh_model.set(1)
+
+    def set_mesh(self, desc: Dict[str, Any]) -> None:
+        """Tag this observer's metrics with the serving-mesh shape
+        (docs/SHARDING.md).  Called once by the engine calculator after
+        it learns the engine's mesh — every later metrics snapshot and
+        flight-recorder incident carries the shape, so a postmortem from
+        a tp=4 run is distinguishable from a single-chip one."""
+        self.mesh = dict(desc)
+        self._g_mesh_devices.set(int(desc.get("devices", 1)))
+        self._g_mesh_model.set(int(desc.get("axes", {}).get("model", 1)))
 
     # -- span primitive ---------------------------------------------------
     def span(self, phase: str, rid: Any, seq: int = 0, value: int = 0) -> None:
@@ -195,6 +214,10 @@ class _NullObserver(Observer):
         self.node_id = -1
         self.recorder = None
         self.now = time.perf_counter
+        self.mesh = {"devices": 1, "axes": {}}
+
+    def set_mesh(self, *a, **k):
+        pass
 
     def span(self, *a, **k):
         pass
@@ -417,11 +440,16 @@ class FlightRecorder:
 
     def __init__(self, out_dir: str, *, last_n: int = 512,
                  max_dumps: int = 8, min_interval_s: float = 1.0,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 mesh: Optional[Dict[str, Any]] = None):
         self.out_dir = out_dir
         self.last_n = int(last_n)
         self.max_dumps = int(max_dumps)
         self.min_interval_s = float(min_interval_s)
+        # serving-mesh shape (docs/SHARDING.md) — stamped into every
+        # incident so multi-device postmortems identify their topology
+        self.mesh = dict(mesh) if mesh is not None else \
+            {"devices": 1, "axes": {}}
         self._dumps = 0
         self._last_by_trigger: Dict[str, float] = {}
         self._events_fn: Callable[[], list] = list
@@ -469,6 +497,7 @@ class FlightRecorder:
                 "detail": detail,
                 "seq": seq,
                 "wall_time": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+                "mesh": self.mesh,
                 "provenance": self._provenance,
                 "events": events,
                 "metrics": self._metrics_fn(),

@@ -202,8 +202,13 @@ class GraphServer:
         if self._paged:
             if num_blocks <= 0:
                 # arena sized to num_slots worst-case rows by default —
-                # the same memory the slot cache would have used
-                num_blocks = 1 + num_slots * (engine.max_len // block_size)
+                # the same memory the slot cache would have used.  Under
+                # a serving mesh the arena's K/V leaves are sharded
+                # across TP ranks, so at fixed PER-RANK memory the pool
+                # holds cache_shards() times as many blocks: capacity
+                # scales with the mesh (docs/SHARDING.md)
+                num_blocks = 1 + engine.cache_shards() * num_slots * \
+                    (engine.max_len // block_size)
             if max_in_flight <= 0:
                 # The limiter bounds scheduling burst; REAL memory
                 # admission is the paged backend's block-availability
@@ -260,7 +265,8 @@ class GraphServer:
             obs = getattr(self._engine_calc, "observer", None)
             rec = FlightRecorder(
                 observe_dir, max_dumps=flight_max_dumps,
-                registry=obs.registry if obs is not None else None)
+                registry=obs.registry if obs is not None else None,
+                mesh=engine.mesh_desc)
             rec.bind(events_fn=self.graph.tracer.events,
                      metrics_fn=self.metrics,
                      state_fn=self._engine_calc.sched.debug_state)

@@ -7,7 +7,11 @@ asserts, at server close, that the cache arena returned to baseline:
 * (paged) zero blocks in use, zero reserved, pool invariants hold,
 * (paged, prefix sharing) the prefix index holds zero registered chains,
 * (state/hybrid) zero state slabs held — recurrent-state occupancy is
-  back to baseline.
+  back to baseline,
+* (mesh-placed engines) the drained arena still spans EVERY rank of the
+  serving mesh: pool/slab counters are mesh-wide (one logical arena,
+  replicated block tables — docs/SHARDING.md), so they certify per-rank
+  drain only while each cache leaf's NamedSharding covers all devices.
 
 The check is autouse via a ``GraphServer.close`` wrapper — no test has
 to opt in, so every current and future server test (continuous
@@ -16,6 +20,35 @@ no-leak property for free, including every cancellation / deadline /
 preemption path it happens to exercise.
 """
 import pytest
+
+
+def _rank_coverage_leaks(sched):
+    """Per-rank drain on mesh-placed engines: every arena leaf must
+    still carry a NamedSharding spanning the full serving mesh — the
+    block/slab counters above are mesh-wide, so a leaf that silently
+    collapsed onto a subset of ranks would let a per-rank leak hide."""
+    engine = getattr(sched.backend, "engine", None)
+    mesh = getattr(engine, "mesh", None)
+    cache = getattr(sched.backend, "cache", None)
+    if mesh is None or cache is None:
+        return []
+    import numpy as np
+
+    import jax
+    from jax.sharding import NamedSharding
+
+    want = set(np.asarray(mesh.devices).flat)
+    leaks = []
+    for i, leaf in enumerate(jax.tree.leaves(cache)):
+        sharding = getattr(leaf, "sharding", None)
+        if not isinstance(sharding, NamedSharding):
+            leaks.append(f"arena leaf {i} lost its mesh placement "
+                         f"after close: {sharding!r}")
+        elif set(sharding.device_set) != want:
+            leaks.append(f"arena leaf {i} covers only "
+                         f"{len(sharding.device_set)} of {len(want)} "
+                         f"mesh ranks after close")
+    return leaks
 
 
 @pytest.fixture(autouse=True)
@@ -58,6 +91,7 @@ def graphserver_leak_check(monkeypatch):
             if slabs:
                 leaks.append(f"{slabs} state slabs still held "
                              f"after close")
+            leaks.extend(_rank_coverage_leaks(sched))
         return stats
 
     monkeypatch.setattr(GraphServer, "close", checked_close)

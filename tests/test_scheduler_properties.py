@@ -8,6 +8,13 @@ preemption with zero blocks — and zero state slabs — leaked at the end.
 A deterministic (hypothesis-free) sweep of the same property lives in
 test_continuous_batching.py so tier-1 always covers it; this file is the
 exhaustive version, importorskip-guarded like the allocator properties.
+
+Each schedule also draws a MESH SIZE: the same random workload runs on
+an unsharded engine or a tensor-parallel mesh-placed one (as many sizes
+as the process's device count admits — the sharded-smoke CI job forces
+extra host devices), and the outputs must still match the unsharded
+sequential-greedy reference while the drained arena keeps spanning
+every rank (docs/SHARDING.md).
 """
 import dataclasses
 
@@ -17,12 +24,24 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+import jax
+from jax.sharding import NamedSharding
+
 import repro.calculators  # noqa: F401
 from repro.configs import get_config
+from repro.launch.mesh import make_serving_mesh
 from repro.serving import (HybridBackend, LLMEngine, PagedBackend,
                            Scheduler, SlotBackend, StateBackend)
 
 MAX_LEN = 32
+
+# Mesh sizes the fuzz can visit: 0 = unsharded, plus every
+# tensor-parallel size the process's device count admits.  Tier-1 CI
+# has one CPU device (0 and 1); the sharded-smoke job forces more via
+# XLA_FLAGS=--xla_force_host_platform_device_count, and the strategy
+# widens automatically (docs/SHARDING.md).
+MESH_SIZES = (0,) + tuple(n for n in (1, 2, 4)
+                          if n <= jax.device_count())
 
 
 def tiny_cfg():
@@ -45,19 +64,41 @@ def tiny_mixed_cfg():
 
 @pytest.fixture(scope="module")
 def engines():
-    """Engine per backend kind (built lazily: hypothesis decides which
-    kinds a run actually visits)."""
+    """Engine per (backend kind, mesh size) — built lazily: hypothesis
+    decides which combinations a run actually visits.  ``tp=0`` is the
+    unsharded engine; ``tp>=1`` places params and arenas on an N-way
+    serving mesh over the first N devices."""
     cache = {}
     cfgs = {"slot": tiny_cfg, "paged": tiny_cfg,
             "state": tiny_recurrent_cfg, "hybrid": tiny_mixed_cfg}
 
-    def get(kind):
-        if kind not in cache:
-            cache[kind] = LLMEngine(cfgs[kind](), max_len=MAX_LEN, seed=11)
-        return cache[kind]
-    get("paged")
-    cache["slot"] = cache["paged"]
+    def get(kind, tp=0):
+        # slot and paged share a config, hence an engine
+        key = ("slot" if kind == "paged" else kind, tp)
+        if key not in cache:
+            mesh = make_serving_mesh(tp, devices=jax.devices()[:tp]) \
+                if tp else None
+            cache[key] = LLMEngine(cfgs[kind](), max_len=MAX_LEN,
+                                   seed=11, mesh=mesh)
+        return cache[key]
     return get
+
+
+def assert_arena_spans_mesh(sched, engine):
+    """Per-rank drain: on a mesh-placed engine the drained arena must
+    still live as NamedShardings spanning EVERY rank of the serving
+    mesh — the pool/slab counters above are mesh-wide (one logical
+    arena, replicated block tables), so they prove per-rank drain only
+    while the leaves actually cover all ranks."""
+    if engine.mesh is None or getattr(sched.backend, "cache", None) is None:
+        return
+    want = set(np.asarray(engine.mesh.devices).flat)
+    for leaf in jax.tree.leaves(sched.backend.cache):
+        sharding = getattr(leaf, "sharding", None)
+        assert isinstance(sharding, NamedSharding), \
+            f"arena leaf lost its mesh placement: {sharding!r}"
+        assert set(sharding.device_set) == want, \
+            f"arena leaf covers {sharding.device_set}, mesh has {want}"
 
 
 _ref_cache = {}
@@ -85,6 +126,7 @@ def build_backend(engine, kind, num_slots, num_blocks):
 
 schedule = st.fixed_dictionaries({
     "kind": st.sampled_from(["slot", "paged", "state", "hybrid"]),
+    "mesh": st.sampled_from(MESH_SIZES),
     "num_slots": st.integers(2, 4),
     "num_blocks": st.integers(8, 20),
     "max_new": st.integers(2, 6),
@@ -101,7 +143,8 @@ schedule = st.fixed_dictionaries({
 @settings(max_examples=25, deadline=None)
 @given(schedule)
 def test_random_schedules_bit_identical(engines, sched_def):
-    engine = engines(sched_def["kind"])
+    engine = engines(sched_def["kind"], sched_def["mesh"])
+    ref_engine = engines(sched_def["kind"])       # unsharded baseline
     max_new = sched_def["max_new"]
     entries = [(L, prio, seed) for L, prio, seed in sched_def["prompts"]
                if L + max_new <= MAX_LEN]
@@ -123,7 +166,7 @@ def test_random_schedules_bit_identical(engines, sched_def):
         prios = [prios[i] for i in keep]
         if not prompts:
             return
-    refs = [reference(engine, p, max_new) for p in prompts]
+    refs = [reference(ref_engine, p, max_new) for p in prompts]
     sched = Scheduler(backend, max_new_tokens=max_new,
                       chunk_size=sched_def["chunk"])
     got = {}
@@ -168,6 +211,7 @@ def test_random_schedules_bit_identical(engines, sched_def):
         assert len(sched.prefix) == 0
     assert getattr(sched.backend, "slabs_in_use", 0) == 0
     assert sorted(sched.free) == list(range(sched.num_slots))
+    assert_arena_spans_mesh(sched, engine)
 
 
 # -- the deadline dimension -------------------------------------------
@@ -178,6 +222,7 @@ def test_random_schedules_bit_identical(engines, sched_def):
 
 deadline_schedule = st.fixed_dictionaries({
     "kind": st.sampled_from(["slot", "paged", "state", "hybrid"]),
+    "mesh": st.sampled_from(MESH_SIZES),
     "num_slots": st.integers(1, 3),
     "num_blocks": st.integers(8, 20),
     "max_new": st.integers(2, 5),
@@ -195,7 +240,8 @@ deadline_schedule = st.fixed_dictionaries({
 @settings(max_examples=25, deadline=None)
 @given(deadline_schedule)
 def test_deadline_schedules_exact_and_leak_free(engines, sched_def):
-    engine = engines(sched_def["kind"])
+    engine = engines(sched_def["kind"], sched_def["mesh"])
+    ref_engine = engines(sched_def["kind"])       # unsharded baseline
     max_new = sched_def["max_new"]
     backend = build_backend(engine, sched_def["kind"],
                             sched_def["num_slots"],
@@ -207,7 +253,7 @@ def test_deadline_schedules_exact_and_leak_free(engines, sched_def):
         return
     prompts = [np.random.RandomState(seed).randint(0, 256, size=L)
                .astype(np.int32) for L, _, _, _, seed in entries]
-    refs = [reference(engine, p, max_new) for p in prompts]
+    refs = [reference(ref_engine, p, max_new) for p in prompts]
 
     t = [0.0]
     sched = Scheduler(backend, max_new_tokens=max_new,
@@ -263,3 +309,4 @@ def test_deadline_schedules_exact_and_leak_free(engines, sched_def):
         assert len(sched.prefix) == 0
     assert getattr(sched.backend, "slabs_in_use", 0) == 0
     assert sorted(sched.free) == list(range(sched.num_slots))
+    assert_arena_spans_mesh(sched, engine)

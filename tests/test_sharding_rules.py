@@ -1,15 +1,22 @@
 """Sharding-rule resolution: divisibility fallbacks, axis-claim conflicts,
 cache spec selection — pure logic, no devices needed (specs are built
-against a mesh but never materialized)."""
+against a mesh but never materialized).  The TestServedModels classes
+additionally apply the rule sets to real served-model templates and a
+real (1-device) serving mesh — the seam LLMEngine(mesh=...) uses
+(docs/SHARDING.md)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.models import Model
-from repro.sharding.rules import resolve_spec, _kv_cache_axes
+from repro.sharding.rules import (RULES, cache_specs, param_specs,
+                                  resolve_spec, _kv_cache_axes,
+                                  _spec_tree_from_template)
 
 
 class FakeMesh:
@@ -104,3 +111,132 @@ def test_param_specs_cover_every_leaf(arch):
             vol_model += int(np.prod(l.shape))
     assert vol_model / vol_total > 0.5, f"{arch}: only " \
         f"{vol_model/vol_total:.0%} of params model-sharded"
+
+
+# ---------------------------------------------------------------------------
+# served models: the rule set actually applies to what LLMEngine serves
+# ---------------------------------------------------------------------------
+
+# one representative per served-model family
+SERVED = {"attention": "minicpm_2b", "mla": "deepseek_v3_671b",
+          "moe": "granite_moe_3b_a800m", "jamba": "jamba_1_5_large_398b"}
+
+
+class TestServedParamSpecs:
+    """Applying param_specs' rule set to served model templates at
+    serving-mesh sizes: every leaf resolves, and no weight whose
+    sharded-axis dimension divides the mesh ends up fully replicated."""
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    @pytest.mark.parametrize("arch", sorted(SERVED.values()))
+    def test_every_leaf_sharded_when_divisible(self, arch, tp):
+        from repro.models.params import ParamSpec
+        mesh = FakeMesh({"data": 1, "model": tp})
+        model = Model(get_config(arch))
+        is_spec = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+        tmpl = jax.tree.leaves(model.template, is_leaf=is_spec)
+        specs = jax.tree.leaves(
+            _spec_tree_from_template(model.template, mesh),
+            is_leaf=lambda x: isinstance(x, P))
+        assert len(specs) == len(tmpl)      # every leaf got a sharding
+        for t, s in zip(tmpl, specs):
+            flat = [a for part in s if part is not None
+                    for a in ((part,) if isinstance(part, str) else part)]
+            wants_model = any(
+                RULES.get(ax) == "model" and dim % tp == 0
+                for dim, ax in zip(t.shape, t.axes))
+            if wants_model:
+                # a weight with a model-ruled, divisible dimension must
+                # not silently replicate across the whole mesh
+                assert "model" in flat, (arch, t.axes, t.shape, s)
+
+    @pytest.mark.parametrize("arch", sorted(SERVED.values()))
+    def test_model_volume_dominates_at_tp2(self, arch):
+        from repro.models.params import ParamSpec
+        mesh = FakeMesh({"data": 1, "model": 2})
+        model = Model(get_config(arch))
+        leaves = jax.tree.leaves(model.template,
+                                 is_leaf=lambda x: isinstance(x, ParamSpec))
+        vol_total = vol_model = 0
+        for leaf in leaves:
+            s = resolve_spec(leaf.shape, leaf.axes, mesh)
+            flat = [a for part in s if part is not None
+                    for a in ((part,) if isinstance(part, str) else part)]
+            vol = int(np.prod(leaf.shape))
+            vol_total += vol
+            if "model" in flat:
+                vol_model += vol
+        assert vol_model / vol_total > 0.5, \
+            f"{arch}: only {vol_model/vol_total:.0%} model-sharded at tp=2"
+
+
+class TestServedMeshPlacement:
+    """Real-mesh integration (1 device — the size tier-1 CI has): engine
+    construction with a mesh places params AND caches with NamedShardings
+    derived from the rule set, for every served cache layout."""
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.engine import LLMEngine
+        cfg = dataclasses.replace(
+            get_config("minicpm_2b").reduced(), num_layers=1, d_model=64,
+            num_heads=4, num_kv_heads=2, head_dim=16, vocab_size=128)
+        return LLMEngine(cfg, max_len=16, seed=0,
+                         mesh=make_serving_mesh(1))
+
+    def test_params_placed_with_named_shardings(self, engine):
+        leaves = jax.tree.leaves(engine.params)
+        assert leaves
+        for leaf in leaves:
+            assert isinstance(leaf.sharding, NamedSharding)
+            assert leaf.sharding.mesh.shape.get("model") == 1
+
+    @pytest.mark.parametrize("kind", ["slot", "paged"])
+    def test_cache_leaves_placed_and_kv_sharded(self, engine, kind):
+        from repro.serving.kvcache.backend import (PagedBackend,
+                                                   SlotBackend)
+        if kind == "slot":
+            backend = SlotBackend(engine, num_slots=2)
+        else:
+            backend = PagedBackend(engine, num_slots=2, num_blocks=5,
+                                   block_size=8)
+        backend.bind({})
+        leaves = jax.tree.leaves(backend.cache)
+        assert leaves
+        for leaf in leaves:
+            assert isinstance(leaf.sharding, NamedSharding)
+
+    def test_kv_cache_spec_prefers_kv_heads(self, engine):
+        # the arena's K/V leaves carry the _kv_cache_axes choice — at a
+        # divisible mesh size the kv_heads dimension takes "model"
+        abstract = {"blocks": {"k": jax.ShapeDtypeStruct(
+            (1, 5, 8, 4, 16), np.float32)}}
+        specs = cache_specs(abstract, engine.mesh)
+        spec = specs["blocks"]["k"].spec
+        flat = [a for part in spec if part is not None
+                for a in ((part,) if isinstance(part, str) else part)]
+        assert "model" in flat, spec
+
+    @pytest.mark.parametrize("arch,backend_kind",
+                             [("xlstm_1_3b", "state"),
+                              ("jamba_1_5_large_398b", "hybrid")])
+    def test_recurrent_arenas_place_on_mesh(self, arch, backend_kind):
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.engine import LLMEngine
+        from repro.serving.kvcache.state import (HybridBackend,
+                                                 StateBackend)
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  d_model=64, vocab_size=128)
+        eng = LLMEngine(cfg, max_len=16, seed=0,
+                        mesh=make_serving_mesh(1))
+        if backend_kind == "state":
+            backend = StateBackend(eng, num_slots=2)
+        else:
+            backend = HybridBackend(eng, num_slots=2, num_blocks=5,
+                                    block_size=8)
+        backend.bind({})
+        leaves = jax.tree.leaves(backend.cache)
+        assert leaves
+        for leaf in leaves:
+            assert isinstance(leaf.sharding, NamedSharding)
